@@ -1,0 +1,63 @@
+//! Bench: distributed-execution simulation — Table 1 (TC vs runtime) and
+//! Tables 13–17 (§5.4) at bench scale, plus raw simulator throughput.
+//!
+//!     cargo bench --bench distributed_sim
+//!
+//! Paper shape to check: WindGP lowest simulated time on every workload;
+//! PageRank speedups exceed SSSP speedups; hetero baselines each lose on
+//! the axis they ignore.
+
+use windgp::coordinator::{run_job, Job, Workload};
+use windgp::experiments::{self, ExpCtx};
+use windgp::partition::Partitioner;
+use windgp::util::bench::{bench, throughput};
+use windgp::windgp::WindGP;
+
+fn main() {
+    let shrink: u32 = std::env::var("BENCH_SHRINK")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let ctx = ExpCtx::new(1, shrink);
+
+    println!("== simulator throughput (edges processed per second) ==");
+    let g = ctx.graph("lj-s");
+    let cluster = ctx.nine_machine_for("lj-s", &g);
+    let wind = WindGP::default();
+    let ep = wind.partition(&g, &cluster, 1);
+    let sg = windgp::simulator::SimGraph::build(&g, &cluster, &ep);
+    let mut be = windgp::simulator::ell::PureBackend;
+    let iters = 5;
+    let s = bench("pagerank 5 supersteps (pure)", 3, || {
+        let _ = windgp::simulator::algorithms::pagerank(&sg, iters, &mut be);
+    });
+    println!(
+        "  -> {:.1}M edge-ops/s\n",
+        throughput(g.num_edges() * iters, s.mean) / 1e6
+    );
+
+    for id in ["table1", "table13", "table14", "table15", "table16", "table17"] {
+        let mut out = String::new();
+        bench(&format!("experiment/{id} (shrink {shrink})"), 1, || {
+            out = experiments::run(id, &ctx).unwrap();
+        });
+        println!("{out}");
+    }
+
+    println!("== end-to-end job pipeline (partition + 3 workloads) ==");
+    let job = Job {
+        g: &g,
+        cluster: &cluster,
+        partitioner: &wind,
+        seed: 1,
+        workloads: vec![
+            Workload::PageRank { iters: 5 },
+            Workload::Sssp { source: 0 },
+            Workload::Triangle,
+        ],
+    };
+    bench("run_job windgp lj-s", 2, || {
+        let rep = run_job(&job, None);
+        assert!(rep.cost.all_feasible());
+    });
+}

@@ -1,0 +1,108 @@
+//! Bench: hot-path micro-benchmarks for the §Perf optimization loop.
+//!
+//!     cargo bench --bench hotpath
+//!
+//! Covers each layer's inner loop:
+//!   L3 expansion  — best-first claims per second (heap + bitmap path)
+//!   L3 tracker    — incremental edge moves per second (SLS inner loop)
+//!   L3 sls        — one destroy-repair round
+//!   L1/L2 kernels — ELL SpMV / min-plus rows per second, pure vs PJRT
+
+use windgp::graph::rmat::{generate, RmatParams};
+use windgp::machines::Cluster;
+use windgp::partition::{CostTracker, EdgePartition};
+use windgp::runtime::{PjrtBackend, PjrtEngine};
+use windgp::simulator::ell::{EllBackend, EllBlock, PureBackend};
+use windgp::simulator::SimGraph;
+use windgp::util::bench::{bench, throughput};
+use windgp::util::SplitMix64;
+use windgp::windgp::expand::{ExpandParams, Expander};
+use windgp::windgp::WindGP;
+use windgp::partition::Partitioner;
+
+fn main() {
+    let g = generate(&RmatParams::graph500(15, 16), 11);
+    let m = g.num_edges();
+    println!("graph: |V|={} |E|={}", g.num_vertices(), m);
+    let cluster = Cluster::heterogeneous_small(3, 6, (m as f64) / 1.6e7);
+
+    // --- expansion engine ---
+    let s = bench("expand: full graph, best-first", 3, || {
+        let mut ex = Expander::new(&g, &cluster, 1);
+        let params = ExpandParams { alpha: 0.3, beta: 0.3 };
+        let mut total = 0usize;
+        for i in 0..9u32 {
+            total += ex
+                .expand_partition(i, (m as u64) / 9 + 1, &params)
+                .len();
+        }
+        assert!(total > m / 2);
+    });
+    println!("  -> {:.2}M edge-claims/s", throughput(m, s.mean) / 1e6);
+
+    // --- incremental tracker ---
+    let mut rng = SplitMix64::new(3);
+    let assignment: Vec<u32> = (0..m).map(|_| rng.next_usize(9) as u32).collect();
+    let ep = EdgePartition::from_assignment(9, assignment);
+    let mut t = CostTracker::new(&g, &cluster, &ep);
+    let moves: Vec<(u32, u32)> = (0..200_000)
+        .map(|_| (rng.next_usize(m) as u32, rng.next_usize(9) as u32))
+        .collect();
+    let s = bench("tracker: 200K random edge moves", 3, || {
+        for &(e, p) in &moves {
+            t.move_edge(e, p);
+        }
+    });
+    println!("  -> {:.2}M moves/s", throughput(moves.len(), s.mean) / 1e6);
+
+    // --- one full WindGP run (the headline partitioner) ---
+    let s = bench("windgp: full pipeline", 3, || {
+        let ep = WindGP::default().partition(&g, &cluster, 1);
+        assert!(ep.is_complete());
+    });
+    println!("  -> {:.2}M edges partitioned/s", throughput(m, s.mean) / 1e6);
+
+    // --- kernels ---
+    let wind = WindGP::default();
+    let ep = wind.partition(&g, &cluster, 1);
+    let sg = SimGraph::build(&g, &cluster, &ep);
+    let l = &sg.locals[0];
+    let blk = EllBlock::build(l, 16, None, |_, _| 0.5);
+    let x = blk.fill_x(&vec![1.0; blk.verts], 0.0);
+    let mut pure = PureBackend;
+    let s = bench(
+        &format!("ell spmv pure ({} rows x {})", blk.rows, blk.k),
+        5,
+        || {
+            let y = pure.spmv(0, &blk, &x);
+            assert_eq!(y.len(), blk.rows);
+        },
+    );
+    println!("  -> {:.1}M lanes/s", throughput(blk.rows * blk.k, s.mean) / 1e6);
+
+    if PjrtEngine::default_dir().join("manifest.json").exists() {
+        let engine = PjrtEngine::load(PjrtEngine::default_dir()).unwrap();
+        let mut be = PjrtBackend::new(engine);
+        // pick an artifact-shaped block
+        let (k, pad) = be.chooser("pagerank")(l);
+        if let Some(n) = pad {
+            let blk = EllBlock::build(l, k, Some(n), |_, _| 0.5);
+            let x = blk.fill_x(&vec![1.0; blk.verts], 0.0);
+            let s = bench(
+                &format!("ell spmv PJRT ({} rows x {})", blk.rows, blk.k),
+                5,
+                || {
+                    let y = be.spmv(0, &blk, &x);
+                    assert_eq!(y.len(), blk.rows);
+                },
+            );
+            println!(
+                "  -> {:.1}M lanes/s ({} pjrt calls)",
+                throughput(blk.rows * blk.k, s.mean) / 1e6,
+                be.pjrt_calls
+            );
+        }
+    } else {
+        println!("(PJRT kernel bench skipped: run `make artifacts`)");
+    }
+}

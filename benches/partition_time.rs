@@ -1,0 +1,41 @@
+//! Bench: partitioning wall time — regenerates Table 11 (traditional
+//! methods) and Table 18 (heterogeneous methods) as timing runs.
+//!
+//!     cargo bench --bench partition_time
+//!
+//! Paper shape to check: all methods within one order of magnitude;
+//! WindGP ≈ NE (paper: 11% slower); HDRF fastest of the quality methods;
+//! METIS slowest.
+
+use windgp::experiments::{common, ExpCtx};
+use windgp::util::bench::bench;
+
+fn main() {
+    let shrink: u32 = std::env::var("BENCH_SHRINK")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let ctx = ExpCtx::new(1, shrink);
+    println!("== Table 11: traditional methods (shrink {shrink}) ==");
+    for name in ["co-s", "lj-s", "po-s", "cp-s", "rn-s"] {
+        let g = ctx.graph(name);
+        let cluster = ctx.cluster_for(name, &g);
+        for a in common::traditional_partitioners() {
+            bench(&format!("{name}/{}", a.name()), 3, || {
+                let ep = a.partition(&g, &cluster, 1);
+                assert!(ep.is_complete());
+            });
+        }
+    }
+    println!("\n== Table 18: heterogeneous methods on large stand-ins ==");
+    for name in common::BIG {
+        let g = ctx.graph(name);
+        let cluster = ctx.nine_machine_for(name, &g);
+        for a in common::hetero_partitioners() {
+            bench(&format!("{name}/{}", a.name()), 3, || {
+                let ep = a.partition(&g, &cluster, 1);
+                assert!(ep.is_complete());
+            });
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Bench: partition-quality regeneration — Figure 8 (ablation), Figure 12
+//! (comparison), Figures 13–15 (scalability) at bench scale, timing each
+//! table's end-to-end production.
+//!
+//!     cargo bench --bench quality_tc
+//!
+//! Paper shape to check: WindGP lowest ln TC everywhere; each ablation
+//! stage helps; slope < others in fig13; TC flattens past the fig14
+//! saturation point; homogeneous (1-type) is the fig15 minimum.
+
+use windgp::experiments::{self, ExpCtx};
+use windgp::util::bench::bench;
+
+fn main() {
+    let shrink: u32 = std::env::var("BENCH_SHRINK")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let ctx = ExpCtx::new(1, shrink);
+    for id in ["fig8", "fig12", "fig13", "fig14", "fig15"] {
+        let mut out = String::new();
+        bench(&format!("experiment/{id} (shrink {shrink})"), 1, || {
+            out = experiments::run(id, &ctx).unwrap();
+        });
+        println!("{out}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Scalability tour (§5.3 in miniature): TC growth with graph size and
+//! with machine count, using the library's experiment harness directly.
+//!
+//!     cargo run --release --example scalability
+
+use windgp::experiments::{self, ExpCtx};
+
+fn main() -> anyhow::Result<()> {
+    // shrink 3 keeps this example under a minute on a laptop
+    let ctx = ExpCtx::new(1, 3);
+    println!("{}", experiments::run("fig13", &ctx)?);
+    println!("{}", experiments::run("fig14", &ctx)?);
+    println!("{}", experiments::run("fig15", &ctx)?);
+    println!("(full-scale versions: cargo run --release -- experiment --id fig13)");
+    Ok(())
+}

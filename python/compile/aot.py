@@ -1,0 +1,89 @@
+"""AOT: lower the L2 models to HLO *text* artifacts for the rust runtime.
+
+HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the published
+`xla` 0.1.6 crate) rejects (`proto.id() <= INT_MAX`). The text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Lowering uses return_tuple=True so the rust side unwraps with to_tupleN().
+
+Each model is lowered at several static (N, K) ELL shape variants; the rust
+runtime pads a partition's local block to the smallest fitting variant.
+Artifact naming: artifacts/<model>_n<N>_k<K>.hlo.txt plus a manifest
+artifacts/manifest.json the runtime reads at startup.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model as m
+
+# (N, K) variants shipped by default. N multiples of 256 (the kernel row
+# tile); K covers the ELL widths the simulator produces after super-node row
+# splitting (rust side splits rows with deg > K into chains of logical rows).
+DEFAULT_VARIANTS = [(256, 8), (1024, 16), (4096, 16), (16384, 32)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name, n, k):
+    fn = m.MODELS[name]
+    args = m.example_args(n, k)[name]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=",".join(f"{n}x{k}" for n, k in DEFAULT_VARIANTS),
+        help="comma-separated NxK list",
+    )
+    ap.add_argument("--models", default="pagerank,sssp")
+    # Back-compat with the Makefile's single-file target.
+    ap.add_argument("--out", default=None, help="also write a smoke model here")
+    args = ap.parse_args(argv)
+
+    variants = []
+    for tok in args.variants.split(","):
+        n, k = tok.lower().split("x")
+        variants.append((int(n), int(k)))
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"models": {}}
+    for name in args.models.split(","):
+        entries = []
+        for n, k in variants:
+            text = lower_variant(name, n, k)
+            fname = f"{name}_n{n}_k{k}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            entries.append({"n": n, "k": k, "file": fname})
+            print(f"wrote {fname} ({len(text)} chars)", file=sys.stderr)
+        manifest["models"][name] = entries
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    if args.out:
+        # Smallest pagerank variant doubles as the Makefile's smoke artifact.
+        n, k = variants[0]
+        with open(args.out, "w") as f:
+            f.write(lower_variant("pagerank", n, k))
+        print(f"wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

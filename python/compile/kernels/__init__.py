@@ -1,0 +1,5 @@
+# L1: Pallas kernels for the BSP superstep hot-spots (PageRank push SpMV,
+# SSSP min-plus relaxation), plus the pure-jnp oracles in ref.py.
+from . import ref  # noqa: F401
+from .minplus_ell import minplus_ell  # noqa: F401
+from .spmv_ell import spmv_ell  # noqa: F401

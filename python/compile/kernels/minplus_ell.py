@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: blocked ELL min-plus relaxation (the SSSP hot loop).
+
+One Bellman-Ford round over a row tile:
+    y[i] = min(x[i], min_k (wts[i,k] + x[cols[i,k]]))
+with masked padding forced to INF so it never wins the min. Same VMEM
+tiling story as spmv_ell: x resident, (rows, K) tiles streamed, no branches.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INF
+from .spmv_ell import BLOCK_ROWS
+
+
+def _minplus_kernel(x_ref, cols_ref, wts_ref, mask_ref, o_ref):
+    x = x_ref[...]
+    cand = jnp.where(mask_ref[...] > 0, wts_ref[...] + x[cols_ref[...]], INF)
+    # rows of the current tile: slice x with the tile's own indices is not
+    # needed — x_ref is the full vector, but o_ref block matches the row
+    # tile, so gather the diagonal slice via program_id offset.
+    i = pl.program_id(0)
+    rows = x_ref[pl.dslice(i * o_ref.shape[0], o_ref.shape[0])]
+    o_ref[...] = jnp.minimum(rows, jnp.min(cand, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def minplus_ell(x, cols, wts, mask, *, block_rows=BLOCK_ROWS):
+    """One masked min-plus relaxation round, row-tiled."""
+    n, k = cols.shape
+    assert x.shape == (n,)
+    if n % block_rows != 0:
+        block_rows = n  # single-block fallback for small/ragged inputs
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),            # x: full
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, cols, wts, mask)

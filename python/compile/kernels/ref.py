@@ -1,0 +1,59 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle here to float tolerance under pytest (python/tests/).
+They are intentionally written in the most direct jnp form — no tiling, no
+masking tricks — so a reviewer can check them against the math by eye.
+
+Graph format: ELL (ELLPACK). A local subgraph with N rows is stored as
+  cols : int32[N, K]   column index of the k-th incident edge of row i
+                       (padding entries point at row 0 — any valid index)
+  vals : f32[N, K]     edge weight; exactly 0.0 on padding entries, so the
+                       padding contributes nothing to the accumulation
+For PageRank push, vals[i, k] = 1 / out_degree(cols[i, k]) on real entries.
+For SSSP min-plus, vals holds edge weights and a separate mask marks padding
+(padding must contribute +inf, not 0, to a min-reduction).
+"""
+
+import jax.numpy as jnp
+
+# Sentinel for min-plus padding; < f32 max, > any real path length. Kept a
+# plain python float so Pallas kernels can inline it as a literal instead of
+# capturing a traced constant.
+INF = 3.0e38
+
+
+def spmv_ell(x, cols, vals):
+    """y[i] = sum_k vals[i,k] * x[cols[i,k]].
+
+    The padded-entry convention (vals==0) makes the gather of arbitrary
+    x[cols] harmless.
+    """
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def pagerank_step(x, cols, vals, damping, teleport):
+    """One PageRank push superstep on a local ELL block.
+
+    new_rank = damping * (A_hat @ x) + teleport
+    where A_hat is the column-normalized adjacency encoded by (cols, vals)
+    and teleport already folds (1-d)/N plus the dangling-mass correction —
+    both are uniform scalars, computed by the L3 coordinator per superstep.
+    """
+    return damping * spmv_ell(x, cols, vals) + teleport
+
+
+def minplus_ell(x, cols, wts, mask):
+    """y[i] = min(x[i], min_k (wts[i,k] + x[cols[i,k]]))  (masked).
+
+    mask is 1.0 on real entries and 0.0 on padding; padded lanes are forced
+    to INF so they never win the min. This is one round of Bellman-Ford
+    relaxation (the SSSP superstep's local compute).
+    """
+    cand = jnp.where(mask > 0, wts + x[cols], INF)
+    return jnp.minimum(x, jnp.min(cand, axis=1))
+
+
+def degree_ell(vals):
+    """Row non-zero count — used to validate padding bookkeeping."""
+    return jnp.sum((vals != 0).astype(jnp.int32), axis=1)

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: blocked ELL SpMV (the PageRank-push hot loop).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): rows are tiled into
+BLOCK_ROWS-sized VMEM blocks via BlockSpec; the dense input vector x stays
+resident in VMEM for every block (it is the reuse-heavy operand, the analog
+of keeping the frontier in shared memory on GPU). Per block the kernel does
+one gather x[cols] and one masked multiply-accumulate — a VPU-friendly
+(BLOCK_ROWS, K) elementwise fma followed by a lane reduction. Padding is
+encoded as vals == 0 so no branch is needed in the inner loop.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+under the rust runtime. Real-TPU perf is estimated from the VMEM footprint
+(BLOCK_ROWS*K*8B + N*4B) in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row tile. 256 rows x K=16 lanes x (4B cols + 4B vals) = 32 KiB of
+# streamed operands per block plus the resident x vector — comfortably under
+# a 4 MiB VMEM budget for all shipped (N, K) variants.
+BLOCK_ROWS = 256
+
+
+def _spmv_kernel(x_ref, cols_ref, vals_ref, o_ref):
+    # x is the full vector (one VMEM-resident copy per block); cols/vals are
+    # the current row tile. Gather + fma + lane-sum.
+    x = x_ref[...]
+    cols = cols_ref[...]
+    vals = vals_ref[...]
+    o_ref[...] = jnp.sum(vals * x[cols], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def spmv_ell(x, cols, vals, *, block_rows=BLOCK_ROWS):
+    """y[i] = sum_k vals[i,k] * x[cols[i,k]] via a row-tiled Pallas kernel.
+
+    Requires N % block_rows == 0 (the AOT shapes guarantee this; tests also
+    exercise the ragged fallback path in model.py).
+    """
+    n, k = cols.shape
+    assert x.shape == (n,), (x.shape, n)
+    if n % block_rows != 0:
+        block_rows = n  # single-block fallback for small/ragged inputs
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),            # x: full, every block
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, cols, vals)

@@ -1,0 +1,89 @@
+"""L2: per-machine BSP superstep compute graphs, calling the L1 kernels.
+
+These are the functions AOT-lowered to HLO text by aot.py and executed from
+the rust simulator's hot path (rust/src/runtime/). Each takes an ELL-padded
+local subgraph of a partition; the coordinator (L3) owns the cross-machine
+replica exchange, dangling-mass bookkeeping and convergence checks.
+
+Everything here is shape-static per (N, K) artifact variant — the rust side
+pads the partition's local block to the nearest shipped variant.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import minplus_ell, spmv_ell
+from .kernels.ref import INF
+
+
+def pagerank_step(x, cols, vals, damping, teleport):
+    """One local PageRank push superstep.
+
+    new_rank = damping * (A_hat @ x) + teleport
+    `teleport` folds (1-d)/N_global plus the per-superstep dangling-mass
+    correction — both uniform scalars computed by L3. Returns (new_rank,).
+    """
+    y = spmv_ell(x, cols, vals)
+    return (damping * y + teleport,)
+
+
+def sssp_step(x, cols, wts, mask):
+    """One local Bellman-Ford relaxation round. Returns (new_dist, changed).
+
+    `changed` is the count of rows whose distance improved — L3 uses the
+    per-machine counts to build the global frontier/termination signal
+    without shipping the whole vector back every superstep.
+    """
+    y = minplus_ell(x, cols, wts, mask)
+    changed = jnp.sum((y < x).astype(jnp.int32))
+    return (y, changed)
+
+
+def pagerank_step_ref(x, cols, vals, damping, teleport):
+    """Pure-jnp L2 model (no Pallas) — oracle + ragged-shape fallback."""
+    from .kernels import ref
+
+    return (ref.pagerank_step(x, cols, vals, damping, teleport),)
+
+
+def sssp_step_ref(x, cols, wts, mask):
+    from .kernels import ref
+
+    y = ref.minplus_ell(x, cols, wts, mask)
+    return (y, jnp.sum((y < x).astype(jnp.int32)))
+
+
+def example_args(n, k):
+    """ShapeDtypeStructs for lowering a (n, k) variant."""
+    f32 = jnp.float32
+    return {
+        "pagerank": (
+            jax.ShapeDtypeStruct((n,), f32),        # x
+            jax.ShapeDtypeStruct((n, k), jnp.int32),  # cols
+            jax.ShapeDtypeStruct((n, k), f32),        # vals
+            jax.ShapeDtypeStruct((), f32),            # damping
+            jax.ShapeDtypeStruct((), f32),            # teleport
+        ),
+        "sssp": (
+            jax.ShapeDtypeStruct((n,), f32),
+            jax.ShapeDtypeStruct((n, k), jnp.int32),
+            jax.ShapeDtypeStruct((n, k), f32),
+            jax.ShapeDtypeStruct((n, k), f32),
+        ),
+    }
+
+
+MODELS = {
+    "pagerank": pagerank_step,
+    "sssp": sssp_step,
+}
+
+__all__ = [
+    "pagerank_step",
+    "sssp_step",
+    "pagerank_step_ref",
+    "sssp_step_ref",
+    "example_args",
+    "MODELS",
+    "INF",
+]

@@ -1,0 +1,129 @@
+# pytest: Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+#
+# hypothesis sweeps shapes, ELL widths, padding patterns and value ranges;
+# deterministic tests pin down the exact padding conventions (vals==0 for
+# SpMV, mask==0 -> INF for min-plus) and known-answer graphs.
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import minplus_ell, ref, spmv_ell
+from compile.kernels.ref import INF
+
+
+def make_ell(rng, n, k, density=0.7, wmax=10.0):
+    """Random ELL block: (cols, vals, mask) with vals zeroed on padding."""
+    cols = rng.integers(0, n, size=(n, k)).astype(np.int32)
+    mask = (rng.random((n, k)) < density).astype(np.float32)
+    vals = (rng.random((n, k)).astype(np.float32) * wmax) * mask
+    return cols, vals, mask
+
+
+# --------------------------------------------------------------------------
+# hypothesis sweeps
+# --------------------------------------------------------------------------
+
+block_sizes = st.sampled_from([1, 2, 4, 8])  # block_rows divisors of n
+shapes = st.tuples(
+    st.sampled_from([8, 16, 64, 256, 512]),  # n
+    st.integers(min_value=1, max_value=9),   # k
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+def test_spmv_matches_ref(shape, seed):
+    n, k = shape
+    rng = np.random.default_rng(seed)
+    cols, vals, _ = make_ell(rng, n, k)
+    x = rng.standard_normal(n).astype(np.float32)
+    block = min(n, 256) if n % 256 == 0 else n
+    got = spmv_ell(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals), block_rows=block)
+    want = ref.spmv_ell(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+def test_minplus_matches_ref(shape, seed):
+    n, k = shape
+    rng = np.random.default_rng(seed)
+    cols, wts, mask = make_ell(rng, n, k, wmax=5.0)
+    x = (rng.random(n).astype(np.float32) * 100.0)
+    x[rng.integers(0, n)] = 0.0  # a source
+    block = min(n, 256) if n % 256 == 0 else n
+    got = minplus_ell(
+        jnp.asarray(x), jnp.asarray(cols), jnp.asarray(wts), jnp.asarray(mask),
+        block_rows=block,
+    )
+    want = ref.minplus_ell(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(wts), jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), dtype_bits=st.sampled_from([32]))
+def test_spmv_zero_padding_is_inert(seed, dtype_bits):
+    # Padding entries (vals == 0) must not change the result no matter what
+    # garbage their column indices hold.
+    n, k = 64, 6
+    rng = np.random.default_rng(seed)
+    cols, vals, mask = make_ell(rng, n, k, density=0.4)
+    x = rng.standard_normal(n).astype(np.float32)
+    scrambled = cols.copy()
+    pad = mask == 0
+    scrambled[pad] = rng.integers(0, n, size=pad.sum())
+    a = spmv_ell(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals), block_rows=n)
+    b = spmv_ell(jnp.asarray(x), jnp.asarray(scrambled), jnp.asarray(vals), block_rows=n)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# deterministic known-answer tests
+# --------------------------------------------------------------------------
+
+def test_spmv_known_triangle():
+    # 3-cycle with uniform weights 1/deg = 1/2: pagerank push of uniform x
+    # returns uniform.
+    n, k = 4, 2  # padded to 4 rows, row 3 is padding
+    cols = np.array([[1, 2], [0, 2], [0, 1], [0, 0]], np.int32)
+    vals = np.full((n, k), 0.5, np.float32)
+    vals[3] = 0.0
+    x = np.array([1 / 3, 1 / 3, 1 / 3, 0.0], np.float32)
+    y = np.asarray(spmv_ell(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals), block_rows=n))
+    np.testing.assert_allclose(y[:3], [1 / 3] * 3, rtol=1e-6)
+    assert y[3] == 0.0
+
+
+def test_minplus_path_graph():
+    # path 0-1-2-3 with unit weights, source at 0: one relaxation round
+    # improves every node adjacent to a settled one.
+    n, k = 4, 2
+    cols = np.array([[1, 0], [0, 2], [1, 3], [2, 0]], np.int32)
+    mask = np.array([[1, 0], [1, 1], [1, 1], [1, 0]], np.float32)
+    wts = mask.copy()
+    x = np.array([0.0, 1e30, 1e30, 1e30], np.float32)
+    y = np.asarray(minplus_ell(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(wts),
+                               jnp.asarray(mask), block_rows=n))
+    assert y[0] == 0.0
+    assert y[1] == 1.0
+    assert y[2] > 1e29 and y[3] > 1e29  # not yet reached
+
+
+def test_minplus_padding_is_inert():
+    # fully-masked row keeps its own value
+    n, k = 2, 3
+    cols = np.zeros((n, k), np.int32)
+    mask = np.zeros((n, k), np.float32)
+    wts = np.zeros((n, k), np.float32)
+    x = np.array([5.0, 7.0], np.float32)
+    y = np.asarray(minplus_ell(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(wts),
+                               jnp.asarray(mask), block_rows=n))
+    np.testing.assert_allclose(y, x)
+
+
+def test_inf_sentinel_below_f32_max():
+    assert float(INF) < np.finfo(np.float32).max

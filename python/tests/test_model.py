@@ -1,0 +1,132 @@
+# pytest: L2 model vs refs + full-algorithm convergence on small graphs.
+#
+# These validate the exact contracts the rust runtime depends on:
+#   - pagerank_step/sssp_step output tuples and dtypes
+#   - pagerank converges to the true dominant eigenvector on a known graph
+#   - sssp `changed` counter semantics
+#   - the AOT lowering path produces parseable HLO text for every variant
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as m
+from compile.aot import lower_variant
+from compile.kernels import ref
+
+
+def ell_from_edges(n, k, edges, pagerank=True):
+    """Build (cols, vals/wts, mask) ELL from an undirected edge list."""
+    adj = [[] for _ in range(n)]
+    for u, v in edges:
+        adj[u].append(v)
+        adj[v].append(u)
+    deg = [len(a) for a in adj]
+    cols = np.zeros((n, k), np.int32)
+    vals = np.zeros((n, k), np.float32)
+    mask = np.zeros((n, k), np.float32)
+    for i, nbrs in enumerate(adj):
+        assert len(nbrs) <= k
+        for j, c in enumerate(nbrs):
+            cols[i, j] = c
+            vals[i, j] = 1.0 / deg[c] if pagerank else 1.0
+            mask[i, j] = 1.0
+    return cols, vals, mask, deg
+
+
+def test_pagerank_converges_star():
+    # star graph: center 0, leaves 1..4. Known stationary distribution.
+    n, k = 8, 4  # padded
+    edges = [(0, 1), (0, 2), (0, 3), (0, 4)]
+    cols, vals, _, deg = ell_from_edges(n, k, edges)
+    d = 0.85
+    nv = 5  # real vertices
+    x = np.zeros(n, np.float32)
+    x[:nv] = 1.0 / nv
+    for _ in range(100):
+        # padded rows have deg 0 -> they are "dangling" but hold rank 0
+        teleport = (1 - d) / nv
+        (x_new,) = m.pagerank_step(
+            jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals),
+            jnp.float32(d), jnp.float32(teleport),
+        )
+        x = np.array(x_new)
+        x[nv:] = 0.0
+    # closed form: center = (1-d+4*d*c_leaf*1)/... — verify via dense power iteration
+    P = np.zeros((nv, nv))
+    for u, v in edges:
+        P[u, v] = 1.0 / deg[v]
+        P[v, u] = 1.0 / deg[u]
+    y = np.full(nv, 1.0 / nv)
+    for _ in range(100):
+        y = d * P @ y + (1 - d) / nv
+    np.testing.assert_allclose(x[:nv], y, rtol=1e-4)
+
+
+def test_pagerank_step_matches_ref_model():
+    rng = np.random.default_rng(7)
+    n, k = 256, 8
+    cols = rng.integers(0, n, (n, k)).astype(np.int32)
+    mask = (rng.random((n, k)) < 0.5).astype(np.float32)
+    vals = rng.random((n, k)).astype(np.float32) * mask
+    x = rng.random(n).astype(np.float32)
+    a = m.pagerank_step(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals),
+                        jnp.float32(0.85), jnp.float32(0.01))[0]
+    b = m.pagerank_step_ref(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals),
+                            jnp.float32(0.85), jnp.float32(0.01))[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_sssp_changed_counter():
+    n, k = 8, 2
+    edges = [(0, 1), (1, 2), (2, 3)]
+    cols, wts, mask, _ = ell_from_edges(n, k, edges, pagerank=False)
+    x = np.full(n, 1e30, np.float32)
+    x[0] = 0.0
+    dist, changed = m.sssp_step(jnp.asarray(x), jnp.asarray(cols),
+                                jnp.asarray(wts), jnp.asarray(mask))
+    assert int(changed) == 1  # only node 1 improves in round one
+    dist2, changed2 = m.sssp_step(dist, jnp.asarray(cols),
+                                  jnp.asarray(wts), jnp.asarray(mask))
+    assert int(changed2) == 1  # node 2
+    assert float(dist2[1]) == 1.0 and float(dist2[2]) == 2.0
+
+
+def test_sssp_fixpoint_changed_zero():
+    n, k = 8, 2
+    edges = [(0, 1), (1, 2)]
+    cols, wts, mask, _ = ell_from_edges(n, k, edges, pagerank=False)
+    x = np.array([0, 1, 2, 0, 0, 0, 0, 0], np.float32)
+    x[3:] = float(ref.INF)
+    _, changed = m.sssp_step(jnp.asarray(x), jnp.asarray(cols),
+                             jnp.asarray(wts), jnp.asarray(mask))
+    assert int(changed) == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sssp_model_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    n, k = 256, 6
+    cols = rng.integers(0, n, (n, k)).astype(np.int32)
+    mask = (rng.random((n, k)) < 0.6).astype(np.float32)
+    wts = rng.random((n, k)).astype(np.float32) * 9
+    x = rng.random(n).astype(np.float32) * 50
+    a, ca = m.sssp_step(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(wts), jnp.asarray(mask))
+    b, cb = m.sssp_step_ref(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(wts), jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+    assert int(ca) == int(cb)
+
+
+@pytest.mark.parametrize("name", ["pagerank", "sssp"])
+@pytest.mark.parametrize("n,k", [(256, 8), (1024, 16)])
+def test_aot_lowering_produces_hlo(name, n, k):
+    text = lower_variant(name, n, k)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # static shapes visible in the HLO signature
+    assert f"{n},{k}" in text.replace(" ", "") or f"[{n},{k}]" in text

@@ -1,0 +1,77 @@
+//! DBH — Degree-Based Hashing [51]: hash each edge by its lower-degree
+//! endpoint, so the edges of low-degree vertices stay together and only
+//! hubs get replicated (power-law-aware). Memory-capped per §5.
+
+use crate::graph::Graph;
+use crate::machines::Cluster;
+use crate::partition::{CostTracker, EdgePartition, PartId, Partitioner};
+use crate::util::rng::hash64;
+
+use super::fallback_place;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Dbh;
+
+impl Partitioner for Dbh {
+    fn name(&self) -> &'static str {
+        "DBH"
+    }
+
+    fn partition(&self, g: &Graph, cluster: &Cluster, seed: u64) -> EdgePartition {
+        let p = cluster.len();
+        let ep = EdgePartition::unassigned(g, p);
+        let mut t = CostTracker::new(g, cluster, &ep);
+        for e in 0..g.num_edges() as u32 {
+            let (u, v) = g.edge(e);
+            let key = if g.degree(u) <= g.degree(v) { u } else { v };
+            let h = hash64(key as u64 ^ seed.rotate_left(23));
+            let mut placed = false;
+            for k in 0..p {
+                let i = ((h as usize) + k) % p;
+                let newv = t.new_endpoints(e, i as PartId);
+                if t.edge_fits(i, newv) {
+                    t.add_edge(e, i as PartId);
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                let i = fallback_place(&t, e);
+                t.add_edge(e, i);
+            }
+        }
+        t.to_partition()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::Metrics;
+
+    #[test]
+    fn low_degree_vertices_not_replicated() {
+        // star: all leaves are degree-1 => each leaf's single edge hashes by
+        // the leaf; leaves are never replicated, only the hub is.
+        let g = gen::star(200);
+        let cluster = Cluster::homogeneous(4, 1_000_000);
+        let ep = Dbh.partition(&g, &cluster, 3);
+        let m = Metrics::new(&g, &cluster);
+        let sets = m.replica_sets(&ep);
+        for leaf in 1..200 {
+            assert_eq!(sets[leaf].len(), 1, "leaf {leaf} replicated");
+        }
+        assert!(sets[0].len() > 1, "hub should be replicated");
+    }
+
+    #[test]
+    fn beats_hash_on_powerlaw_rf() {
+        let g = crate::graph::rmat::generate(&crate::graph::rmat::RmatParams::graph500(11, 8), 1);
+        let cluster = Cluster::homogeneous(8, 10_000_000);
+        let m = Metrics::new(&g, &cluster);
+        let rf_dbh = m.report(&Dbh.partition(&g, &cluster, 1)).rf;
+        let rf_hash = m.report(&super::super::RandomHash.partition(&g, &cluster, 1)).rf;
+        assert!(rf_dbh < rf_hash, "dbh {rf_dbh} vs hash {rf_hash}");
+    }
+}

@@ -1,0 +1,103 @@
+//! PowerGraph's greedy vertex-cut [22]: for each streamed edge u͞v, apply
+//! the classic case ladder —
+//!   1. some machine holds both u and v      → least-loaded such machine
+//!   2. both endpoints placed, no overlap    → least-loaded machine among
+//!      the endpoint machines of the higher-remaining-degree endpoint
+//!   3. one endpoint placed                  → a machine holding it
+//!   4. neither placed                       → least-loaded machine
+//! Memory-capped per §5; load = |E_i|.
+
+use crate::graph::Graph;
+use crate::machines::Cluster;
+use crate::partition::{CostTracker, EdgePartition, PartId, Partitioner};
+
+use super::fallback_place;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PowerGraphGreedy;
+
+impl PowerGraphGreedy {
+    fn least_loaded(t: &CostTracker, e: u32, cands: &[PartId]) -> Option<PartId> {
+        let mut best: Option<(PartId, u64)> = None;
+        for &i in cands {
+            let newv = t.new_endpoints(e, i);
+            if !t.edge_fits(i as usize, newv) {
+                continue;
+            }
+            let load = t.e_count[i as usize];
+            if best.map_or(true, |(_, b)| load < b) {
+                best = Some((i, load));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+impl Partitioner for PowerGraphGreedy {
+    fn name(&self) -> &'static str {
+        "Greedy"
+    }
+
+    fn partition(&self, g: &Graph, cluster: &Cluster, _seed: u64) -> EdgePartition {
+        let p = cluster.len();
+        let ep = EdgePartition::unassigned(g, p);
+        let mut t = CostTracker::new(g, cluster, &ep);
+        let all: Vec<PartId> = (0..p as PartId).collect();
+        for e in 0..g.num_edges() as u32 {
+            let (u, v) = g.edge(e);
+            let su = t.parts_of(u);
+            let sv = t.parts_of(v);
+            let both: Vec<PartId> = su.iter().copied().filter(|x| sv.contains(x)).collect();
+            let target = if !both.is_empty() {
+                Self::least_loaded(&t, e, &both)
+            } else if !su.is_empty() && !sv.is_empty() {
+                // tie-break by remaining degree: replicate the endpoint with
+                // more unplaced edges (PowerGraph's heuristic)
+                let du = g.degree(u);
+                let dv = g.degree(v);
+                let pref = if du >= dv { &sv } else { &su };
+                Self::least_loaded(&t, e, pref)
+            } else if !su.is_empty() {
+                Self::least_loaded(&t, e, &su)
+            } else if !sv.is_empty() {
+                Self::least_loaded(&t, e, &sv)
+            } else {
+                Self::least_loaded(&t, e, &all)
+            };
+            let target = target
+                .or_else(|| Self::least_loaded(&t, e, &all))
+                .unwrap_or_else(|| fallback_place(&t, e));
+            t.add_edge(e, target);
+        }
+        t.to_partition()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::Metrics;
+
+    #[test]
+    fn balanced_on_homogeneous() {
+        let g = gen::erdos_renyi(400, 2000, 1);
+        let cluster = Cluster::homogeneous(4, 10_000_000);
+        let ep = PowerGraphGreedy.partition(&g, &cluster, 0);
+        let r = Metrics::new(&g, &cluster).report(&ep);
+        let m = g.num_edges() as f64 / 4.0;
+        for &c in &r.e_count {
+            assert!((c as f64) < m * 1.3 && (c as f64) > m * 0.7, "{:?}", r.e_count);
+        }
+    }
+
+    #[test]
+    fn path_graph_gets_low_rf() {
+        // a path streamed in order should be nearly contiguous
+        let g = gen::path(1000);
+        let cluster = Cluster::homogeneous(4, 10_000_000);
+        let ep = PowerGraphGreedy.partition(&g, &cluster, 0);
+        let r = Metrics::new(&g, &cluster).report(&ep);
+        assert!(r.rf < 1.2, "rf {}", r.rf);
+    }
+}

@@ -1,0 +1,71 @@
+//! Random hash edge partitioner: `part(e) = hash(e, seed) % p`, skipping
+//! memory-full machines. Fast, locality-destroying — the paper's strawman.
+
+use crate::graph::Graph;
+use crate::machines::Cluster;
+use crate::partition::{CostTracker, EdgePartition, PartId, Partitioner};
+use crate::util::rng::hash64;
+
+use super::fallback_place;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RandomHash;
+
+impl Partitioner for RandomHash {
+    fn name(&self) -> &'static str {
+        "Hash"
+    }
+
+    fn partition(&self, g: &Graph, cluster: &Cluster, seed: u64) -> EdgePartition {
+        let p = cluster.len();
+        let ep = EdgePartition::unassigned(g, p);
+        let mut t = CostTracker::new(g, cluster, &ep);
+        for e in 0..g.num_edges() as u32 {
+            let h = hash64(e as u64 ^ seed.rotate_left(17));
+            // linear-probe from the hashed slot until one fits
+            let mut placed = false;
+            for k in 0..p {
+                let i = ((h as usize) + k) % p;
+                let newv = t.new_endpoints(e, i as PartId);
+                if t.edge_fits(i, newv) {
+                    t.add_edge(e, i as PartId);
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                let i = fallback_place(&t, e);
+                t.add_edge(e, i);
+            }
+        }
+        t.to_partition()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::Metrics;
+
+    #[test]
+    fn roughly_uniform_on_homogeneous() {
+        let g = gen::erdos_renyi(500, 4000, 1);
+        let cluster = Cluster::homogeneous(4, 10_000_000);
+        let ep = RandomHash.partition(&g, &cluster, 7);
+        let r = Metrics::new(&g, &cluster).report(&ep);
+        let m = g.num_edges() as f64 / 4.0;
+        for &c in &r.e_count {
+            assert!((c as f64 - m).abs() < m * 0.15, "{:?}", r.e_count);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let g = gen::erdos_renyi(100, 400, 2);
+        let cluster = Cluster::homogeneous(4, 1_000_000);
+        let a = RandomHash.partition(&g, &cluster, 1);
+        let b = RandomHash.partition(&g, &cluster, 2);
+        assert_ne!(a.assignment, b.assignment);
+    }
+}

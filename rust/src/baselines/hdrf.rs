@@ -1,0 +1,114 @@
+//! HDRF — High-Degree Replicated First [40]: streaming vertex-cut that
+//! scores every machine for each edge and takes the max:
+//!
+//!   score(i) = g_rep(i) + λ · g_bal(i)
+//!   g_rep(i) = Σ_{w ∈ {u,v}, w ∈ V_i} (1 + (1 − θ_w))
+//!   θ_u = δ(u) / (δ(u) + δ(v))           (partial degrees, +1 smoothing)
+//!   g_bal(i) = (maxsize − |E_i|) / (ε + maxsize − minsize)
+//!
+//! High-degree endpoints get replicated first (low 1−θ), keeping the
+//! low-degree vertex's edges together. Memory-capped per §5.
+
+use crate::graph::Graph;
+use crate::machines::Cluster;
+use crate::partition::{CostTracker, EdgePartition, PartId, Partitioner};
+
+use super::fallback_place;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Hdrf {
+    /// balance weight λ (HDRF paper: λ > 1 guarantees balance; 1.1 default)
+    pub lambda: f64,
+}
+
+impl Default for Hdrf {
+    fn default() -> Self {
+        Self { lambda: 1.1 }
+    }
+}
+
+impl Partitioner for Hdrf {
+    fn name(&self) -> &'static str {
+        "HDRF"
+    }
+
+    fn partition(&self, g: &Graph, cluster: &Cluster, _seed: u64) -> EdgePartition {
+        let p = cluster.len();
+        let ep = EdgePartition::unassigned(g, p);
+        let mut t = CostTracker::new(g, cluster, &ep);
+        // partial degrees δ(·) accumulated over the stream
+        let mut pdeg = vec![0u32; g.num_vertices()];
+        for e in 0..g.num_edges() as u32 {
+            let (u, v) = g.edge(e);
+            pdeg[u as usize] += 1;
+            pdeg[v as usize] += 1;
+            let (du, dv) = (pdeg[u as usize] as f64, pdeg[v as usize] as f64);
+            let theta_u = du / (du + dv);
+            let theta_v = 1.0 - theta_u;
+            let maxsize = t.e_count.iter().copied().max().unwrap_or(0) as f64;
+            let minsize = t.e_count.iter().copied().min().unwrap_or(0) as f64;
+            let denom = 1.0 + maxsize - minsize;
+            let mut best: Option<(PartId, f64)> = None;
+            for i in 0..p as PartId {
+                let newv = t.new_endpoints(e, i);
+                if !t.edge_fits(i as usize, newv) {
+                    continue;
+                }
+                let mut g_rep = 0.0;
+                if t.has_vertex(u, i) {
+                    g_rep += 1.0 + (1.0 - theta_u);
+                }
+                if t.has_vertex(v, i) {
+                    g_rep += 1.0 + (1.0 - theta_v);
+                }
+                let g_bal = (maxsize - t.e_count[i as usize] as f64) / denom;
+                let score = g_rep + self.lambda * g_bal;
+                if best.map_or(true, |(_, b)| score > b) {
+                    best = Some((i, score));
+                }
+            }
+            let target = best.map(|(i, _)| i).unwrap_or_else(|| fallback_place(&t, e));
+            t.add_edge(e, target);
+        }
+        t.to_partition()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::Metrics;
+
+    #[test]
+    fn balance_term_keeps_sizes_close() {
+        let g = gen::erdos_renyi(400, 2000, 5);
+        let cluster = Cluster::homogeneous(4, 10_000_000);
+        let ep = Hdrf::default().partition(&g, &cluster, 0);
+        let r = Metrics::new(&g, &cluster).report(&ep);
+        assert!(r.alpha_prime < 1.2, "alpha' {}", r.alpha_prime);
+    }
+
+    #[test]
+    fn star_hub_replicated_leaves_not() {
+        let g = gen::star(101);
+        let cluster = Cluster::homogeneous(4, 1_000_000);
+        let ep = Hdrf::default().partition(&g, &cluster, 0);
+        let m = Metrics::new(&g, &cluster);
+        let sets = m.replica_sets(&ep);
+        assert!(sets[0].len() >= 2, "hub replicas {}", sets[0].len());
+        for leaf in 1..=100 {
+            assert_eq!(sets[leaf].len(), 1);
+        }
+    }
+
+    #[test]
+    fn lambda_zero_ignores_balance() {
+        // with λ=0 a path graph streamed in order piles onto one machine
+        let g = gen::path(500);
+        let cluster = Cluster::homogeneous(4, 10_000_000);
+        let ep = Hdrf { lambda: 0.0 }.partition(&g, &cluster, 0);
+        let r = Metrics::new(&g, &cluster).report(&ep);
+        assert!(r.e_count.iter().any(|&c| c as usize > 400), "{:?}", r.e_count);
+    }
+}

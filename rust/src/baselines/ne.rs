@@ -1,0 +1,80 @@
+//! NE — Neighbor Expansion [62], the strongest homogeneous baseline.
+//!
+//! NE grows partitions one at a time, always absorbing the boundary vertex
+//! with the minimum |N(v)\S| — which is exactly the WindGP expansion
+//! engine with α = β = 0 (Eq. 5 degenerates to |N(v)\S|), so this baseline
+//! reuses [`Expander`] and differs from WindGP only in its capacity rule:
+//! the homogeneous α′·|E|/p threshold capped by machine memory (§5's
+//! heterogeneity adaptation).
+
+use crate::graph::Graph;
+use crate::machines::Cluster;
+use crate::partition::{EdgePartition, Partitioner};
+use crate::windgp::expand::{ExpandParams, Expander};
+
+#[derive(Clone, Copy, Debug)]
+pub struct NeighborExpansion {
+    /// homogeneous balance slack α′ (NE paper uses 1.1)
+    pub alpha_prime: f64,
+}
+
+impl Default for NeighborExpansion {
+    fn default() -> Self {
+        Self { alpha_prime: 1.1 }
+    }
+}
+
+impl Partitioner for NeighborExpansion {
+    fn name(&self) -> &'static str {
+        "NE"
+    }
+
+    fn partition(&self, g: &Graph, cluster: &Cluster, seed: u64) -> EdgePartition {
+        let p = cluster.len();
+        let m = g.num_edges() as u64;
+        let caps = super::mem_caps(g, cluster);
+        let per = ((m as f64) * self.alpha_prime / p as f64).ceil() as u64;
+        let mut ex = Expander::new(g, cluster, seed);
+        let mut ep = EdgePartition::unassigned(g, p);
+        let mut order = vec![Vec::new(); p];
+        for i in 0..p {
+            let delta = per.min(caps[i]);
+            let edges = ex.expand_partition(i as u32, delta, &ExpandParams::ne());
+            for &e in &edges {
+                ep.assignment[e as usize] = i as u32;
+            }
+            order[i] = edges;
+        }
+        ex.sweep_leftovers(&mut ep, &mut order);
+        ep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::Metrics;
+
+    #[test]
+    fn low_rf_on_locality_friendly_graph() {
+        let g = crate::graph::mesh::generate(
+            &crate::graph::mesh::MeshParams::road_like(40, 40),
+            1,
+        );
+        let cluster = Cluster::homogeneous(4, 10_000_000);
+        let ep = NeighborExpansion::default().partition(&g, &cluster, 1);
+        let r = Metrics::new(&g, &cluster).report(&ep);
+        // a mesh cut into 4 tiles has tiny replication
+        assert!(r.rf < 1.15, "rf {}", r.rf);
+    }
+
+    #[test]
+    fn respects_alpha_prime_on_homogeneous() {
+        let g = gen::erdos_renyi(400, 2000, 2);
+        let cluster = Cluster::homogeneous(4, 10_000_000);
+        let ep = NeighborExpansion::default().partition(&g, &cluster, 2);
+        let r = Metrics::new(&g, &cluster).report(&ep);
+        assert!(r.alpha_prime <= 1.1 + 0.05, "alpha' {}", r.alpha_prime);
+    }
+}

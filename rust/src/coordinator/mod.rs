@@ -1,0 +1,114 @@
+//! Coordinator: the leader process that owns the partition → placement →
+//! distributed-execution pipeline and the worker pool the experiment
+//! harness fans out on.
+//!
+//! The paper's system is an offline partitioner, so the "request path" is
+//! a job pipeline rather than a serving loop: the coordinator takes a
+//! [`Job`] (graph + cluster + partitioner + workloads), produces the edge
+//! partition, ships each `E_i` to its machine (here: builds the SimGraph),
+//! runs the requested workloads through the BSP engine, and returns a
+//! [`JobReport`]. [`parallel_map`] is the scoped thread pool used both
+//! here and by the experiment harness to spread independent jobs over
+//! cores.
+
+pub mod pool;
+
+pub use pool::parallel_map;
+
+use std::time::Instant;
+
+use crate::graph::Graph;
+use crate::machines::Cluster;
+use crate::partition::{CostReport, EdgePartition, Metrics, Partitioner};
+use crate::simulator::algorithms;
+use crate::simulator::ell::{EllBackend, PureBackend};
+use crate::simulator::{SimGraph, SimReport};
+
+/// Workloads the coordinator can schedule after partitioning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    PageRank { iters: usize },
+    Sssp { source: u32 },
+    Bfs { source: u32 },
+    Triangle,
+    Wcc,
+}
+
+/// One partition-and-run job.
+pub struct Job<'a> {
+    pub g: &'a Graph,
+    pub cluster: &'a Cluster,
+    pub partitioner: &'a dyn Partitioner,
+    pub seed: u64,
+    pub workloads: Vec<Workload>,
+}
+
+/// Everything the leader reports back.
+pub struct JobReport {
+    pub partitioner: &'static str,
+    pub partition: EdgePartition,
+    pub cost: CostReport,
+    /// wall-clock partitioning time (seconds)
+    pub partition_secs: f64,
+    pub runs: Vec<SimReport>,
+}
+
+/// Execute a job start-to-finish on the calling thread.
+/// `backend`: None = pure Rust compute; Some = PJRT-backed kernels.
+pub fn run_job(job: &Job, backend: Option<&mut dyn EllBackend>) -> JobReport {
+    let t0 = Instant::now();
+    let partition = job.partitioner.partition(job.g, job.cluster, job.seed);
+    let partition_secs = t0.elapsed().as_secs_f64();
+    let cost = Metrics::new(job.g, job.cluster).report(&partition);
+    let mut pure = PureBackend;
+    let be: &mut dyn EllBackend = match backend {
+        Some(b) => b,
+        None => &mut pure,
+    };
+    let mut runs = Vec::new();
+    if !job.workloads.is_empty() {
+        let sg = SimGraph::build(job.g, job.cluster, &partition);
+        for w in &job.workloads {
+            let rep = match *w {
+                Workload::PageRank { iters } => algorithms::pagerank(&sg, iters, be).1,
+                Workload::Sssp { source } => algorithms::sssp(&sg, source, be).1,
+                Workload::Bfs { source } => algorithms::bfs(&sg, source).1,
+                Workload::Triangle => algorithms::triangles(&sg).1,
+                Workload::Wcc => algorithms::wcc(&sg).1,
+            };
+            runs.push(rep);
+        }
+    }
+    JobReport { partitioner: job.partitioner.name(), partition, cost, partition_secs, runs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::windgp::WindGP;
+
+    #[test]
+    fn job_pipeline_end_to_end() {
+        let g = gen::erdos_renyi(200, 800, 1);
+        let cluster = Cluster::heterogeneous_small(2, 4, 0.005);
+        let p = WindGP::default();
+        let job = Job {
+            g: &g,
+            cluster: &cluster,
+            partitioner: &p,
+            seed: 1,
+            workloads: vec![
+                Workload::PageRank { iters: 5 },
+                Workload::Bfs { source: 0 },
+                Workload::Triangle,
+            ],
+        };
+        let rep = run_job(&job, None);
+        assert!(rep.partition.is_complete());
+        assert!(rep.cost.all_feasible());
+        assert_eq!(rep.runs.len(), 3);
+        assert!(rep.runs.iter().all(|r| r.sim_time > 0.0));
+        assert!(rep.partition_secs > 0.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! Minimal scoped worker pool: `parallel_map` spreads independent closures
+//! over `min(n_jobs, cores)` threads. (The offline crate set has no rayon;
+//! this covers the harness's embarrassingly-parallel fan-outs.)
+
+/// Map `f` over `items` in parallel, preserving order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(4)
+        .min(n);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = std::sync::Mutex::new(work);
+    let slots_mutex = std::sync::Mutex::new(&mut slots);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let item = { queue.lock().unwrap().pop() };
+                match item {
+                    Some((idx, t)) => {
+                        let r = f(t);
+                        let mut guard = slots_mutex.lock().unwrap();
+                        guard[idx] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map((0..100).collect(), |x: i32| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_item_runs_inline() {
+        let out = parallel_map(vec![7], |x: i32| x + 1);
+        assert_eq!(out, vec![8]);
+    }
+
+    #[test]
+    fn heavy_closure_parallelizes() {
+        // smoke: no deadlock with more jobs than cores
+        let out = parallel_map((0..64).collect(), |x: u64| {
+            let mut acc = x;
+            for i in 0..10_000 {
+                acc = acc.wrapping_mul(31).wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 64);
+    }
+}

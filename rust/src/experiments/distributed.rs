@@ -1,0 +1,239 @@
+//! §5.4 distributed-computing evaluation on the nine-machine cluster:
+//! Tables 13–18 — TC and simulated distributed running time for the
+//! non-heterogeneous (HDRF/NE) and heterogeneous ([49]/GrapH/HaSGP/HAEP)
+//! comparators vs WindGP, across PageRank / SSSP / TriangleCount.
+
+use std::time::Instant;
+
+use crate::coordinator::{parallel_map, run_job, Job, Workload};
+use crate::partition::Partitioner;
+use crate::util::table;
+use crate::windgp::WindGP;
+
+use super::common::{hetero_partitioners, ExpCtx, BIG, SIX};
+
+const PR_ITERS: usize = 10;
+
+fn run_workloads(
+    ctx: &ExpCtx,
+    name: &str,
+    algos: Vec<Box<dyn Partitioner + Sync + Send>>,
+    workloads: Vec<Workload>,
+) -> Vec<(String, f64, Vec<f64>, f64)> {
+    let g = ctx.graph(name);
+    let cluster = ctx.nine_machine_for(name, &g);
+    parallel_map(algos, |a| {
+        let t0 = Instant::now();
+        let job = Job {
+            g: &g,
+            cluster: &cluster,
+            partitioner: a.as_ref(),
+            seed: 1,
+            workloads: workloads.clone(),
+        };
+        let rep = run_job(&job, None);
+        let times: Vec<f64> = rep.runs.iter().map(|r| r.sim_time).collect();
+        (
+            rep.partitioner.to_string(),
+            rep.cost.tc,
+            times,
+            t0.elapsed().as_secs_f64() - 0.0_f64.max(0.0),
+        )
+    })
+}
+
+fn trad_algos() -> Vec<Box<dyn Partitioner + Sync + Send>> {
+    vec![
+        Box::new(crate::baselines::Hdrf::default()),
+        Box::new(crate::baselines::NeighborExpansion::default()),
+        Box::new(WindGP::default()),
+    ]
+}
+
+/// Table 13: heterogeneous algorithms, PageRank + SSSP distributed time
+/// on the four large stand-ins; speedup = best counterpart / WindGP.
+pub fn table13(ctx: &ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for name in BIG {
+        let res = run_workloads(
+            ctx,
+            name,
+            hetero_partitioners(),
+            vec![Workload::PageRank { iters: PR_ITERS }, Workload::Sssp { source: 0 }],
+        );
+        let windgp_pr = res.last().unwrap().2[0];
+        let windgp_ss = res.last().unwrap().2[1];
+        let best_pr = res[..res.len() - 1].iter().map(|r| r.2[0]).fold(f64::INFINITY, f64::min);
+        let best_ss = res[..res.len() - 1].iter().map(|r| r.2[1]).fold(f64::INFINITY, f64::min);
+        let mut row = vec![name.to_string()];
+        for r in &res {
+            row.push(table::human(r.2[0]));
+        }
+        row.push(format!("{:.2}x", best_pr / windgp_pr.max(1e-9)));
+        for r in &res {
+            row.push(table::human(r.2[1]));
+        }
+        row.push(format!("{:.2}x", best_ss / windgp_ss.max(1e-9)));
+        rows.push(row);
+    }
+    format!(
+        "Table 13 — heterogeneous methods, simulated distributed time (9 machines)\n{}",
+        table::render(
+            &[
+                "Dataset", "PR [49]", "PR GrapH", "PR HaSGP", "PR HAEP", "PR WindGP", "speedup",
+                "SSSP [49]", "SSSP GrapH", "SSSP HaSGP", "SSSP HAEP", "SSSP WindGP", "speedup",
+            ],
+            &rows
+        )
+    )
+}
+
+/// Table 14: the TC metric on the nine-machine cluster, six graphs.
+pub fn table14(ctx: &ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for name in SIX {
+        let res = run_workloads(ctx, name, trad_algos(), vec![]);
+        let mut row = vec![name.to_string()];
+        for r in &res {
+            row.push(format!("{:.0}", r.1));
+        }
+        rows.push(row);
+    }
+    format!(
+        "Table 14 — TC on nine machines\n{}",
+        table::render(&["Dataset", "HDRF", "NE", "WindGP"], &rows)
+    )
+}
+
+/// Table 15: PageRank + TriangleCount distributed time (HDRF/NE/WindGP).
+pub fn table15(ctx: &ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for name in SIX {
+        let res = run_workloads(
+            ctx,
+            name,
+            trad_algos(),
+            vec![Workload::PageRank { iters: PR_ITERS }, Workload::Triangle],
+        );
+        let mut row = vec![name.to_string()];
+        for r in &res {
+            row.push(table::human(r.2[0]));
+        }
+        for r in &res {
+            row.push(table::human(r.2[1]));
+        }
+        rows.push(row);
+    }
+    format!(
+        "Table 15 — simulated distributed time, dense workloads (9 machines)\n{}",
+        table::render(
+            &["Data", "PR HDRF", "PR NE", "PR WindGP", "Tri HDRF", "Tri NE", "Tri WindGP"],
+            &rows
+        )
+    )
+}
+
+/// Table 16: billion-edge stand-ins — TC, PageRank, SSSP (HDRF/NE/WindGP).
+pub fn table16(ctx: &ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for name in BIG {
+        let res = run_workloads(
+            ctx,
+            name,
+            trad_algos(),
+            vec![Workload::PageRank { iters: PR_ITERS }, Workload::Sssp { source: 0 }],
+        );
+        let mut row = vec![name.to_string()];
+        for r in &res {
+            row.push(table::human(r.1));
+        }
+        for r in &res {
+            row.push(table::human(r.2[0]));
+        }
+        for r in &res {
+            row.push(table::human(r.2[1]));
+        }
+        rows.push(row);
+    }
+    format!(
+        "Table 16 — large graphs: TC + simulated distributed time (9 machines)\n{}",
+        table::render(
+            &[
+                "Dataset", "TC HDRF", "TC NE", "TC WindGP", "PR HDRF", "PR NE", "PR WindGP",
+                "SSSP HDRF", "SSSP NE", "SSSP WindGP",
+            ],
+            &rows
+        )
+    )
+}
+
+/// Table 17: [49] / GrapH / WindGP on PageRank + TriangleCount, six graphs.
+pub fn table17(ctx: &ExpCtx) -> String {
+    let algos = || -> Vec<Box<dyn Partitioner + Sync + Send>> {
+        vec![
+            Box::new(crate::baselines::Cpp49),
+            Box::new(crate::baselines::GrapHLike),
+            Box::new(WindGP::default()),
+        ]
+    };
+    let mut rows = Vec::new();
+    for name in SIX {
+        let res = run_workloads(
+            ctx,
+            name,
+            algos(),
+            vec![Workload::PageRank { iters: PR_ITERS }, Workload::Triangle],
+        );
+        let mut row = vec![name.to_string()];
+        for r in &res {
+            row.push(table::human(r.2[0]));
+        }
+        for r in &res {
+            row.push(table::human(r.2[1]));
+        }
+        rows.push(row);
+    }
+    format!(
+        "Table 17 — heterogeneous methods, dense workloads (9 machines)\n{}",
+        table::render(
+            &["Data", "PR [49]", "PR GrapH", "PR WindGP", "Tri [49]", "Tri GrapH", "Tri WindGP"],
+            &rows
+        )
+    )
+}
+
+/// Table 18: partitioning wall time of heterogeneous methods on the large
+/// stand-ins.
+pub fn table18(ctx: &ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for name in BIG {
+        let g = ctx.graph(name);
+        let cluster = ctx.nine_machine_for(name, &g);
+        let algos = hetero_partitioners();
+        let mut row = vec![name.to_string()];
+        for a in &algos {
+            let t0 = Instant::now();
+            let ep = a.partition(&g, &cluster, 1);
+            assert!(ep.is_complete());
+            row.push(format!("{:.3}", t0.elapsed().as_secs_f64()));
+        }
+        rows.push(row);
+    }
+    format!(
+        "Table 18 — heterogeneous methods, partitioning wall time (seconds)\n{}",
+        table::render(&["Dataset", "[49]", "GrapH", "HaSGP", "HAEP", "WindGP"], &rows)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table14_runs_fast() {
+        let ctx = ExpCtx::fast();
+        let out = table14(&ctx);
+        assert!(out.contains("WindGP"));
+        assert!(out.lines().count() >= 8);
+    }
+}

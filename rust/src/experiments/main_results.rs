@@ -1,0 +1,273 @@
+//! §5.2 main results: Table 1 (TC vs distributed time), Figure 8
+//! (technique ablation), Figures 9–11 (per-partition histograms),
+//! Figure 12 (comparison with counterparts), Table 10 (homogeneous
+//! sanity), Table 11 (partitioning wall-time).
+
+use std::time::Instant;
+
+use crate::coordinator::{parallel_map, run_job, Job, Workload};
+use crate::machines::Cluster;
+use crate::partition::{Metrics, Partitioner};
+use crate::util::{ln_safe, table};
+use crate::windgp::{Variant, WindGP};
+
+use super::common::{traditional_partitioners, ExpCtx, SIX};
+
+/// Table 1: TC vs simulated distributed running time for HDRF and NE on
+/// the TW stand-in, 9-machine cluster — the §2.1 "TC is proportional to
+/// runtime" evidence.
+pub fn table1(ctx: &ExpCtx) -> String {
+    let name = "tw-s";
+    let g = ctx.graph(name);
+    let cluster = ctx.nine_machine_for(name, &g);
+    let algos: Vec<Box<dyn Partitioner + Sync + Send>> = vec![
+        Box::new(crate::baselines::Hdrf::default()),
+        Box::new(crate::baselines::NeighborExpansion::default()),
+    ];
+    let rows = parallel_map(algos, |a| {
+        let job = Job {
+            g: &g,
+            cluster: &cluster,
+            partitioner: a.as_ref(),
+            seed: 1,
+            workloads: vec![
+                Workload::PageRank { iters: 10 },
+                Workload::Triangle,
+                Workload::Sssp { source: 0 },
+                Workload::Bfs { source: 0 },
+            ],
+        };
+        let rep = run_job(&job, None);
+        vec![
+            rep.partitioner.to_string(),
+            table::human(rep.cost.tc),
+            table::human(rep.runs[0].sim_time),
+            table::human(rep.runs[1].sim_time),
+            table::human(rep.runs[2].sim_time),
+            table::human(rep.runs[3].sim_time),
+        ]
+    });
+    format!(
+        "Table 1 — TC vs simulated distributed time ({name}, 9-machine cluster)\n{}",
+        table::render(&["Sol.", "TC", "PageRank", "Triangle", "SSSP", "BFS"], &rows)
+    )
+}
+
+/// Figure 8: ablation of the three techniques, ln TC on the six graphs.
+pub fn fig8(ctx: &ExpCtx) -> String {
+    let variants = [Variant::Naive, Variant::Capacity, Variant::BestFirst, Variant::Full];
+    let mut rows = Vec::new();
+    for name in SIX {
+        let g = ctx.graph(name);
+        let cluster = ctx.cluster_for(name, &g);
+        let m = Metrics::new(&g, &cluster);
+        let tcs = parallel_map(variants.to_vec(), |v| {
+            ctx.avg(|seed| {
+                let ep = WindGP::variant(v).partition(&g, &cluster, seed);
+                m.report(&ep).tc
+            })
+        });
+        let mut row = vec![name.to_string()];
+        for tc in &tcs {
+            row.push(format!("{:.2}", ln_safe(*tc)));
+        }
+        // speedup of capacity technique (paper quotes WindGP- / WindGP*)
+        row.push(format!("{:.1}x", tcs[0] / tcs[1].max(1e-9)));
+        rows.push(row);
+    }
+    format!(
+        "Figure 8 — ablation (ln TC; lower is better)\n{}",
+        table::render(
+            &["Graph", "WindGP- (naive)", "WindGP* (+cap)", "WindGP+ (+bfs)", "WindGP (full)", "cap speedup"],
+            &rows
+        )
+    )
+}
+
+/// Figures 9–11: per-partition cost histograms (computation /
+/// communication / total) for WindGP- vs WindGP on CP and LJ stand-ins.
+pub fn fig9_11(ctx: &ExpCtx) -> String {
+    let mut out = String::new();
+    for name in ["cp-s", "lj-s", "co-s"] {
+        let g = ctx.graph(name);
+        let cluster = ctx.cluster_for(name, &g);
+        let m = Metrics::new(&g, &cluster);
+        for (label, variant) in [("WindGP- (naive)", Variant::Naive), ("WindGP (full)", Variant::Full)] {
+            let ep = WindGP::variant(variant).partition(&g, &cluster, 1);
+            let r = m.report(&ep);
+            let p = cluster.len();
+            let stats = |xs: &[f64]| {
+                let mut s = xs.to_vec();
+                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                (
+                    s[0],
+                    s[p / 4],
+                    s[p / 2],
+                    s[3 * p / 4],
+                    s[p - 1],
+                )
+            };
+            let t: Vec<f64> = (0..p).map(|i| r.t(i)).collect();
+            let (cmin, cq1, cmed, cq3, cmax) = stats(&r.t_cal);
+            let (omin, oq1, omed, oq3, omax) = stats(&r.t_com);
+            let (tmin, tq1, tmed, tq3, tmax) = stats(&t);
+            out.push_str(&format!(
+                "{name} / {label}: TC = {}\n{}",
+                table::human(r.tc),
+                table::render(
+                    &["cost", "min", "q1", "median", "q3", "max", "max/min"],
+                    &[
+                        vec![
+                            "calc".into(),
+                            table::human(cmin),
+                            table::human(cq1),
+                            table::human(cmed),
+                            table::human(cq3),
+                            table::human(cmax),
+                            format!("{:.2}", cmax / cmin.max(1.0)),
+                        ],
+                        vec![
+                            "comm".into(),
+                            table::human(omin),
+                            table::human(oq1),
+                            table::human(omed),
+                            table::human(oq3),
+                            table::human(omax),
+                            format!("{:.2}", omax / omin.max(1.0)),
+                        ],
+                        vec![
+                            "total".into(),
+                            table::human(tmin),
+                            table::human(tq1),
+                            table::human(tmed),
+                            table::human(tq3),
+                            table::human(tmax),
+                            format!("{:.2}", tmax / tmin.max(1.0)),
+                        ],
+                    ]
+                )
+            ));
+            out.push('\n');
+        }
+    }
+    format!("Figures 9–11 — per-partition cost distribution\n{out}")
+}
+
+/// Figure 12: WindGP vs METIS / HDRF / NE / EBV, ln TC on six graphs.
+pub fn fig12(ctx: &ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for name in SIX {
+        let g = ctx.graph(name);
+        let cluster = ctx.cluster_for(name, &g);
+        let m = Metrics::new(&g, &cluster);
+        let algos = traditional_partitioners();
+        let tcs: Vec<(String, f64)> = parallel_map(algos, |a| {
+            let tc = ctx.avg(|seed| m.report(&a.partition(&g, &cluster, seed)).tc);
+            (a.name().to_string(), tc)
+        });
+        let mut row = vec![name.to_string()];
+        let windgp_tc = tcs.last().unwrap().1;
+        let best_other = tcs[..tcs.len() - 1]
+            .iter()
+            .map(|(_, t)| *t)
+            .fold(f64::INFINITY, f64::min);
+        for (_, tc) in &tcs {
+            row.push(format!("{:.2}", ln_safe(*tc)));
+        }
+        row.push(format!("{:.2}x", best_other / windgp_tc.max(1e-9)));
+        rows.push(row);
+    }
+    format!(
+        "Figure 12 — comparison with state of the art (ln TC; lower is better)\n{}",
+        table::render(
+            &["Graph", "METIS", "HDRF", "NE", "EBV", "WindGP", "speedup vs best"],
+            &rows
+        )
+    )
+}
+
+/// Table 10: homogeneous 30-machine sanity check on LJ — α', RF, TC and
+/// simulated PageRank time for HDRF / NE / WindGP.
+pub fn table10(ctx: &ExpCtx) -> String {
+    let name = "lj-s";
+    let g = ctx.graph(name);
+    // homogeneous cluster sized like the small hetero one in total memory
+    let hetero = ctx.cluster_for(name, &g);
+    let mem_each = hetero.total_mem() / 30;
+    let cluster = Cluster::homogeneous(30, mem_each);
+    let algos: Vec<Box<dyn Partitioner + Sync + Send>> = vec![
+        Box::new(crate::baselines::Hdrf::default()),
+        Box::new(crate::baselines::NeighborExpansion::default()),
+        Box::new(WindGP::default()),
+    ];
+    let rows = parallel_map(algos, |a| {
+        let job = Job {
+            g: &g,
+            cluster: &cluster,
+            partitioner: a.as_ref(),
+            seed: 1,
+            workloads: vec![Workload::PageRank { iters: 10 }],
+        };
+        let rep = run_job(&job, None);
+        vec![
+            rep.partitioner.to_string(),
+            format!("{:.2}", rep.cost.alpha_prime),
+            format!("{:.2}", rep.cost.rf),
+            table::human(rep.cost.tc),
+            table::human(rep.runs[0].sim_time),
+        ]
+    });
+    format!(
+        "Table 10 — homogeneous 30-machine cluster on {name}\n{}",
+        table::render(&["Alg.", "alpha'", "RF", "TC", "PR time (sim)"], &rows)
+    )
+}
+
+/// Table 11: wall-clock partitioning time of the traditional methods.
+pub fn table11(ctx: &ExpCtx) -> String {
+    let graphs = ["co-s", "lj-s", "po-s", "cp-s", "rn-s"];
+    let algos = traditional_partitioners();
+    let names: Vec<String> = algos.iter().map(|a| a.name().to_string()).collect();
+    let mut rows = Vec::new();
+    for name in graphs {
+        let g = ctx.graph(name);
+        let cluster = ctx.cluster_for(name, &g);
+        let mut row = vec![name.to_string()];
+        for a in &algos {
+            let t0 = Instant::now();
+            let ep = a.partition(&g, &cluster, 1);
+            let dt = t0.elapsed().as_secs_f64();
+            assert!(ep.is_complete());
+            row.push(format!("{dt:.3}"));
+        }
+        rows.push(row);
+    }
+    let mut header = vec!["Dataset"];
+    let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    header.extend(name_refs);
+    format!(
+        "Table 11 — partitioning wall time (seconds, this machine)\n{}",
+        table::render(&header, &rows)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table10_has_three_rows() {
+        let ctx = ExpCtx::fast();
+        let out = table10(&ctx);
+        assert!(out.contains("HDRF") && out.contains("NE") && out.contains("WindGP"));
+    }
+
+    #[test]
+    fn fig8_reports_all_variants() {
+        let ctx = ExpCtx::fast();
+        let out = fig8(&ctx);
+        for v in ["WindGP-", "WindGP*", "WindGP+", "WindGP (full)"] {
+            assert!(out.contains(v), "{v} missing\n{out}");
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§5). See DESIGN.md §5 for the id → paper-artifact map.
+//!
+//! Every experiment is a function `fn(&ExpCtx) -> String` returning the
+//! rendered table; the CLI (`windgp experiment --id <id>`) prints it and
+//! archives it under `results/`. Dataset stand-ins and cluster scaling
+//! are in [`common`] (DESIGN.md §4 substitutions).
+
+pub mod common;
+pub mod distributed;
+pub mod main_results;
+pub mod scaling;
+pub mod tuning;
+
+pub use common::ExpCtx;
+
+use anyhow::{bail, Result};
+
+/// All experiment ids in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "table4", "table5", "table6", "table7", "table8", "table9",
+    "fig8", "fig9", "fig12", "table10", "table11", "fig13", "fig14",
+    "fig15", "table13", "table14", "table15", "table16", "table17",
+    "table18",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<String> {
+    let out = match id {
+        "table1" => main_results::table1(ctx),
+        "table4" => tuning::sweep(ctx, "alpha"),
+        "table5" => tuning::sweep(ctx, "beta"),
+        "table6" => tuning::sweep(ctx, "gamma"),
+        "table7" => tuning::sweep(ctx, "theta"),
+        "table8" => tuning::sweep(ctx, "n0"),
+        "table9" => tuning::sweep(ctx, "t0"),
+        "fig8" => main_results::fig8(ctx),
+        "fig9" | "fig10" | "fig11" => main_results::fig9_11(ctx),
+        "fig12" => main_results::fig12(ctx),
+        "table10" => main_results::table10(ctx),
+        "table11" => main_results::table11(ctx),
+        "fig13" => scaling::fig13(ctx),
+        "fig14" => scaling::fig14(ctx),
+        "fig15" => scaling::fig15(ctx),
+        "table13" => distributed::table13(ctx),
+        "table14" => distributed::table14(ctx),
+        "table15" => distributed::table15(ctx),
+        "table16" => distributed::table16(ctx),
+        "table17" => distributed::table17(ctx),
+        "table18" => distributed::table18(ctx),
+        _ => bail!("unknown experiment id '{id}' (known: {ALL:?})"),
+    };
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_rejected() {
+        let ctx = ExpCtx::fast();
+        assert!(run("nope", &ctx).is_err());
+    }
+
+    /// Smoke-run a cheap experiment end to end at the fast scale.
+    #[test]
+    fn fig12_fast_runs() {
+        let ctx = ExpCtx::fast();
+        let out = run("fig12", &ctx).unwrap();
+        assert!(out.contains("WindGP"));
+        assert!(out.contains("ln TC"));
+    }
+}

@@ -1,0 +1,130 @@
+//! §5.3 scalability: Figure 13 (graph size, Graph500 series), Figure 14
+//! (machine count), Figure 15 (machine-type count).
+
+use crate::coordinator::parallel_map;
+use crate::graph::rmat;
+use crate::machines::Cluster;
+use crate::partition::{Metrics, Partitioner};
+use crate::util::{ln_safe, table};
+use crate::windgp::WindGP;
+
+use super::common::ExpCtx;
+
+/// Figure 13: TC growth over the Graph500 S-series. The paper uses
+/// S18–S25 (4M–523M edges); we run the same recipe shifted down by the
+/// context's shrink + 5 (DESIGN.md §4), reporting ln TC and the fitted
+/// log-log slope per algorithm (paper: WindGP ≤ 1.8, others > 2).
+pub fn fig13(ctx: &ExpCtx) -> String {
+    let base = 13u32.saturating_sub(ctx.shrink);
+    let scales: Vec<u32> = (base..base + 6).collect();
+    let algo_names = ["HDRF", "NE", "EBV", "WindGP"];
+    let mut per_algo_ln: Vec<Vec<f64>> = vec![Vec::new(); algo_names.len()];
+    let mut rows = Vec::new();
+    for &s in &scales {
+        let g = rmat::generate(&rmat::RmatParams::graph500(s, 16), 500 + s as u64);
+        // same configuration as on Twitter (§5.3): 100-machine cluster,
+        // memory scaled to the paper's TW pressure
+        let scale = g.num_edges() as f64 / super::common::paper_edges("tw-s");
+        let cluster = Cluster::heterogeneous_large(20, 80, scale.max(1e-9));
+        let m = Metrics::new(&g, &cluster);
+        let algos: Vec<Box<dyn Partitioner + Sync + Send>> = vec![
+            Box::new(crate::baselines::Hdrf::default()),
+            Box::new(crate::baselines::NeighborExpansion::default()),
+            Box::new(crate::baselines::Ebv::default()),
+            Box::new(WindGP::default()),
+        ];
+        let tcs = parallel_map(algos, |a| m.report(&a.partition(&g, &cluster, 1)).tc);
+        let mut row = vec![format!("S{s} ({} edges)", table::human(g.num_edges() as f64))];
+        for (i, tc) in tcs.iter().enumerate() {
+            per_algo_ln[i].push(ln_safe(*tc));
+            row.push(format!("{:.2}", ln_safe(*tc)));
+        }
+        rows.push(row);
+    }
+    // slope of ln TC vs ln |E| ~ scale*ln2: fit last-first
+    let span = ((scales.len() - 1) as f64) * std::f64::consts::LN_2;
+    let mut slope_row = vec!["slope".to_string()];
+    for lns in &per_algo_ln {
+        slope_row.push(format!("{:.2}", (lns[lns.len() - 1] - lns[0]) / span));
+    }
+    rows.push(slope_row);
+    let mut header = vec!["Scale"];
+    header.extend(algo_names);
+    format!(
+        "Figure 13 — Graph500 scalability (ln TC per scale; final row = log-log slope)\n{}",
+        table::render(&header, &rows)
+    )
+}
+
+/// Figure 14: machine count 30 → 90 (step 15) on the LJ stand-in, 1/3
+/// super machines throughout.
+pub fn fig14(ctx: &ExpCtx) -> String {
+    let name = "lj-s";
+    let g = ctx.graph(name);
+    let algo_names = ["NE", "EBV", "WindGP"];
+    let mut rows = Vec::new();
+    for total in [30usize, 45, 60, 75, 90] {
+        let n_super = total / 3;
+        let scale = g.num_edges() as f64 / super::common::paper_edges(name);
+        // keep *total* memory constant-ish relative to 30 machines so more
+        // machines = more compute spread, as in the paper
+        let cluster = Cluster::heterogeneous_small(n_super, total - n_super, scale * 30.0 / total as f64);
+        let m = Metrics::new(&g, &cluster);
+        let algos: Vec<Box<dyn Partitioner + Sync + Send>> = vec![
+            Box::new(crate::baselines::NeighborExpansion::default()),
+            Box::new(crate::baselines::Ebv::default()),
+            Box::new(WindGP::default()),
+        ];
+        let tcs = parallel_map(algos, |a| m.report(&a.partition(&g, &cluster, 1)).tc);
+        let mut row = vec![format!("{total}")];
+        row.extend(tcs.iter().map(|tc| table::human(*tc)));
+        rows.push(row);
+    }
+    let mut header = vec!["Machines"];
+    header.extend(algo_names);
+    format!(
+        "Figure 14 — scalability with machine count ({name}, TC)\n{}",
+        table::render(&header, &rows)
+    )
+}
+
+/// Figure 15: number of machine types 1 → 6 on LJ with 30 machines.
+pub fn fig15(ctx: &ExpCtx) -> String {
+    let name = "lj-s";
+    let g = ctx.graph(name);
+    let algo_names = ["NE", "EBV", "WindGP"];
+    let scale = g.num_edges() as f64 / super::common::paper_edges(name);
+    let base_mem = (3.0e6 * scale) as u64;
+    let mut rows = Vec::new();
+    for types in 1..=6usize {
+        let cluster = Cluster::with_machine_types(30, types, base_mem);
+        let m = Metrics::new(&g, &cluster);
+        let algos: Vec<Box<dyn Partitioner + Sync + Send>> = vec![
+            Box::new(crate::baselines::NeighborExpansion::default()),
+            Box::new(crate::baselines::Ebv::default()),
+            Box::new(WindGP::default()),
+        ];
+        let tcs = parallel_map(algos, |a| m.report(&a.partition(&g, &cluster, 1)).tc);
+        let mut row = vec![format!("{types}")];
+        row.extend(tcs.iter().map(|tc| table::human(*tc)));
+        rows.push(row);
+    }
+    let mut header = vec!["Types"];
+    header.extend(algo_names);
+    format!(
+        "Figure 15 — scalability with machine-type count ({name}, 30 machines, TC)\n{}",
+        table::render(&header, &rows)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig15_homogeneous_first_row() {
+        let ctx = ExpCtx::fast();
+        let out = fig15(&ctx);
+        assert!(out.lines().count() >= 8, "{out}");
+    }
+}

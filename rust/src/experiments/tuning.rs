@@ -1,0 +1,99 @@
+//! Tables 4–9: hyper-parameter sweeps of WindGP (α, β, γ, θ, N0, T0) on
+//! the six evaluation graphs, reporting TC per setting.
+
+use crate::coordinator::parallel_map;
+use crate::partition::{Metrics, Partitioner};
+use crate::util::table;
+use crate::windgp::{WindGP, WindGPConfig};
+
+use super::common::{ExpCtx, SIX};
+
+/// Parameter grid per table (paper's sweep ranges).
+fn grid(param: &str) -> Vec<f64> {
+    match param {
+        "alpha" | "beta" => (0..10).map(|i| i as f64 * 0.1).collect(),
+        "gamma" => (0..11).map(|i| i as f64 * 0.1).collect(),
+        "theta" => (1..11).map(|i| i as f64 * 0.002).collect(),
+        "n0" | "t0" => (1..10).map(|i| i as f64).collect(),
+        _ => panic!("unknown parameter {param}"),
+    }
+}
+
+fn config_with(param: &str, v: f64) -> WindGPConfig {
+    let mut c = WindGPConfig::default();
+    match param {
+        "alpha" => c.alpha = v,
+        "beta" => c.beta = v,
+        "gamma" => c.gamma = v,
+        "theta" => c.theta = v,
+        "n0" => c.n0 = v as usize,
+        "t0" => c.t0 = v as usize,
+        _ => unreachable!(),
+    }
+    c
+}
+
+pub fn sweep(ctx: &ExpCtx, param: &str) -> String {
+    let values = grid(param);
+    let mut rows = Vec::new();
+    for name in SIX {
+        let g = ctx.graph(name);
+        let cluster = ctx.cluster_for(name, &g);
+        let m = Metrics::new(&g, &cluster);
+        let tcs = parallel_map(values.clone(), |v| {
+            let cfg = config_with(param, v);
+            ctx.avg(|seed| m.report(&WindGP::new(cfg).partition(&g, &cluster, seed)).tc)
+        });
+        let mut row = vec![name.to_string()];
+        row.extend(tcs.iter().map(|tc| table::human(*tc)));
+        rows.push(row);
+    }
+    let header_vals: Vec<String> = values
+        .iter()
+        .map(|v| {
+            if matches!(param, "n0" | "t0") {
+                format!("{}", *v as usize)
+            } else {
+                format!("{v:.3}")
+                    .trim_end_matches('0')
+                    .trim_end_matches('.')
+                    .to_string()
+            }
+        })
+        .collect();
+    let mut header: Vec<&str> = vec!["TC"];
+    header.extend(header_vals.iter().map(|s| s.as_str()));
+    let tno = match param {
+        "alpha" => 4,
+        "beta" => 5,
+        "gamma" => 6,
+        "theta" => 7,
+        "n0" => 8,
+        _ => 9,
+    };
+    format!(
+        "Table {tno} — tuning of {param} in WindGP (TC)\n{}",
+        table::render(&header, &rows)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_match_paper_shapes() {
+        assert_eq!(grid("alpha").len(), 10);
+        assert_eq!(grid("gamma").len(), 11);
+        assert_eq!(grid("theta").len(), 10);
+        assert_eq!(grid("n0").len(), 9);
+    }
+
+    #[test]
+    fn config_with_sets_field() {
+        assert_eq!(config_with("alpha", 0.7).alpha, 0.7);
+        assert_eq!(config_with("n0", 3.0).n0, 3);
+        // untouched fields keep defaults
+        assert_eq!(config_with("alpha", 0.7).beta, 0.3);
+    }
+}

@@ -1,0 +1,248 @@
+//! Compressed-sparse-row graph storage.
+//!
+//! A [`Graph`] owns:
+//!   - a canonical undirected edge array `edges: Vec<(VId, VId)>` with
+//!     `u < v` per edge — edge partitioners operate on edge *ids* into this
+//!     array, which makes partition invariants (`E_i` disjoint, union = E)
+//!     cheap to verify;
+//!   - a CSR adjacency (`offsets`/`neighbors`) with, for every adjacency
+//!     slot, the id of the corresponding canonical edge (`incident`), so
+//!     expansion-based partitioners can walk neighbors and claim edges
+//!     without hashing pairs.
+
+use super::{EId, VId};
+
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// canonical edges, u < v, sorted lexicographically, deduplicated
+    pub edges: Vec<(VId, VId)>,
+    /// CSR row offsets, len = n + 1
+    pub offsets: Vec<u64>,
+    /// CSR column indices, len = 2 * m
+    pub neighbors: Vec<VId>,
+    /// canonical edge id per adjacency slot, len = 2 * m
+    pub incident: Vec<EId>,
+}
+
+impl Graph {
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Neighbor slice of `u`.
+    #[inline]
+    pub fn neighbors(&self, u: VId) -> &[VId] {
+        let (a, b) = (self.offsets[u as usize], self.offsets[u as usize + 1]);
+        &self.neighbors[a as usize..b as usize]
+    }
+
+    /// Canonical-edge ids incident to `u`, parallel to [`Self::neighbors`].
+    #[inline]
+    pub fn incident_edges(&self, u: VId) -> &[EId] {
+        let (a, b) = (self.offsets[u as usize], self.offsets[u as usize + 1]);
+        &self.incident[a as usize..b as usize]
+    }
+
+    #[inline]
+    pub fn degree(&self, u: VId) -> usize {
+        (self.offsets[u as usize + 1] - self.offsets[u as usize]) as usize
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as VId)
+            .map(|u| self.degree(u))
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            return 0.0;
+        }
+        2.0 * self.num_edges() as f64 / self.num_vertices() as f64
+    }
+
+    /// Endpoints of canonical edge `e` (u < v).
+    #[inline]
+    pub fn edge(&self, e: EId) -> (VId, VId) {
+        self.edges[e as usize]
+    }
+
+    /// Degree array (convenience for partitioners that score by degree).
+    pub fn degrees(&self) -> Vec<u32> {
+        (0..self.num_vertices() as VId)
+            .map(|u| self.degree(u) as u32)
+            .collect()
+    }
+
+    /// Quick structural sanity check used by tests and after IO.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_vertices() as VId;
+        if self.neighbors.len() != 2 * self.edges.len() {
+            return Err("csr size mismatch".into());
+        }
+        for (i, &(u, v)) in self.edges.iter().enumerate() {
+            if u >= v {
+                return Err(format!("edge {i} not canonical: ({u},{v})"));
+            }
+            if v >= n {
+                return Err(format!("edge {i} out of range"));
+            }
+        }
+        for u in 0..n {
+            for (&nb, &e) in self.neighbors(u).iter().zip(self.incident_edges(u)) {
+                let (a, b) = self.edge(e);
+                let ok = (a == u && b == nb) || (a == nb && b == u);
+                if !ok {
+                    return Err(format!("incident id mismatch at vertex {u}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Accumulates raw (possibly duplicated / self-looped / unsorted) edges and
+/// finalizes into a canonical [`Graph`].
+#[derive(Default)]
+pub struct GraphBuilder {
+    edges: Vec<(VId, VId)>,
+    max_v: VId,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(m: usize) -> Self {
+        Self { edges: Vec::with_capacity(m), max_v: 0 }
+    }
+
+    #[inline]
+    pub fn add_edge(&mut self, u: VId, v: VId) {
+        if u == v {
+            return; // drop self-loops
+        }
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        self.max_v = self.max_v.max(b);
+        self.edges.push((a, b));
+    }
+
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Sort + dedup + build CSR. `min_vertices` lets callers force a vertex
+    /// count (e.g. generators that may leave trailing isolated vertices).
+    pub fn build(mut self, min_vertices: usize) -> Graph {
+        self.edges.sort_unstable();
+        self.edges.dedup();
+        let n = (self.max_v as usize + 1).max(min_vertices).max(1);
+        let m = self.edges.len();
+
+        let mut deg = vec![0u64; n];
+        for &(u, v) in &self.edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0u64; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut cursor = offsets.clone();
+        let mut neighbors = vec![0 as VId; 2 * m];
+        let mut incident = vec![0 as EId; 2 * m];
+        for (e, &(u, v)) in self.edges.iter().enumerate() {
+            let cu = cursor[u as usize] as usize;
+            neighbors[cu] = v;
+            incident[cu] = e as EId;
+            cursor[u as usize] += 1;
+            let cv = cursor[v as usize] as usize;
+            neighbors[cv] = u;
+            incident[cv] = e as EId;
+            cursor[v as usize] += 1;
+        }
+        Graph { edges: self.edges, offsets, neighbors, incident }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        let mut b = GraphBuilder::new();
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 0);
+        b.build(0)
+    }
+
+    #[test]
+    fn builds_triangle() {
+        let g = triangle();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn dedup_and_selfloop() {
+        let mut b = GraphBuilder::new();
+        b.add_edge(0, 1);
+        b.add_edge(1, 0); // duplicate reversed
+        b.add_edge(2, 2); // self loop dropped
+        b.add_edge(1, 2);
+        let g = b.build(0);
+        assert_eq!(g.num_edges(), 2);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn incident_ids_roundtrip() {
+        let g = triangle();
+        for u in 0..3u32 {
+            for (&nb, &e) in g.neighbors(u).iter().zip(g.incident_edges(u)) {
+                let (a, b) = g.edge(e);
+                assert!((a, b) == (u.min(nb), u.max(nb)));
+            }
+        }
+    }
+
+    #[test]
+    fn min_vertices_pads_isolated() {
+        let mut b = GraphBuilder::new();
+        b.add_edge(0, 1);
+        let g = b.build(5);
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.degree(4), 0);
+    }
+
+    #[test]
+    fn stats() {
+        let g = triangle();
+        assert_eq!(g.max_degree(), 2);
+        assert!((g.avg_degree() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new().build(0);
+        assert_eq!(g.num_vertices(), 1);
+        assert_eq!(g.num_edges(), 0);
+        g.validate().unwrap();
+    }
+}

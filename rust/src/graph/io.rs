@@ -1,0 +1,159 @@
+//! Edge-list IO in the SNAP text format the paper's datasets ship in:
+//! one `u v` pair per line, `#` comments, arbitrary whitespace. A simple
+//! little-endian binary cache (`.bin`) avoids re-parsing large generated
+//! stand-ins between runs.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Graph, GraphBuilder, VId};
+
+/// Read a SNAP-format text edge list.
+pub fn read_edge_list<P: AsRef<Path>>(path: P) -> Result<Graph> {
+    let f = File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut b = GraphBuilder::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (u, v) = match (it.next(), it.next()) {
+            (Some(u), Some(v)) => (u, v),
+            _ => bail!("line {}: expected 'u v'", lineno + 1),
+        };
+        let u: VId = u.parse().with_context(|| format!("line {}", lineno + 1))?;
+        let v: VId = v.parse().with_context(|| format!("line {}", lineno + 1))?;
+        b.add_edge(u, v);
+    }
+    Ok(b.build(0))
+}
+
+/// Write a graph back out as a SNAP text edge list.
+pub fn write_edge_list<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
+    let f = File::create(&path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# undirected graph: {} vertices, {} edges", g.num_vertices(), g.num_edges())?;
+    for &(u, v) in &g.edges {
+        writeln!(w, "{u}\t{v}")?;
+    }
+    Ok(())
+}
+
+const BIN_MAGIC: u32 = 0x5747_4201; // "WGB\x01"
+
+/// Binary cache: magic, n, m, then m (u32,u32) pairs.
+pub fn write_binary<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
+    let f = File::create(&path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&BIN_MAGIC.to_le_bytes())?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    for &(u, v) in &g.edges {
+        w.write_all(&u.to_le_bytes())?;
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
+    let f = File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let mut u32buf = [0u8; 4];
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u32buf)?;
+    if u32::from_le_bytes(u32buf) != BIN_MAGIC {
+        bail!("bad magic in {}", path.as_ref().display());
+    }
+    r.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let m = u64::from_le_bytes(u64buf) as usize;
+    let mut b = GraphBuilder::with_capacity(m);
+    for _ in 0..m {
+        r.read_exact(&mut u32buf)?;
+        let u = u32::from_le_bytes(u32buf);
+        r.read_exact(&mut u32buf)?;
+        let v = u32::from_le_bytes(u32buf);
+        b.add_edge(u, v);
+    }
+    Ok(b.build(n))
+}
+
+/// Load `path` if it exists, else generate via `gen` and cache to `path`.
+pub fn load_or_generate<P: AsRef<Path>, F: FnOnce() -> Graph>(path: P, gen: F) -> Result<Graph> {
+    if path.as_ref().exists() {
+        return read_binary(&path);
+    }
+    let g = gen();
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    write_binary(&g, &path)?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat;
+
+    #[test]
+    fn text_roundtrip() {
+        let g = rmat::generate(&rmat::RmatParams::graph500(8, 4), 1);
+        let dir = std::env::temp_dir().join("windgp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.txt");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p).unwrap();
+        assert_eq!(g.edges, g2.edges);
+    }
+
+    #[test]
+    fn binary_roundtrip_preserves_isolated() {
+        let g = rmat::generate(&rmat::RmatParams::graph500(8, 4), 2);
+        let dir = std::env::temp_dir().join("windgp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.bin");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_eq!(g.edges, g2.edges);
+        assert_eq!(g.num_vertices(), g2.num_vertices());
+    }
+
+    #[test]
+    fn parses_comments_and_whitespace() {
+        let dir = std::env::temp_dir().join("windgp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.txt");
+        std::fs::write(&p, "# header\n% alt comment\n0 1\n  1\t2  \n\n2 0\n").unwrap();
+        let g = read_edge_list(&p).unwrap();
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let dir = std::env::temp_dir().join("windgp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.txt");
+        std::fs::write(&p, "0\n").unwrap();
+        assert!(read_edge_list(&p).is_err());
+    }
+
+    #[test]
+    fn load_or_generate_caches() {
+        let dir = std::env::temp_dir().join("windgp_io_test_cache");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = dir.join("x.bin");
+        let g1 = load_or_generate(&p, || rmat::generate(&rmat::RmatParams::graph500(7, 4), 3)).unwrap();
+        assert!(p.exists());
+        let g2 = load_or_generate(&p, || panic!("should hit cache")).unwrap();
+        assert_eq!(g1.edges, g2.edges);
+    }
+}

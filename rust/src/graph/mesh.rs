@@ -1,0 +1,73 @@
+//! 2-D mesh generator — the stand-in for roadNet-CA (RN): mesh-like,
+//! naturally balanced, tiny maximum degree (paper Table 3: RN max degree 8,
+//! avg degree ~2.8). We generate a W×H grid with a fraction of diagonal
+//! shortcuts and random edge deletions, which matches road networks'
+//! near-planar, low-degree structure.
+
+use crate::util::SplitMix64;
+
+use super::{Graph, GraphBuilder, VId};
+
+#[derive(Clone, Debug)]
+pub struct MeshParams {
+    pub width: usize,
+    pub height: usize,
+    /// probability a grid edge is kept (road networks have holes)
+    pub keep: f64,
+    /// probability of adding a diagonal per cell (bumps max degree to ~8)
+    pub diagonal: f64,
+}
+
+impl MeshParams {
+    pub fn road_like(width: usize, height: usize) -> Self {
+        Self { width, height, keep: 0.92, diagonal: 0.1 }
+    }
+}
+
+pub fn generate(p: &MeshParams, seed: u64) -> Graph {
+    let (w, h) = (p.width, p.height);
+    let id = |x: usize, y: usize| -> VId { (y * w + x) as VId };
+    let mut rng = SplitMix64::new(seed ^ 0x4D45_5348); // "MESH"
+    let mut b = GraphBuilder::with_capacity(2 * w * h);
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w && rng.next_f64() < p.keep {
+                b.add_edge(id(x, y), id(x + 1, y));
+            }
+            if y + 1 < h && rng.next_f64() < p.keep {
+                b.add_edge(id(x, y), id(x, y + 1));
+            }
+            if x + 1 < w && y + 1 < h && rng.next_f64() < p.diagonal {
+                b.add_edge(id(x, y), id(x + 1, y + 1));
+            }
+        }
+    }
+    b.build(w * h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let p = MeshParams::road_like(32, 32);
+        assert_eq!(generate(&p, 1).edges, generate(&p, 1).edges);
+    }
+
+    #[test]
+    fn low_max_degree() {
+        let g = generate(&MeshParams::road_like(64, 64), 2);
+        assert!(g.max_degree() <= 8, "max degree {}", g.max_degree());
+        assert!(g.avg_degree() > 2.0 && g.avg_degree() < 6.0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn full_grid_edge_count() {
+        let g = generate(&MeshParams { width: 10, height: 10, keep: 1.0, diagonal: 0.0 }, 3);
+        // 2 * w * (h-1) grid edges for square grid: 9*10 + 10*9 = 180
+        assert_eq!(g.num_edges(), 180);
+        assert_eq!(g.num_vertices(), 100);
+    }
+}

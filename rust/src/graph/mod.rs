@@ -1,0 +1,21 @@
+//! Graph substrate: CSR storage, edge-list IO (SNAP text format), and the
+//! synthetic generators used as dataset stand-ins (R-MAT for the scale-free
+//! SNAP graphs and Graph500 series, 2-D mesh for roadNet-CA).
+//!
+//! Graphs are undirected simple graphs (Definition 1): `uv == vu`, no
+//! self-loops, no parallel edges. Vertices are dense `u32` ids.
+
+pub mod csr;
+pub mod gen;
+pub mod io;
+pub mod mesh;
+pub mod rmat;
+
+pub use csr::{Graph, GraphBuilder};
+
+/// Vertex id type. u32 keeps CSR arrays compact for the multi-hundred-M-edge
+/// stand-ins.
+pub type VId = u32;
+
+/// Edge id: index into the canonical edge array of a [`Graph`].
+pub type EId = u32;

@@ -1,0 +1,125 @@
+//! R-MAT generator (Chakrabarti et al. [8]) with Graph500 parameters —
+//! the stand-in for the paper's SNAP scale-free graphs and the Figure 13
+//! Graph500 S-series (§5.3: edgefactor 16, a=0.57 b=0.19 c=0.19 d=0.05,
+//! "scale" = log2(|V|)).
+
+use crate::util::SplitMix64;
+
+use super::{Graph, GraphBuilder, VId};
+
+#[derive(Clone, Debug)]
+pub struct RmatParams {
+    /// log2 of the number of vertices
+    pub scale: u32,
+    /// directed edge attempts per vertex (Graph500 edgefactor = 16;
+    /// dedup + self-loop removal yields slightly fewer undirected edges)
+    pub edge_factor: u32,
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// noise applied per recursion level to avoid degenerate staircases
+    pub noise: f64,
+}
+
+impl RmatParams {
+    /// Graph500 reference parameters.
+    pub fn graph500(scale: u32, edge_factor: u32) -> Self {
+        Self { scale, edge_factor, a: 0.57, b: 0.19, c: 0.19, noise: 0.1 }
+    }
+
+    /// Milder skew, for stand-ins of moderately skewed graphs (cit-Patents).
+    pub fn mild(scale: u32, edge_factor: u32) -> Self {
+        Self { scale, edge_factor, a: 0.45, b: 0.22, c: 0.22, noise: 0.05 }
+    }
+}
+
+/// Generate an undirected simple graph. Deterministic in `seed`.
+pub fn generate(p: &RmatParams, seed: u64) -> Graph {
+    let n: u64 = 1u64 << p.scale;
+    let m_attempts = n * p.edge_factor as u64;
+    let mut rng = SplitMix64::new(seed ^ 0x524D_4154); // "RMAT"
+    let mut b = GraphBuilder::with_capacity(m_attempts as usize);
+    for _ in 0..m_attempts {
+        let (u, v) = sample_edge(p, n, &mut rng);
+        b.add_edge(u as VId, v as VId);
+    }
+    b.build(n as usize)
+}
+
+#[inline]
+fn sample_edge(p: &RmatParams, n: u64, rng: &mut SplitMix64) -> (u64, u64) {
+    let (mut u, mut v) = (0u64, 0u64);
+    let mut span = n;
+    let (mut a, mut bb, mut c) = (p.a, p.b, p.c);
+    while span > 1 {
+        span >>= 1;
+        let r = rng.next_f64();
+        if r < a {
+            // top-left
+        } else if r < a + bb {
+            v += span;
+        } else if r < a + bb + c {
+            u += span;
+        } else {
+            u += span;
+            v += span;
+        }
+        // multiplicative noise keeps the degree distribution smooth
+        if p.noise > 0.0 {
+            let na = a * (1.0 + p.noise * (rng.next_f64() - 0.5));
+            let nb = bb * (1.0 + p.noise * (rng.next_f64() - 0.5));
+            let nc = c * (1.0 + p.noise * (rng.next_f64() - 0.5));
+            let nd = (1.0 - a - bb - c) * (1.0 + p.noise * (rng.next_f64() - 0.5));
+            let s = na + nb + nc + nd;
+            a = na / s;
+            bb = nb / s;
+            c = nc / s;
+        }
+    }
+    (u, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let p = RmatParams::graph500(10, 8);
+        let g1 = generate(&p, 5);
+        let g2 = generate(&p, 5);
+        assert_eq!(g1.edges, g2.edges);
+        let g3 = generate(&p, 6);
+        assert_ne!(g1.edges, g3.edges);
+    }
+
+    #[test]
+    fn size_in_expected_range() {
+        let p = RmatParams::graph500(12, 16);
+        let g = generate(&p, 1);
+        assert_eq!(g.num_vertices(), 1 << 12);
+        // dedup/self-loop removal loses some attempts, but most survive
+        let attempts = (1u64 << 12) * 16;
+        assert!(g.num_edges() as u64 > attempts / 2, "m = {}", g.num_edges());
+        assert!(g.num_edges() as u64 <= attempts);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn skewed_degrees() {
+        // Graph500 params must produce a heavy tail: max degree far above avg.
+        let g = generate(&RmatParams::graph500(13, 16), 2);
+        let avg = g.avg_degree();
+        let max = g.max_degree() as f64;
+        assert!(max > 10.0 * avg, "max {max} avg {avg}");
+    }
+
+    #[test]
+    fn mild_params_less_skewed() {
+        let s = generate(&RmatParams::graph500(12, 16), 3);
+        let m = generate(&RmatParams::mild(12, 16), 3);
+        let ratio_s = s.max_degree() as f64 / s.avg_degree();
+        let ratio_m = m.max_degree() as f64 / m.avg_degree();
+        assert!(ratio_m < ratio_s, "mild {ratio_m} vs g500 {ratio_s}");
+    }
+}

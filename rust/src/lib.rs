@@ -1,0 +1,33 @@
+//! # WindGP — Efficient Graph Partitioning on Heterogeneous Machines
+//!
+//! A full reproduction of Zeng et al., "WindGP: Efficient Graph
+//! Partitioning on Heterogenous Machines" (2024), as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: the WindGP partitioner (capacity preprocessing,
+//!   best-first expansion, subgraph-local search), every baseline
+//!   partitioner from the paper's evaluation, the heterogeneous-cluster
+//!   model, a BSP distributed-execution simulator with the Definition-4
+//!   cost clock, the PJRT runtime bridge, and the experiment harness that
+//!   regenerates every table and figure.
+//! - **L2/L1 (python/, build-time only)**: JAX superstep models calling
+//!   Pallas ELL kernels, AOT-lowered to HLO text artifacts executed from
+//!   the simulator hot path via the `xla` crate (PJRT CPU).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for measured
+//! results vs the paper.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod experiments;
+pub mod graph;
+pub mod machines;
+pub mod partition;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+pub mod windgp;
+
+pub use graph::{Graph, GraphBuilder};
+pub use machines::{Cluster, Machine};
+pub use partition::{CostReport, CostTracker, EdgePartition, Metrics, Partitioner};

@@ -1,0 +1,222 @@
+//! Machine and cluster model (Definition 4 + §2.1 quantification).
+//!
+//! A machine is the quadruple `(M_i, C_i^node, C_i^edge, C_i^com)`:
+//! memory size, per-node compute cost, per-edge compute cost, per-replica
+//! communication cost — all dimensionless relative rates. A [`Cluster`]
+//! additionally fixes the global per-element memory occupation `M^node`,
+//! `M^edge` (the paper sets 1 and 2: a 32-bit id per node, two per edge).
+
+mod quantify;
+
+pub use quantify::{quantify, RawMachine};
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// One machine's resources (Definition 4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Machine {
+    /// memory size M_i (units of M^node)
+    pub mem: u64,
+    /// computing cost of a node, C_i^node
+    pub c_node: f64,
+    /// computing cost of an edge, C_i^edge
+    pub c_edge: f64,
+    /// communication cost of one replica sync, C_i^com
+    pub c_com: f64,
+}
+
+impl Machine {
+    pub const fn new(mem: u64, c_node: f64, c_edge: f64, c_com: f64) -> Self {
+        Self { mem, c_node, c_edge, c_com }
+    }
+}
+
+/// A cluster: the machine list plus per-element memory occupation.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub machines: Vec<Machine>,
+    /// M^node — memory units per vertex (paper: 1)
+    pub m_node: u64,
+    /// M^edge — memory units per edge (paper: 2 = two 32-bit endpoints)
+    pub m_edge: u64,
+}
+
+impl Cluster {
+    pub fn new(machines: Vec<Machine>) -> Self {
+        Self { machines, m_node: 1, m_edge: 2 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.machines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.machines.is_empty()
+    }
+
+    /// §5.1 default heterogeneous cluster for "large graphs": `n_super`
+    /// super machines (1e8, 10, 15, 15) + `n_normal` normal (3e7, 5, 10, 10),
+    /// with memories scaled by `mem_scale` so stand-in graphs at reduced
+    /// size keep the same memory-pressure ratio as the paper's originals.
+    pub fn heterogeneous_large(n_super: usize, n_normal: usize, mem_scale: f64) -> Self {
+        let mut machines = Vec::with_capacity(n_super + n_normal);
+        for _ in 0..n_super {
+            machines.push(Machine::new((1e8 * mem_scale) as u64, 10.0, 15.0, 15.0));
+        }
+        for _ in 0..n_normal {
+            machines.push(Machine::new((3e7 * mem_scale) as u64, 5.0, 10.0, 10.0));
+        }
+        Cluster::new(machines)
+    }
+
+    /// §5.1 default cluster for "other datasets": super (1e7,10,15,15),
+    /// normal (3e6,5,10,10).
+    pub fn heterogeneous_small(n_super: usize, n_normal: usize, mem_scale: f64) -> Self {
+        let mut machines = Vec::with_capacity(n_super + n_normal);
+        for _ in 0..n_super {
+            machines.push(Machine::new((1e7 * mem_scale) as u64, 10.0, 15.0, 15.0));
+        }
+        for _ in 0..n_normal {
+            machines.push(Machine::new((3e6 * mem_scale) as u64, 5.0, 10.0, 10.0));
+        }
+        Cluster::new(machines)
+    }
+
+    /// Homogeneous cluster of `p` identical machines sized to hold the
+    /// graph with balance slack `alpha'` (for §5.2 Table 10 comparisons).
+    pub fn homogeneous(p: usize, mem_each: u64) -> Self {
+        Cluster::new(vec![Machine::new(mem_each, 5.0, 10.0, 10.0); p])
+    }
+
+    /// The §5.4 real 9-machine cluster: 3 super (big memory, slower
+    /// network per §5.4's inverted configuration) + 6 normal.
+    pub fn nine_machine(mem_scale: f64) -> Self {
+        let mut machines = Vec::new();
+        for _ in 0..3 {
+            // super: 6GB, 4 slower cores, 100Gbps
+            machines.push(Machine::new((6e7 * mem_scale) as u64, 8.0, 12.0, 15.0));
+        }
+        for _ in 0..6 {
+            // normal: 2GB, 8 cores, 150Gbps
+            machines.push(Machine::new((2e7 * mem_scale) as u64, 4.0, 8.0, 10.0));
+        }
+        Cluster::new(machines)
+    }
+
+    /// Total memory across machines (feasibility pre-check).
+    pub fn total_mem(&self) -> u64 {
+        self.machines.iter().map(|m| m.mem).sum()
+    }
+
+    /// §5.3 "number of machine types" experiment: split `p` machines into
+    /// `types` groups with progressively bigger memory / costs; types=1 is
+    /// the homogeneous baseline.
+    pub fn with_machine_types(p: usize, types: usize, base_mem: u64) -> Self {
+        assert!(types >= 1);
+        let mut machines = Vec::with_capacity(p);
+        for i in 0..p {
+            let t = i * types / p; // group index 0..types
+            let f = 1.0 + t as f64; // type t is (t+1)x bigger/costlier
+            machines.push(Machine::new(
+                (base_mem as f64 * f) as u64,
+                5.0 * f,
+                10.0 * f,
+                10.0 * f,
+            ));
+        }
+        Cluster::new(machines)
+    }
+
+    /// Parse a cluster config JSON file:
+    /// `{"m_node":1, "m_edge":2, "machines":[{"mem":1e7,"c_node":10,"c_edge":15,"c_com":15,"count":10}, ...]}`
+    pub fn from_json_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut machines = Vec::new();
+        let list = j
+            .get("machines")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing 'machines' array"))?;
+        for m in list {
+            let mem = m.get("mem").and_then(Json::as_u64).ok_or_else(|| anyhow!("mem"))?;
+            let c_node = m.get("c_node").and_then(Json::as_f64).unwrap_or(0.0);
+            let c_edge = m.get("c_edge").and_then(Json::as_f64).ok_or_else(|| anyhow!("c_edge"))?;
+            let c_com = m.get("c_com").and_then(Json::as_f64).ok_or_else(|| anyhow!("c_com"))?;
+            let count = m.get("count").and_then(Json::as_usize).unwrap_or(1);
+            for _ in 0..count {
+                machines.push(Machine::new(mem, c_node, c_edge, c_com));
+            }
+        }
+        if machines.is_empty() {
+            bail!("cluster config has no machines");
+        }
+        let mut c = Cluster::new(machines);
+        if let Some(v) = j.get("m_node").and_then(Json::as_u64) {
+            c.m_node = v;
+        }
+        if let Some(v) = j.get("m_edge").and_then(Json::as_u64) {
+            c.m_edge = v;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_clusters_match_paper() {
+        let c = Cluster::heterogeneous_large(20, 80, 1.0);
+        assert_eq!(c.len(), 100);
+        assert_eq!(c.machines[0], Machine::new(100_000_000, 10.0, 15.0, 15.0));
+        assert_eq!(c.machines[99], Machine::new(30_000_000, 5.0, 10.0, 10.0));
+        let c = Cluster::heterogeneous_small(10, 20, 1.0);
+        assert_eq!(c.len(), 30);
+        assert_eq!(c.machines[0].mem, 10_000_000);
+    }
+
+    #[test]
+    fn machine_types_monotone() {
+        let c = Cluster::with_machine_types(30, 3, 1_000_000);
+        assert_eq!(c.len(), 30);
+        assert!(c.machines[0].mem < c.machines[29].mem);
+        // 1-type cluster is homogeneous
+        let h = Cluster::with_machine_types(10, 1, 500);
+        assert!(h.machines.iter().all(|m| *m == h.machines[0]));
+    }
+
+    #[test]
+    fn json_config_roundtrip() {
+        let cfg = r#"{
+            "m_node": 1, "m_edge": 2,
+            "machines": [
+                {"mem": 10000000, "c_node": 10, "c_edge": 15, "c_com": 15, "count": 2},
+                {"mem": 3000000, "c_node": 5, "c_edge": 10, "c_com": 10}
+            ]
+        }"#;
+        let c = Cluster::from_json(cfg).unwrap();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.machines[0].mem, 10_000_000);
+        assert_eq!(c.machines[2].c_com, 10.0);
+    }
+
+    #[test]
+    fn json_config_rejects_empty() {
+        assert!(Cluster::from_json(r#"{"machines": []}"#).is_err());
+        assert!(Cluster::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn total_mem_sums() {
+        let c = Cluster::homogeneous(4, 100);
+        assert_eq!(c.total_mem(), 400);
+    }
+}

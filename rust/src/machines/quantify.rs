@@ -1,0 +1,79 @@
+//! §2.1 "Quantification of Machine Resource": convert raw measured machine
+//! characteristics (memory GB, float-op microbenchmark time, 4KB-message
+//! round-trip time) into the dimensionless Definition-4 rates, normalizing
+//! by gcds exactly as the paper prescribes:
+//!
+//!   M_i        = 1e9 * Mem_i / (4 * gcd({Mem_i}))
+//!   C_i^node   = FPTime_i  / gcd({FPTime_i})
+//!   C_i^edge   = FPTime'_i / gcd({FPTime_i})   (two ops: sum + multiply)
+//!   C_i^com    = COTime_i  / (1024 * gcd({FPTime_i}))
+
+use crate::util::gcd_all;
+
+use super::{Cluster, Machine};
+
+/// Raw benchmark numbers for one machine, before normalization.
+#[derive(Clone, Copy, Debug)]
+pub struct RawMachine {
+    /// memory in GB
+    pub mem_gb: u64,
+    /// averaged float-op time (ns) — one multiply
+    pub fp_time_ns: u64,
+    /// averaged two-op time (ns) — sum + multiply (the per-edge work)
+    pub fp2_time_ns: u64,
+    /// averaged 4KB send/recv time (ns)
+    pub co_time_ns: u64,
+}
+
+/// Normalize a set of raw machines into a [`Cluster`] per §2.1.
+pub fn quantify(raw: &[RawMachine]) -> Cluster {
+    let mems: Vec<u64> = raw.iter().map(|r| r.mem_gb).collect();
+    let fps: Vec<u64> = raw.iter().map(|r| r.fp_time_ns).collect();
+    let g_mem = gcd_all(&mems);
+    let g_fp = gcd_all(&fps) as f64;
+    let machines = raw
+        .iter()
+        .map(|r| Machine {
+            mem: (1_000_000_000u64 / (4 * g_mem)) * r.mem_gb,
+            c_node: r.fp_time_ns as f64 / g_fp,
+            c_edge: r.fp2_time_ns as f64 / g_fp,
+            c_com: r.co_time_ns as f64 / (1024.0 * g_fp),
+        })
+        .collect();
+    Cluster::new(machines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizes_by_gcd() {
+        let raw = [
+            RawMachine { mem_gb: 6, fp_time_ns: 10, fp2_time_ns: 15, co_time_ns: 10240 },
+            RawMachine { mem_gb: 2, fp_time_ns: 5, fp2_time_ns: 10, co_time_ns: 5120 },
+        ];
+        let c = quantify(&raw);
+        // gcd mem = 2 -> M = 1e9/(4*2) * GB
+        assert_eq!(c.machines[0].mem, 125_000_000 * 6);
+        assert_eq!(c.machines[1].mem, 125_000_000 * 2);
+        // gcd fp = 5
+        assert_eq!(c.machines[0].c_node, 2.0);
+        assert_eq!(c.machines[1].c_node, 1.0);
+        assert_eq!(c.machines[0].c_edge, 3.0);
+        // com: 10240 / (1024 * 5) = 2
+        assert_eq!(c.machines[0].c_com, 2.0);
+        assert_eq!(c.machines[1].c_com, 1.0);
+    }
+
+    #[test]
+    fn homogeneous_raw_gives_unit_rates() {
+        let raw = [RawMachine { mem_gb: 4, fp_time_ns: 7, fp2_time_ns: 14, co_time_ns: 7168 }; 3];
+        let c = quantify(&raw);
+        for m in &c.machines {
+            assert_eq!(m.c_node, 1.0);
+            assert_eq!(m.c_edge, 2.0);
+            assert_eq!(m.c_com, 1.0);
+        }
+    }
+}

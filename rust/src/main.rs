@@ -1,0 +1,259 @@
+//! `windgp` CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled arg parsing; the offline crate set has no clap):
+//!   experiment --id <id|all> [--seeds N] [--shrink K] [--out DIR]
+//!   partition  --graph NAME --algo NAME [--seed N] [--cluster FILE]
+//!   simulate   --graph NAME --algo NAME --workload W [--pjrt] [--iters N]
+//!   gen        --graph NAME --out FILE
+//!   smoke      (PJRT artifact round-trip check)
+//!   list       (datasets, algorithms, experiments)
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use windgp::coordinator::{run_job, Job, Workload};
+use windgp::experiments::{self, common, ExpCtx};
+use windgp::machines::Cluster;
+use windgp::partition::Metrics;
+use windgp::runtime::{PjrtBackend, PjrtEngine};
+use windgp::simulator::ell::PureBackend;
+use windgp::util::table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = &args[i];
+        if !k.starts_with("--") {
+            bail!("expected --flag, got '{k}'");
+        }
+        let key = k.trim_start_matches("--").to_string();
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            m.insert(key, args[i + 1].clone());
+            i += 2;
+        } else {
+            m.insert(key, "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(m)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "experiment" => cmd_experiment(&flags),
+        "partition" => cmd_partition(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "gen" => cmd_gen(&flags),
+        "smoke" => cmd_smoke(),
+        "list" => cmd_list(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try 'help')"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "windgp — WindGP graph partitioning on heterogeneous machines\n\
+         \n\
+         USAGE: windgp <command> [--flags]\n\
+         \n\
+         COMMANDS:\n\
+           experiment --id <id|all> [--seeds N] [--shrink K] [--out DIR]\n\
+                      regenerate a paper table/figure (see DESIGN.md §5)\n\
+           partition  --graph NAME --algo NAME [--seed N] [--cluster FILE]\n\
+                      partition a dataset and print the quality report\n\
+           simulate   --graph NAME --algo NAME --workload pagerank|sssp|bfs|triangle|wcc\n\
+                      [--pjrt] [--iters N]  run a distributed workload\n\
+           gen        --graph NAME --out FILE   write a stand-in dataset\n\
+           smoke      verify the PJRT artifact round trip\n\
+           list       datasets / algorithms / experiment ids"
+    );
+}
+
+fn ctx_from(flags: &HashMap<String, String>) -> Result<ExpCtx> {
+    let seeds: u64 = flags.get("seeds").map_or(Ok(3), |s| s.parse())?;
+    let shrink: u32 = flags.get("shrink").map_or(Ok(0), |s| s.parse())?;
+    Ok(ExpCtx::new(seeds, shrink))
+}
+
+fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
+    let id = flags.get("id").ok_or_else(|| anyhow!("--id required"))?;
+    let ctx = ctx_from(flags)?;
+    let out_dir = flags.get("out").cloned().unwrap_or_else(|| "results".into());
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    std::fs::create_dir_all(&out_dir)?;
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let text = experiments::run(id, &ctx)?;
+        println!("{text}");
+        println!("[{id} finished in {:.1}s]\n", t0.elapsed().as_secs_f64());
+        std::fs::write(format!("{out_dir}/{id}.txt"), &text)?;
+    }
+    Ok(())
+}
+
+fn graph_and_cluster(
+    flags: &HashMap<String, String>,
+    ctx: &ExpCtx,
+) -> Result<(std::sync::Arc<windgp::Graph>, Cluster)> {
+    let name = flags.get("graph").ok_or_else(|| anyhow!("--graph required"))?;
+    let g = if std::path::Path::new(name).exists() {
+        std::sync::Arc::new(windgp::graph::io::read_edge_list(name)?)
+    } else {
+        ctx.graph(name)
+    };
+    let cluster = match flags.get("cluster") {
+        Some(path) => Cluster::from_json_file(path)?,
+        None => ctx.cluster_for(name, &g),
+    };
+    Ok((g, cluster))
+}
+
+fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
+    let ctx = ctx_from(flags)?;
+    let (g, cluster) = graph_and_cluster(flags, &ctx)?;
+    let algo_name = flags.get("algo").ok_or_else(|| anyhow!("--algo required"))?;
+    let algo = common::partitioner_by_name(algo_name)
+        .ok_or_else(|| anyhow!("unknown algorithm '{algo_name}' (see 'list')"))?;
+    let seed: u64 = flags.get("seed").map_or(Ok(1), |s| s.parse())?;
+    let t0 = std::time::Instant::now();
+    let ep = algo.partition(&g, &cluster, seed);
+    let secs = t0.elapsed().as_secs_f64();
+    let r = Metrics::new(&g, &cluster).report(&ep);
+    println!(
+        "{} on |V|={} |E|={} p={}: {:.3}s",
+        algo.name(),
+        g.num_vertices(),
+        g.num_edges(),
+        cluster.len(),
+        secs
+    );
+    println!(
+        "{}",
+        table::render(
+            &["metric", "value"],
+            &[
+                vec!["TC".into(), table::human(r.tc)],
+                vec!["RF".into(), format!("{:.3}", r.rf)],
+                vec!["alpha'".into(), format!("{:.3}", r.alpha_prime)],
+                vec!["complete".into(), format!("{}", ep.is_complete())],
+                vec!["feasible".into(), format!("{}", r.all_feasible())],
+                vec![
+                    "max/min edges".into(),
+                    format!(
+                        "{}/{}",
+                        r.e_count.iter().max().unwrap(),
+                        r.e_count.iter().min().unwrap()
+                    ),
+                ],
+            ]
+        )
+    );
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let ctx = ctx_from(flags)?;
+    let (g, cluster) = graph_and_cluster(flags, &ctx)?;
+    let algo_name = flags.get("algo").map(String::as_str).unwrap_or("windgp");
+    let algo = common::partitioner_by_name(algo_name)
+        .ok_or_else(|| anyhow!("unknown algorithm '{algo_name}'"))?;
+    let iters: usize = flags.get("iters").map_or(Ok(10), |s| s.parse())?;
+    let w = match flags.get("workload").map(String::as_str).unwrap_or("pagerank") {
+        "pagerank" => Workload::PageRank { iters },
+        "sssp" => Workload::Sssp { source: 0 },
+        "bfs" => Workload::Bfs { source: 0 },
+        "triangle" => Workload::Triangle,
+        "wcc" => Workload::Wcc,
+        other => bail!("unknown workload '{other}'"),
+    };
+    let job = Job {
+        g: &g,
+        cluster: &cluster,
+        partitioner: algo.as_ref(),
+        seed: flags.get("seed").map_or(Ok(1), |s| s.parse())?,
+        workloads: vec![w],
+    };
+    let use_pjrt = flags.contains_key("pjrt");
+    let rep = if use_pjrt {
+        let engine = PjrtEngine::load(PjrtEngine::default_dir())?;
+        let mut be = PjrtBackend::new(engine);
+        let rep = run_job(&job, Some(&mut be));
+        println!(
+            "backend: PJRT ({} kernel calls, {} pure fallbacks)",
+            be.pjrt_calls, be.fallback_calls
+        );
+        rep
+    } else {
+        run_job(&job, Some(&mut PureBackend))
+    };
+    println!(
+        "{} partition: TC={} ({:.3}s wall)",
+        rep.partitioner,
+        table::human(rep.cost.tc),
+        rep.partition_secs
+    );
+    for r in &rep.runs {
+        println!(
+            "{}: simulated time {} over {} supersteps",
+            r.algorithm,
+            table::human(r.sim_time),
+            r.supersteps
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen(flags: &HashMap<String, String>) -> Result<()> {
+    let ctx = ctx_from(flags)?;
+    let name = flags.get("graph").ok_or_else(|| anyhow!("--graph required"))?;
+    let out = flags.get("out").ok_or_else(|| anyhow!("--out required"))?;
+    let g = ctx.graph(name);
+    windgp::graph::io::write_edge_list(&g, out)?;
+    println!("wrote {} ({} vertices, {} edges)", out, g.num_vertices(), g.num_edges());
+    Ok(())
+}
+
+fn cmd_smoke() -> Result<()> {
+    let mut engine = PjrtEngine::load(PjrtEngine::default_dir())?;
+    println!(
+        "artifacts: {:?} models={:?}",
+        engine.artifact_dir,
+        engine.models()
+    );
+    engine.smoke_test()?;
+    println!("PJRT round trip OK");
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("datasets: {:?} + {:?}", common::SIX, &common::BIG[1..]);
+    println!(
+        "algorithms: hash dbh greedy hdrf ne ebv metis cpp49 graph-h hasgp haep windgp windgp- windgp* windgp+"
+    );
+    println!("experiments: {:?}", experiments::ALL);
+    Ok(())
+}

@@ -1,0 +1,267 @@
+//! From-scratch metric computation (Definition 4, RF, balance ratio).
+//!
+//! These are the *reference* implementations: O(|E| + |V|·|S|) full passes
+//! used by experiments for reporting and by tests to validate the
+//! incremental [`super::CostTracker`]. Formulae:
+//!
+//!   T_i^cal = C_i^node |V_i| + C_i^edge |E_i|
+//!   T_i^com = Σ_{v∈V_i} Σ_{j≠i, v∈V_j} (C_i^com + C_j^com)
+//!   TC      = max_i (T_i^cal + T_i^com)
+//!   RF      = Σ_u |S(u)| / |V(G)|        (u over vertices with deg > 0)
+//!   α'      = max_i |E_i| / (|E|/p)
+
+use crate::graph::Graph;
+use crate::machines::Cluster;
+
+use super::{EdgePartition, UNASSIGNED};
+
+/// Per-machine cost breakdown + aggregates.
+#[derive(Clone, Debug)]
+pub struct CostReport {
+    pub v_count: Vec<u64>,
+    pub e_count: Vec<u64>,
+    pub t_cal: Vec<f64>,
+    pub t_com: Vec<f64>,
+    /// TC = max_i (t_cal[i] + t_com[i])
+    pub tc: f64,
+    /// replication factor
+    pub rf: f64,
+    /// homogeneous balance ratio α'
+    pub alpha_prime: f64,
+    /// memory feasibility per machine
+    pub feasible: Vec<bool>,
+}
+
+impl CostReport {
+    pub fn t(&self, i: usize) -> f64 {
+        self.t_cal[i] + self.t_com[i]
+    }
+
+    pub fn all_feasible(&self) -> bool {
+        self.feasible.iter().all(|&f| f)
+    }
+
+    pub fn total_com(&self) -> f64 {
+        self.t_com.iter().sum()
+    }
+}
+
+/// Metric engine over a fixed (graph, cluster) pair.
+pub struct Metrics<'a> {
+    pub g: &'a Graph,
+    pub cluster: &'a Cluster,
+}
+
+impl<'a> Metrics<'a> {
+    pub fn new(g: &'a Graph, cluster: &'a Cluster) -> Self {
+        Self { g, cluster }
+    }
+
+    /// Replica sets S(u): sorted partition lists per vertex.
+    pub fn replica_sets(&self, ep: &EdgePartition) -> Vec<Vec<u32>> {
+        let mut sets = vec![Vec::new(); self.g.num_vertices()];
+        for (e, &a) in ep.assignment.iter().enumerate() {
+            if a == UNASSIGNED {
+                continue;
+            }
+            let (u, v) = self.g.edge(e as u32);
+            for w in [u, v] {
+                let s = &mut sets[w as usize];
+                if let Err(pos) = s.binary_search(&a) {
+                    s.insert(pos, a);
+                }
+            }
+        }
+        sets
+    }
+
+    /// Full Definition-4 report.
+    pub fn report(&self, ep: &EdgePartition) -> CostReport {
+        let p = ep.p;
+        let sets = self.replica_sets(ep);
+        let mut v_count = vec![0u64; p];
+        let mut e_count = vec![0u64; p];
+        for &a in &ep.assignment {
+            if a != UNASSIGNED {
+                e_count[a as usize] += 1;
+            }
+        }
+        let mut t_com = vec![0f64; p];
+        let mut rf_sum = 0u64;
+        let mut rf_verts = 0u64;
+        for (u, s) in sets.iter().enumerate() {
+            if self.g.degree(u as u32) > 0 {
+                rf_verts += 1;
+                rf_sum += s.len() as u64;
+            }
+            if s.is_empty() {
+                continue;
+            }
+            for &i in s {
+                v_count[i as usize] += 1;
+            }
+            if s.len() > 1 {
+                let csum: f64 = s.iter().map(|&i| self.cluster.machines[i as usize].c_com).sum();
+                let k = s.len() as f64;
+                for &i in s {
+                    let ci = self.cluster.machines[i as usize].c_com;
+                    // Σ_{j≠i} (C_i + C_j) = (k-1)·C_i + (csum − C_i)
+                    t_com[i as usize] += (k - 1.0) * ci + (csum - ci);
+                }
+            }
+        }
+        let mut t_cal = vec![0f64; p];
+        let mut feasible = vec![true; p];
+        for i in 0..p {
+            let m = &self.cluster.machines[i];
+            t_cal[i] = m.c_node * v_count[i] as f64 + m.c_edge * e_count[i] as f64;
+            let mem_used = self.cluster.m_node * v_count[i] + self.cluster.m_edge * e_count[i];
+            feasible[i] = mem_used <= m.mem;
+        }
+        let tc = (0..p)
+            .map(|i| t_cal[i] + t_com[i])
+            .fold(0.0f64, f64::max);
+        let rf = if rf_verts == 0 { 0.0 } else { rf_sum as f64 / rf_verts as f64 };
+        let m_edges = ep.assignment.len().max(1) as f64;
+        let alpha_prime = e_count.iter().copied().max().unwrap_or(0) as f64 / (m_edges / p as f64);
+        CostReport { v_count, e_count, t_cal, t_com, tc, rf, alpha_prime, feasible }
+    }
+
+    /// Pairwise replica counts n_{i,j} (Algorithm 7's selection criterion).
+    pub fn replica_pairs(&self, ep: &EdgePartition) -> Vec<Vec<u64>> {
+        let p = ep.p;
+        let sets = self.replica_sets(ep);
+        let mut n = vec![vec![0u64; p]; p];
+        for s in &sets {
+            for (ai, &i) in s.iter().enumerate() {
+                for &j in &s[ai + 1..] {
+                    n[i as usize][j as usize] += 1;
+                    n[j as usize][i as usize] += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// The §4 Map-Reduce objective: max_i(max_j T_j^cal + T_i^com).
+    pub fn map_reduce_objective(&self, ep: &EdgePartition) -> f64 {
+        let r = self.report(ep);
+        let max_cal = r.t_cal.iter().copied().fold(0.0f64, f64::max);
+        r.t_com
+            .iter()
+            .map(|tc| max_cal + tc)
+            .fold(0.0f64, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::machines::Machine;
+
+    /// The paper's §2.1 running example: Figure 2(b) graph
+    /// a=0,b=1,c=2,d=3,e=4,f=5; edges ab,bc,cf,de,ef; machines
+    /// (7,0,1,1), (7,0,2,2), (5,0,1,1); M^node=1, M^edge=2.
+    fn running_example() -> (Graph, Cluster) {
+        let mut b = GraphBuilder::new();
+        b.add_edge(0, 1); // ab -> e0
+        b.add_edge(1, 2); // bc -> e1
+        b.add_edge(2, 5); // cf -> e2
+        b.add_edge(3, 4); // de -> e3
+        b.add_edge(4, 5); // ef -> e4
+        let g = b.build(6);
+        let cluster = Cluster::new(vec![
+            Machine::new(7, 0.0, 1.0, 1.0),
+            Machine::new(7, 0.0, 2.0, 2.0),
+            Machine::new(5, 0.0, 1.0, 1.0),
+        ]);
+        (g, cluster)
+    }
+
+    #[test]
+    fn paper_running_example_tc7() {
+        // {ab,bc} on M0, {de,ef} on M1, {cf} on M2 -> TC = 7, RF = 1.33
+        let (g, cluster) = running_example();
+        // canonical edge order after sort: (0,1)=ab, (1,2)=bc, (2,5)=cf, (3,4)=de, (4,5)=ef
+        let ep = EdgePartition::from_assignment(3, vec![0, 0, 2, 1, 1]);
+        let m = Metrics::new(&g, &cluster);
+        let r = m.report(&ep);
+        // computing costs: {2,?}: M0 has 2 edges * 1 = 2; M1: 2 edges * 2 = 4; M2: 1 edge * 1 = 1
+        assert_eq!(r.t_cal, vec![2.0, 4.0, 1.0]);
+        // communication: c is in {M0, M2}: each pays C_i + C_j = 1+1 = 2.
+        // f is in {M1, M2}: M1 pays 2+1=3, M2 pays 3.
+        assert_eq!(r.t_com, vec![2.0, 3.0, 2.0 + 3.0]);
+        // T = {4, 7, 6} -> TC = 7
+        assert_eq!(r.tc, 7.0);
+        // RF: 6 non-isolated vertices, replicas = 8 -> 8/6 = 1.33
+        assert!((r.rf - 8.0 / 6.0).abs() < 1e-9);
+        assert!(r.all_feasible());
+    }
+
+    #[test]
+    fn paper_running_example_tc10() {
+        // {ab} on M0, {bc,cf} on M1, {de,ef} on M2 -> TC = 10, RF unchanged
+        let (g, cluster) = running_example();
+        let ep = EdgePartition::from_assignment(3, vec![0, 1, 1, 2, 2]);
+        let m = Metrics::new(&g, &cluster);
+        let r = m.report(&ep);
+        assert_eq!(r.tc, 10.0);
+        assert!((r.rf - 8.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn homogeneous_com_matches_rf_identity() {
+        // With C_com = 1 everywhere, each vertex with |S| = k contributes
+        // Σ_{i∈S} Σ_{j≠i} (C_i + C_j) = 2·k·(k−1) to Σ_i T_i^com — the
+        // paper's Θ(RF²) equivalence in §2.1.
+        let (g, _) = running_example();
+        let cluster = Cluster::new(vec![Machine::new(100, 0.0, 1.0, 1.0); 3]);
+        let ep = EdgePartition::from_assignment(3, vec![0, 0, 2, 1, 1]);
+        let m = Metrics::new(&g, &cluster);
+        let r = m.report(&ep);
+        let sets = m.replica_sets(&ep);
+        let expect: f64 = sets
+            .iter()
+            .map(|s| 2.0 * (s.len() * s.len().saturating_sub(1)) as f64)
+            .sum();
+        assert!((r.total_com() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replica_pairs_symmetric() {
+        let (g, cluster) = running_example();
+        let ep = EdgePartition::from_assignment(3, vec![0, 0, 2, 1, 1]);
+        let m = Metrics::new(&g, &cluster);
+        let n = m.replica_pairs(&ep);
+        for i in 0..3 {
+            assert_eq!(n[i][i], 0);
+            for j in 0..3 {
+                assert_eq!(n[i][j], n[j][i]);
+            }
+        }
+        // c shared by (0,2); f shared by (1,2)
+        assert_eq!(n[0][2], 1);
+        assert_eq!(n[1][2], 1);
+        assert_eq!(n[0][1], 0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let (g, _) = running_example();
+        let cluster = Cluster::new(vec![Machine::new(3, 0.0, 1.0, 1.0); 3]);
+        // 2 edges + 3 vertices on M0 needs 2*2+3 = 7 > 3
+        let ep = EdgePartition::from_assignment(3, vec![0, 0, 2, 1, 1]);
+        let r = Metrics::new(&g, &cluster).report(&ep);
+        assert!(!r.all_feasible());
+    }
+
+    #[test]
+    fn unassigned_edges_ignored() {
+        let (g, cluster) = running_example();
+        let ep = EdgePartition::unassigned(&g, 3);
+        let r = Metrics::new(&g, &cluster).report(&ep);
+        assert_eq!(r.tc, 0.0);
+        assert_eq!(r.rf, 0.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Edge-partition representation + quality metrics (Definition 3/4).
+//!
+//! An [`EdgePartition`] maps every canonical edge id of a [`Graph`] to a
+//! machine index (partition `i` runs on machine `i`, as the paper fixes).
+//! [`CostTracker`] maintains all Definition-4 bookkeeping — per-machine
+//! |V_i|, |E_i|, T_cal, T_com, replica tables S(u), pairwise replica counts
+//! n_{i,j} — **incrementally** under edge moves, which is what makes the
+//! SLS post-processing (§3.4) O(p·θ|E|) per round instead of O(p|E|) per
+//! candidate move.
+
+pub mod metrics;
+pub mod tracker;
+
+pub use metrics::{CostReport, Metrics};
+pub use tracker::CostTracker;
+
+use crate::graph::{EId, Graph};
+use crate::machines::Cluster;
+
+/// Partition id type; `UNASSIGNED` marks edges not (yet) in any partition.
+pub type PartId = u32;
+pub const UNASSIGNED: PartId = u32::MAX;
+
+/// An edge-centric partition: `assignment[e]` is the machine owning edge e.
+#[derive(Clone, Debug)]
+pub struct EdgePartition {
+    pub p: usize,
+    pub assignment: Vec<PartId>,
+}
+
+impl EdgePartition {
+    pub fn unassigned(g: &Graph, p: usize) -> Self {
+        Self { p, assignment: vec![UNASSIGNED; g.num_edges()] }
+    }
+
+    pub fn from_assignment(p: usize, assignment: Vec<PartId>) -> Self {
+        Self { p, assignment }
+    }
+
+    #[inline]
+    pub fn part_of(&self, e: EId) -> PartId {
+        self.assignment[e as usize]
+    }
+
+    pub fn num_assigned(&self) -> usize {
+        self.assignment.iter().filter(|&&a| a != UNASSIGNED).count()
+    }
+
+    /// Definition 3 invariants: every edge in exactly one partition with a
+    /// valid id. (Disjointness is structural: one slot per edge.)
+    pub fn is_complete(&self) -> bool {
+        self.assignment.iter().all(|&a| a != UNASSIGNED && (a as usize) < self.p)
+    }
+
+    /// Edge ids per partition (for the simulator / exports).
+    pub fn edges_by_part(&self) -> Vec<Vec<EId>> {
+        let mut out = vec![Vec::new(); self.p];
+        for (e, &a) in self.assignment.iter().enumerate() {
+            if a != UNASSIGNED {
+                out[a as usize].push(e as EId);
+            }
+        }
+        out
+    }
+}
+
+/// The interface every partitioner in this library implements.
+pub trait Partitioner {
+    /// Short name used in experiment tables ("WindGP", "NE", "HDRF", ...).
+    fn name(&self) -> &'static str;
+
+    /// Produce a p-edge partition of `g` for `cluster` (p = cluster.len()).
+    /// `seed` controls any internal randomness; implementations must be
+    /// deterministic given (g, cluster, seed).
+    fn partition(&self, g: &Graph, cluster: &Cluster, seed: u64) -> EdgePartition;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn completeness() {
+        let g = gen::clique(4); // 6 edges
+        let mut ep = EdgePartition::unassigned(&g, 2);
+        assert!(!ep.is_complete());
+        assert_eq!(ep.num_assigned(), 0);
+        for e in 0..6 {
+            ep.assignment[e] = (e % 2) as PartId;
+        }
+        assert!(ep.is_complete());
+        let by = ep.edges_by_part();
+        assert_eq!(by[0].len(), 3);
+        assert_eq!(by[1].len(), 3);
+    }
+
+    #[test]
+    fn out_of_range_incomplete() {
+        let _g = gen::path(3);
+        let ep = EdgePartition::from_assignment(2, vec![0, 5]);
+        assert!(!ep.is_complete());
+    }
+}

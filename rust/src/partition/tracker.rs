@@ -1,0 +1,380 @@
+//! Incremental Definition-4 cost bookkeeping under edge moves.
+//!
+//! [`CostTracker`] owns, per partition: |V_i|, |E_i|, T_i^cal, T_i^com; per
+//! vertex: the replica list with *partial degrees* `(part, deg_i(v))`; plus
+//! the pairwise replica-count matrix n_{i,j}. All are updated in
+//! O(|S(u)| + |S(v)|) per edge add/remove, which turns the SLS inner loop
+//! (§3.4) from "recompute TC for every candidate" into cheap deltas.
+//!
+//! Invariant (validated by tests + the proptest-style suite in
+//! rust/tests): after any sequence of add/remove, every aggregate equals
+//! the from-scratch [`super::Metrics::report`] on the same assignment.
+
+use crate::graph::{EId, Graph};
+use crate::machines::Cluster;
+
+use super::{CostReport, EdgePartition, Metrics, PartId, UNASSIGNED};
+
+pub struct CostTracker<'a> {
+    g: &'a Graph,
+    cluster: &'a Cluster,
+    pub p: usize,
+    /// current assignment (same encoding as EdgePartition)
+    pub assignment: Vec<PartId>,
+    /// per-vertex replica list: (partition, local degree), sorted by part
+    replicas: Vec<Vec<(PartId, u32)>>,
+    pub v_count: Vec<u64>,
+    pub e_count: Vec<u64>,
+    t_com: Vec<f64>,
+    /// pairwise replica counts (flattened p×p, symmetric, 0 diagonal)
+    nij: Vec<u64>,
+}
+
+impl<'a> CostTracker<'a> {
+    /// Bulk construction: one pass to build the replica tables, then one
+    /// pass per vertex for the T_com / n_{i,j} aggregates — O(|E| + Σ|S|²)
+    /// instead of paying the incremental retract/apply per edge (which is
+    /// quadratic in |S| for power-law hubs replicated on ~p machines).
+    pub fn new(g: &'a Graph, cluster: &'a Cluster, ep: &EdgePartition) -> Self {
+        let p = ep.p;
+        let n = g.num_vertices();
+        let mut t = Self {
+            g,
+            cluster,
+            p,
+            assignment: ep.assignment.clone(),
+            replicas: vec![Vec::new(); n],
+            v_count: vec![0; p],
+            e_count: vec![0; p],
+            t_com: vec![0.0; p],
+            nij: vec![0; p * p],
+        };
+        for (e, &a) in ep.assignment.iter().enumerate() {
+            if a == UNASSIGNED {
+                continue;
+            }
+            t.e_count[a as usize] += 1;
+            let (u, v) = g.edge(e as EId);
+            for w in [u, v] {
+                let s = &mut t.replicas[w as usize];
+                match s.binary_search_by_key(&a, |&(q, _)| q) {
+                    Ok(pos) => s[pos].1 += 1,
+                    Err(pos) => {
+                        s.insert(pos, (a, 1));
+                        t.v_count[a as usize] += 1;
+                    }
+                }
+            }
+        }
+        for v in 0..n as u32 {
+            t.apply_vertex(v);
+        }
+        t
+    }
+
+    #[inline]
+    fn c_com(&self, i: PartId) -> f64 {
+        self.cluster.machines[i as usize].c_com
+    }
+
+    /// T_i^com contribution of a replica set `s` to member `i`:
+    /// (k−1)·C_i + Σ_{j∈s} C_j − C_i.
+    #[inline]
+    fn com_term(&self, s: &[(PartId, u32)], i: PartId) -> f64 {
+        let k = s.len() as f64;
+        if k < 2.0 {
+            return 0.0;
+        }
+        let csum: f64 = s.iter().map(|&(j, _)| self.c_com(j)).sum();
+        let ci = self.c_com(i);
+        (k - 1.0) * ci + (csum - ci)
+    }
+
+    /// Called when vertex `v` is about to gain/lose partition membership:
+    /// retract v's current contribution to T_com of every member partition
+    /// and to n_{i,j}. `apply` re-adds.
+    fn retract_vertex(&mut self, v: u32) {
+        let s = std::mem::take(&mut self.replicas[v as usize]);
+        for &(i, _) in &s {
+            self.t_com[i as usize] -= self.com_term(&s, i);
+        }
+        for (ai, &(i, _)) in s.iter().enumerate() {
+            for &(j, _) in &s[ai + 1..] {
+                self.nij[i as usize * self.p + j as usize] -= 1;
+                self.nij[j as usize * self.p + i as usize] -= 1;
+            }
+        }
+        self.replicas[v as usize] = s;
+    }
+
+    fn apply_vertex(&mut self, v: u32) {
+        let s = std::mem::take(&mut self.replicas[v as usize]);
+        for &(i, _) in &s {
+            self.t_com[i as usize] += self.com_term(&s, i);
+        }
+        for (ai, &(i, _)) in s.iter().enumerate() {
+            for &(j, _) in &s[ai + 1..] {
+                self.nij[i as usize * self.p + j as usize] += 1;
+                self.nij[j as usize * self.p + i as usize] += 1;
+            }
+        }
+        self.replicas[v as usize] = s;
+    }
+
+    fn bump_vertex(&mut self, v: u32, part: PartId, delta: i32) {
+        // Fast path: T_com and n_{i,j} depend only on the *membership set*
+        // S(v), not the partial degrees — only pay retract/apply when the
+        // set actually changes (insert or drop of a partition).
+        let pos = self.replicas[v as usize].binary_search_by_key(&part, |&(p, _)| p);
+        match pos {
+            Ok(pos) => {
+                let d = (self.replicas[v as usize][pos].1 as i32 + delta) as u32;
+                if d == 0 {
+                    self.retract_vertex(v);
+                    self.replicas[v as usize].remove(pos);
+                    self.v_count[part as usize] -= 1;
+                    self.apply_vertex(v);
+                } else {
+                    self.replicas[v as usize][pos].1 = d;
+                }
+            }
+            Err(pos) => {
+                debug_assert!(delta > 0, "removing vertex {v} from absent partition {part}");
+                self.retract_vertex(v);
+                self.replicas[v as usize].insert(pos, (part, delta as u32));
+                self.v_count[part as usize] += 1;
+                self.apply_vertex(v);
+            }
+        }
+    }
+
+    /// Assign a currently-unassigned edge to `part`.
+    pub fn add_edge(&mut self, e: EId, part: PartId) {
+        debug_assert_eq!(self.assignment[e as usize], UNASSIGNED);
+        self.assignment[e as usize] = part;
+        self.e_count[part as usize] += 1;
+        let (u, v) = self.g.edge(e);
+        self.bump_vertex(u, part, 1);
+        self.bump_vertex(v, part, 1);
+    }
+
+    /// Unassign an edge from its current partition.
+    pub fn remove_edge(&mut self, e: EId) -> PartId {
+        let part = self.assignment[e as usize];
+        debug_assert_ne!(part, UNASSIGNED);
+        self.assignment[e as usize] = UNASSIGNED;
+        self.e_count[part as usize] -= 1;
+        let (u, v) = self.g.edge(e);
+        self.bump_vertex(u, part, -1);
+        self.bump_vertex(v, part, -1);
+        part
+    }
+
+    /// Move an edge between partitions.
+    pub fn move_edge(&mut self, e: EId, to: PartId) {
+        if self.assignment[e as usize] == to {
+            return;
+        }
+        self.remove_edge(e);
+        self.add_edge(e, to);
+    }
+
+    #[inline]
+    pub fn t_cal(&self, i: usize) -> f64 {
+        let m = &self.cluster.machines[i];
+        m.c_node * self.v_count[i] as f64 + m.c_edge * self.e_count[i] as f64
+    }
+
+    #[inline]
+    pub fn t_com(&self, i: usize) -> f64 {
+        self.t_com[i]
+    }
+
+    #[inline]
+    pub fn t(&self, i: usize) -> f64 {
+        self.t_cal(i) + self.t_com(i)
+    }
+
+    pub fn tc(&self) -> f64 {
+        (0..self.p).map(|i| self.t(i)).fold(0.0, f64::max)
+    }
+
+    /// The §4 Map-Reduce objective (GraphX/Giraph routine of Figure 7):
+    /// communication only starts after *all* machines finish computing, so
+    /// the cost is `max_i (max_j T_j^cal + T_i^com)`.
+    pub fn map_reduce_cost(&self) -> f64 {
+        let max_cal = (0..self.p).map(|i| self.t_cal(i)).fold(0.0, f64::max);
+        (0..self.p)
+            .map(|i| max_cal + self.t_com(i))
+            .fold(0.0, f64::max)
+    }
+
+    /// Memory headroom of machine i (negative = infeasible).
+    pub fn mem_slack(&self, i: usize) -> i64 {
+        let used = self.cluster.m_node * self.v_count[i] + self.cluster.m_edge * self.e_count[i];
+        self.cluster.machines[i].mem as i64 - used as i64
+    }
+
+    /// Would adding one edge with `new_vertices` fresh endpoints fit?
+    pub fn edge_fits(&self, i: usize, new_vertices: u64) -> bool {
+        self.mem_slack(i) >= (self.cluster.m_edge + self.cluster.m_node * new_vertices) as i64
+    }
+
+    /// How many endpoints of `e` are new to partition `i`?
+    pub fn new_endpoints(&self, e: EId, i: PartId) -> u64 {
+        let (u, v) = self.g.edge(e);
+        let mut n = 0;
+        for w in [u, v] {
+            if !self.has_vertex(w, i) {
+                n += 1;
+            }
+        }
+        n
+    }
+
+    #[inline]
+    pub fn has_vertex(&self, v: u32, part: PartId) -> bool {
+        self.replicas[v as usize]
+            .binary_search_by_key(&part, |&(p, _)| p)
+            .is_ok()
+    }
+
+    /// Partitions containing vertex `v` (S(v)), sorted.
+    pub fn parts_of(&self, v: u32) -> Vec<PartId> {
+        self.replicas[v as usize].iter().map(|&(p, _)| p).collect()
+    }
+
+    /// deg_i(v): degree of v inside partition i.
+    pub fn part_degree(&self, v: u32, part: PartId) -> u32 {
+        self.replicas[v as usize]
+            .binary_search_by_key(&part, |&(p, _)| p)
+            .map(|pos| self.replicas[v as usize][pos].1)
+            .unwrap_or(0)
+    }
+
+    #[inline]
+    pub fn nij(&self, i: usize, j: usize) -> u64 {
+        self.nij[i * self.p + j]
+    }
+
+    /// Snapshot to an EdgePartition.
+    pub fn to_partition(&self) -> EdgePartition {
+        EdgePartition { p: self.p, assignment: self.assignment.clone() }
+    }
+
+    /// From-scratch report (for validation / final output).
+    pub fn report(&self) -> CostReport {
+        Metrics::new(self.g, self.cluster).report(&self.to_partition())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, Graph};
+    use crate::machines::Machine;
+    use crate::util::SplitMix64;
+
+    fn check_consistency(g: &Graph, cluster: &Cluster, t: &CostTracker) {
+        let ep = t.to_partition();
+        let r = Metrics::new(g, cluster).report(&ep);
+        for i in 0..t.p {
+            assert_eq!(t.v_count[i], r.v_count[i], "v_count[{i}]");
+            assert_eq!(t.e_count[i], r.e_count[i], "e_count[{i}]");
+            assert!((t.t_com(i) - r.t_com[i]).abs() < 1e-6, "t_com[{i}]: {} vs {}", t.t_com(i), r.t_com[i]);
+            assert!((t.t_cal(i) - r.t_cal[i]).abs() < 1e-6);
+        }
+        assert!((t.tc() - r.tc).abs() < 1e-6);
+        let pairs = Metrics::new(g, cluster).replica_pairs(&ep);
+        for i in 0..t.p {
+            for j in 0..t.p {
+                assert_eq!(t.nij(i, j), pairs[i][j], "nij[{i}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn random_moves_stay_consistent() {
+        let g = gen::erdos_renyi(60, 200, 3);
+        let cluster = Cluster::new(vec![
+            Machine::new(1_000_000, 1.0, 2.0, 1.0),
+            Machine::new(500_000, 2.0, 3.0, 2.0),
+            Machine::new(250_000, 0.5, 1.0, 4.0),
+            Machine::new(1_000_000, 1.0, 1.0, 1.0),
+        ]);
+        let mut ep = EdgePartition::unassigned(&g, 4);
+        let mut rng = SplitMix64::new(11);
+        for e in 0..g.num_edges() {
+            ep.assignment[e] = rng.next_usize(4) as PartId;
+        }
+        let mut t = CostTracker::new(&g, &cluster, &ep);
+        check_consistency(&g, &cluster, &t);
+        // random move/remove/add churn
+        for step in 0..500 {
+            let e = rng.next_usize(g.num_edges()) as EId;
+            match rng.next_usize(3) {
+                0 => {
+                    if t.assignment[e as usize] != UNASSIGNED {
+                        t.move_edge(e, rng.next_usize(4) as PartId);
+                    }
+                }
+                1 => {
+                    if t.assignment[e as usize] != UNASSIGNED {
+                        t.remove_edge(e);
+                    }
+                }
+                _ => {
+                    if t.assignment[e as usize] == UNASSIGNED {
+                        t.add_edge(e, rng.next_usize(4) as PartId);
+                    }
+                }
+            }
+            if step % 100 == 0 {
+                check_consistency(&g, &cluster, &t);
+            }
+        }
+        check_consistency(&g, &cluster, &t);
+    }
+
+    #[test]
+    fn part_degree_tracks() {
+        let g = gen::star(5); // center 0
+        let cluster = Cluster::new(vec![Machine::new(100, 0.0, 1.0, 1.0); 2]);
+        let ep = EdgePartition::from_assignment(2, vec![0, 0, 1, 1]);
+        let t = CostTracker::new(&g, &cluster, &ep);
+        assert_eq!(t.part_degree(0, 0), 2);
+        assert_eq!(t.part_degree(0, 1), 2);
+        assert_eq!(t.parts_of(0), vec![0, 1]);
+        assert_eq!(t.nij(0, 1), 1); // only the center is shared
+    }
+
+    #[test]
+    fn mem_slack_and_fits() {
+        let g = gen::path(3); // 2 edges
+        let cluster = Cluster::new(vec![Machine::new(7, 0.0, 1.0, 1.0); 1]);
+        let ep = EdgePartition::unassigned(&g, 1);
+        let mut t = CostTracker::new(&g, &cluster, &ep);
+        assert_eq!(t.mem_slack(0), 7);
+        assert!(t.edge_fits(0, 2)); // 2 + 2*1 = 4 <= 7
+        t.add_edge(0, 0); // edge (0,1): 2 vertices + 1 edge = 4
+        assert_eq!(t.mem_slack(0), 3);
+        assert!(!t.edge_fits(0, 2)); // needs 4 > 3
+        assert!(t.edge_fits(0, 1)); // needs 3 <= 3
+    }
+
+    #[test]
+    fn move_is_remove_plus_add() {
+        let g = gen::clique(4);
+        let cluster = Cluster::new(vec![Machine::new(1000, 1.0, 1.0, 1.0); 3]);
+        let mut ep = EdgePartition::unassigned(&g, 3);
+        for e in 0..6 {
+            ep.assignment[e] = (e % 3) as PartId;
+        }
+        let mut t = CostTracker::new(&g, &cluster, &ep);
+        let before = t.tc();
+        t.move_edge(0, 2);
+        t.move_edge(0, 0); // move back
+        assert!((t.tc() - before).abs() < 1e-9);
+        check_consistency(&g, &cluster, &t);
+    }
+}

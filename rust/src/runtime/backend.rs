@@ -1,0 +1,218 @@
+//! [`PjrtBackend`]: the simulator's compute backend that runs per-machine
+//! superstep kernels through the AOT PJRT executables.
+//!
+//! Hot-path design (§Perf):
+//!  - executables compiled once per (model, N, K) variant (engine cache);
+//!  - static operands (cols / vals / mask) uploaded to device buffers once
+//!    per (machine, model) and reused every superstep — only the rank /
+//!    distance vector x crosses the host boundary per call;
+//!  - machines whose block shape has no artifact variant fall back to the
+//!    pure backend (counted, so benchmarks can report coverage).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::simulator::ell::{EllBackend, EllBlock, PureBackend};
+use crate::simulator::LocalGraph;
+
+use super::PjrtEngine;
+
+struct Operands {
+    cols: xla::PjRtBuffer,
+    a: xla::PjRtBuffer, // vals (pagerank) or wts (sssp)
+    b: Option<xla::PjRtBuffer>, // mask (sssp only)
+    scal: Vec<xla::PjRtBuffer>, // damping, teleport (pagerank only)
+}
+
+pub struct PjrtBackend {
+    pub engine: PjrtEngine,
+    fallback: PureBackend,
+    cache: HashMap<(usize, u8), Operands>,
+    pub pjrt_calls: usize,
+    pub fallback_calls: usize,
+}
+
+const KIND_PR: u8 = 0;
+const KIND_SSSP: u8 = 1;
+
+impl PjrtBackend {
+    pub fn new(engine: PjrtEngine) -> Self {
+        Self {
+            engine,
+            fallback: PureBackend,
+            cache: HashMap::new(),
+            pjrt_calls: 0,
+            fallback_calls: 0,
+        }
+    }
+
+    /// Plan chooser: pick the smallest artifact variant fitting each local
+    /// graph; fall back to an exact-size pure block when nothing fits.
+    pub fn chooser<'a>(
+        &'a self,
+        model: &'a str,
+    ) -> impl Fn(&LocalGraph) -> (usize, Option<usize>) + 'a {
+        move |l: &LocalGraph| {
+            match self
+                .engine
+                .choose_variant(model, &|k| EllBlock::rows_needed(l, k))
+            {
+                Some(v) => (v.k, Some(v.n)),
+                None => (16, None),
+            }
+        }
+    }
+
+    fn has_variant(&self, model: &str, n: usize, k: usize) -> bool {
+        self.engine
+            .variants_of(model)
+            .iter()
+            .any(|v| v.n == n && v.k == k)
+    }
+
+    fn operands(&mut self, machine: usize, kind: u8, blk: &EllBlock) -> Result<()> {
+        if self.cache.contains_key(&(machine, kind)) {
+            return Ok(());
+        }
+        let dims = [blk.rows, blk.k];
+        let cols = self.engine.upload(&blk.cols, &dims)?;
+        let (a, b, scal) = if kind == KIND_PR {
+            let vals = self.engine.upload(&blk.vals, &dims)?;
+            let d = self.engine.upload(&[1.0f32], &[])?;
+            let t = self.engine.upload(&[0.0f32], &[])?;
+            (vals, None, vec![d, t])
+        } else {
+            let wts = self.engine.upload(&blk.vals, &dims)?;
+            let mask = self.engine.upload(&blk.mask, &dims)?;
+            (wts, Some(mask), vec![])
+        };
+        self.cache.insert((machine, kind), Operands { cols, a, b, scal });
+        Ok(())
+    }
+
+    fn run_pjrt(
+        &mut self,
+        machine: usize,
+        kind: u8,
+        blk: &EllBlock,
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let model = if kind == KIND_PR { "pagerank" } else { "sssp" };
+        self.operands(machine, kind, blk)?;
+        let xbuf = self.engine.upload(x, &[blk.rows])?;
+        let ops = &self.cache[&(machine, kind)];
+        // gather arg buffer refs in model order
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&xbuf, &ops.cols, &ops.a];
+        if let Some(m) = &ops.b {
+            args.push(m);
+        }
+        for s in &ops.scal {
+            args.push(s);
+        }
+        let exe = self.engine.executable(model, blk.rows, blk.k)?;
+        let out = exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("execute {model}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let y = if kind == KIND_PR {
+            out.to_tuple1().map_err(|e| anyhow!("{e:?}"))?
+        } else {
+            out.to_tuple2().map_err(|e| anyhow!("{e:?}"))?.0
+        };
+        y.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+impl EllBackend for PjrtBackend {
+    fn spmv(&mut self, machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32> {
+        if self.has_variant("pagerank", blk.rows, blk.k) {
+            match self.run_pjrt(machine, KIND_PR, blk, x) {
+                Ok(y) => {
+                    self.pjrt_calls += 1;
+                    return y;
+                }
+                Err(e) => eprintln!("pjrt spmv failed ({e:#}), using pure backend"),
+            }
+        }
+        self.fallback_calls += 1;
+        self.fallback.spmv(machine, blk, x)
+    }
+
+    fn minplus(&mut self, machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32> {
+        if self.has_variant("sssp", blk.rows, blk.k) {
+            match self.run_pjrt(machine, KIND_SSSP, blk, x) {
+                Ok(y) => {
+                    self.pjrt_calls += 1;
+                    return y;
+                }
+                Err(e) => eprintln!("pjrt minplus failed ({e:#}), using pure backend"),
+            }
+        }
+        self.fallback_calls += 1;
+        self.fallback.minplus(machine, blk, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::machines::Cluster;
+    use crate::partition::Partitioner;
+    use crate::simulator::algorithms::pagerank::{pagerank_with_plan, PagerankPlan};
+    use crate::simulator::algorithms::sssp::{sssp_with_plan, SsspPlan};
+    use crate::simulator::{reference, SimGraph};
+    use crate::windgp::WindGP;
+
+    fn artifacts_available() -> bool {
+        PjrtEngine::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn pjrt_pagerank_matches_reference() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let g = gen::erdos_renyi(150, 600, 1);
+        let cluster = Cluster::heterogeneous_small(1, 2, 0.01);
+        let ep = WindGP::default().partition(&g, &cluster, 1);
+        let sg = SimGraph::build(&g, &cluster, &ep);
+        let engine = PjrtEngine::load(PjrtEngine::default_dir()).unwrap();
+        let mut be = PjrtBackend::new(engine);
+        let plan = PagerankPlan::new(&sg, &be.chooser("pagerank"));
+        let (ranks, _) = pagerank_with_plan(&sg, 10, &mut be, &plan);
+        let want = reference::pagerank(&g, 10);
+        for v in 0..g.num_vertices() {
+            assert!((ranks[v] - want[v]).abs() < 1e-4, "v{v}: {} vs {}", ranks[v], want[v]);
+        }
+        assert!(be.pjrt_calls > 0, "PJRT path never used");
+        assert_eq!(be.fallback_calls, 0, "unexpected fallback");
+    }
+
+    #[test]
+    fn pjrt_sssp_matches_reference() {
+        if !artifacts_available() {
+            return;
+        }
+        let g = gen::erdos_renyi(150, 600, 2);
+        let cluster = Cluster::heterogeneous_small(1, 2, 0.01);
+        let ep = WindGP::default().partition(&g, &cluster, 2);
+        let sg = SimGraph::build(&g, &cluster, &ep);
+        let engine = PjrtEngine::load(PjrtEngine::default_dir()).unwrap();
+        let mut be = PjrtBackend::new(engine);
+        let plan = SsspPlan::new(&sg, &be.chooser("sssp"));
+        let (dist, _) = sssp_with_plan(&sg, 0, &mut be, &plan);
+        let want = reference::sssp(&g, 0);
+        for v in 0..g.num_vertices() {
+            if want[v].is_infinite() {
+                assert!(dist[v].is_infinite());
+            } else {
+                assert!((dist[v] - want[v]).abs() < 1e-4);
+            }
+        }
+        assert!(be.pjrt_calls > 0);
+    }
+}

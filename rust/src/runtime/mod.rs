@@ -1,0 +1,229 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the L3 hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the L2 JAX
+//! models (which call the L1 Pallas kernels) once to HLO *text* (the
+//! interchange the bundled xla_extension 0.5.1 accepts — serialized
+//! protos from jax ≥ 0.5 carry 64-bit ids it rejects); this module
+//! compiles each (model, N, K) variant once on the PJRT CPU client and
+//! caches the loaded executables.
+//!
+//! [`PjrtBackend`] implements the simulator's [`crate::simulator::ell::EllBackend`]
+//! so distributed PageRank/SSSP supersteps run their per-machine compute
+//! through the artifacts; graph operands (cols/vals/mask) are uploaded to
+//! device buffers once per plan and reused every superstep (see §Perf).
+
+pub mod backend;
+
+pub use backend::PjrtBackend;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One lowered (N, K) variant of a model.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub n: usize,
+    pub k: usize,
+    pub path: PathBuf,
+}
+
+/// Loads + compiles artifacts lazily; caches executables.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    /// model name -> variants sorted by (n, k)
+    variants: HashMap<String, Vec<Variant>>,
+    /// compiled cache keyed by (model, n, k)
+    compiled: HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
+    pub artifact_dir: PathBuf,
+}
+
+impl PjrtEngine {
+    /// Open the artifact directory (reads `manifest.json`).
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest_path.display()))?;
+        let j = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let models = j
+            .get("models")
+            .ok_or_else(|| anyhow!("manifest missing 'models'"))?;
+        let mut variants = HashMap::new();
+        if let Json::Obj(m) = models {
+            for (name, entries) in m {
+                let mut vs = Vec::new();
+                for e in entries.as_arr().unwrap_or(&[]) {
+                    let n = e.get("n").and_then(Json::as_usize).ok_or_else(|| anyhow!("n"))?;
+                    let k = e.get("k").and_then(Json::as_usize).ok_or_else(|| anyhow!("k"))?;
+                    let file = e
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("file"))?;
+                    vs.push(Variant { n, k, path: dir.join(file) });
+                }
+                vs.sort_by_key(|v| (v.n, v.k));
+                variants.insert(name.clone(), vs);
+            }
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self { client, variants, compiled: HashMap::new(), artifact_dir: dir })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.variants.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn variants_of(&self, model: &str) -> &[Variant] {
+        self.variants.get(model).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Smallest variant of `model` whose row budget at its own K covers
+    /// the caller's requirement. `rows_for_k` reports the required rows
+    /// per lane width (row-splitting makes it K-dependent).
+    pub fn choose_variant(
+        &self,
+        model: &str,
+        rows_for_k: &dyn Fn(usize) -> usize,
+    ) -> Option<Variant> {
+        self.variants_of(model)
+            .iter()
+            .find(|v| rows_for_k(v.k) <= v.n)
+            .cloned()
+    }
+
+    /// Compile (cached) and return the executable for an exact variant.
+    pub fn executable(
+        &mut self,
+        model: &str,
+        n: usize,
+        k: usize,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (model.to_string(), n, k);
+        if !self.compiled.contains_key(&key) {
+            let v = self
+                .variants_of(model)
+                .iter()
+                .find(|v| v.n == n && v.k == k)
+                .cloned()
+                .ok_or_else(|| anyhow!("no artifact for {model} n={n} k={k}"))?;
+            let proto = xla::HloModuleProto::from_text_file(&v.path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", v.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {model} n={n} k={k}: {e:?}"))?;
+            self.compiled.insert(key.clone(), exe);
+        }
+        Ok(&self.compiled[&key])
+    }
+
+    /// Upload a host array to a device buffer.
+    pub fn upload<T: xla::ArrayElement + Copy>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Default artifact directory: $WINDGP_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("WINDGP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Smoke-check: run the smallest pagerank variant on a trivial input
+    /// and verify the output against the pure computation.
+    pub fn smoke_test(&mut self) -> Result<()> {
+        let v = self
+            .variants_of("pagerank")
+            .first()
+            .cloned()
+            .ok_or_else(|| anyhow!("no pagerank artifacts"))?;
+        let (n, k) = (v.n, v.k);
+        let x = vec![1.0f32; n];
+        let cols = vec![0i32; n * k];
+        let mut vals = vec![0f32; n * k];
+        vals[0] = 0.5; // row 0 pulls 0.5 * x[0]
+        let exe = self.executable("pagerank", n, k)?;
+        let lx = xla::Literal::vec1(&x);
+        let lc = xla::Literal::vec1(&cols)
+            .reshape(&[n as i64, k as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let lv = xla::Literal::vec1(&vals)
+            .reshape(&[n as i64, k as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let ld = xla::Literal::from(1.0f32);
+        let lt = xla::Literal::from(0.0f32);
+        let out = exe
+            .execute::<xla::Literal>(&[lx, lc, lv, ld, lt])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let y = out.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        let v: Vec<f32> = y.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        if (v[0] - 0.5).abs() > 1e-6 || v[1] != 0.0 {
+            bail!("smoke mismatch: {:?}", &v[..2]);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        PjrtEngine::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn engine_loads_manifest_and_smokes() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut eng = PjrtEngine::load(PjrtEngine::default_dir()).unwrap();
+        assert!(eng.models().contains(&"pagerank"));
+        assert!(eng.models().contains(&"sssp"));
+        eng.smoke_test().unwrap();
+    }
+
+    #[test]
+    fn choose_variant_picks_smallest_fit() {
+        if !artifacts_available() {
+            return;
+        }
+        let eng = PjrtEngine::load(PjrtEngine::default_dir()).unwrap();
+        // constant requirement: 300 rows regardless of k -> 1024-variant
+        let v = eng.choose_variant("pagerank", &|_k| 300).unwrap();
+        assert_eq!(v.n, 1024);
+        // tiny requirement -> smallest variant
+        let v = eng.choose_variant("pagerank", &|_k| 10).unwrap();
+        assert_eq!(v.n, 256);
+        // impossible requirement -> None
+        assert!(eng.choose_variant("pagerank", &|_k| 10_000_000).is_none());
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = match PjrtEngine::load("/nonexistent/windgp-artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

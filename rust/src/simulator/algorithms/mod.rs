@@ -1,0 +1,19 @@
+//! Distributed algorithm drivers over [`SimGraph`]: the §5.4 workloads.
+//!
+//! Each driver performs the real computation superstep-by-superstep
+//! (compute on every machine → replica synchronization → barrier),
+//! charging Definition-4 costs to the [`CostClock`], and returns both the
+//! *answer* (verified against [`super::reference`] in tests) and a
+//! [`SimReport`] with the simulated distributed running time.
+
+pub mod bfs;
+pub mod pagerank;
+pub mod sssp;
+pub mod triangle;
+pub mod wcc;
+
+pub use bfs::bfs;
+pub use pagerank::pagerank;
+pub use sssp::sssp;
+pub use triangle::triangles;
+pub use wcc::wcc;

@@ -1,0 +1,182 @@
+//! Distributed SSSP (the sparse §5.4 workload): Bellman-Ford supersteps
+//! over the min-plus ELL kernel. Only machines whose local frontier is
+//! non-empty pay compute, and only *changed* replicated vertices pay
+//! communication — the sparsity that makes SSSP's speedup smaller than
+//! PageRank's in Tables 13/16 (the paper's observation).
+
+use crate::graph::VId;
+use crate::simulator::ell::{EllBackend, EllBlock, INF};
+use crate::simulator::reference::edge_weight;
+use crate::simulator::{CostClock, LocalGraph, SimGraph, SimReport};
+
+pub struct SsspPlan {
+    pub blocks: Vec<EllBlock>,
+}
+
+impl SsspPlan {
+    /// See [`super::pagerank::PagerankPlan::new`] for the chooser contract.
+    pub fn new(sg: &SimGraph, chooser: &dyn Fn(&LocalGraph) -> (usize, Option<usize>)) -> Self {
+        let blocks = sg
+            .locals
+            .iter()
+            .map(|l| {
+                let (k, pad) = chooser(l);
+                EllBlock::build(l, k, pad, |row, nb| {
+                    let gu = l.verts[row as usize];
+                    let gv = l.verts[nb as usize];
+                    edge_weight(gu.min(gv), gu.max(gv))
+                })
+            })
+            .collect();
+        Self { blocks }
+    }
+}
+
+/// Run to convergence from `source`; returns (distances, report).
+pub fn sssp(sg: &SimGraph, source: VId, backend: &mut dyn EllBackend) -> (Vec<f32>, SimReport) {
+    let plan = SsspPlan::new(sg, &|_| (16, None));
+    sssp_with_plan(sg, source, backend, &plan)
+}
+
+pub fn sssp_with_plan(
+    sg: &SimGraph,
+    source: VId,
+    backend: &mut dyn EllBackend,
+    plan: &SsspPlan,
+) -> (Vec<f32>, SimReport) {
+    let n = sg.g.num_vertices();
+    let p = sg.p;
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    let mut clock = CostClock::new(p);
+    let mut cal = vec![0.0f64; p];
+    let mut com = vec![0.0f64; p];
+    // frontier: vertices whose distance changed last superstep
+    let mut active = vec![false; n];
+    active[source as usize] = true;
+    let mut any_active = true;
+
+    while any_active {
+        cal.iter_mut().for_each(|c| *c = 0.0);
+        com.iter_mut().for_each(|c| *c = 0.0);
+
+        // local relaxation on machines whose local copy set intersects the
+        // frontier
+        let mut new_dist = dist.clone();
+        for i in 0..p {
+            let l = &sg.locals[i];
+            // frontier stats for the cost model
+            let mut f_nodes = 0u64;
+            let mut f_edges = 0u64;
+            for (lv, &gv) in l.verts.iter().enumerate() {
+                if active[gv as usize] {
+                    f_nodes += 1;
+                    f_edges += l.neighbors(lv as u32).len() as u64;
+                }
+            }
+            if f_nodes == 0 {
+                continue;
+            }
+            let m = &sg.cluster.machines[i];
+            cal[i] = m.c_node * f_nodes as f64 + m.c_edge * f_edges as f64;
+            let blk = &plan.blocks[i];
+            let values: Vec<f32> = l
+                .verts
+                .iter()
+                .map(|&gv| if dist[gv as usize].is_finite() { dist[gv as usize] } else { INF })
+                .collect();
+            let x = blk.fill_x(&values, INF);
+            let y = backend.minplus(i, blk, &x);
+            let folded = blk.fold_min(&y);
+            for (lv, &gv) in l.verts.iter().enumerate() {
+                let d = folded[lv];
+                if d < INF / 2.0 && d < new_dist[gv as usize] {
+                    new_dist[gv as usize] = d;
+                }
+            }
+        }
+
+        // master min-combine + mirror broadcast for changed vertices only
+        any_active = false;
+        for v in 0..n {
+            let changed = new_dist[v] < dist[v];
+            active[v] = changed;
+            if changed {
+                dist[v] = new_dist[v];
+                any_active = true;
+                sg.charge_sync(v as VId, &mut com);
+            }
+        }
+        if any_active {
+            clock.superstep(&cal, &com);
+        }
+    }
+    (dist, SimReport::from_clock("SSSP", clock))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::machines::Cluster;
+    use crate::partition::Partitioner;
+    use crate::simulator::ell::PureBackend;
+    use crate::simulator::reference;
+    use crate::windgp::WindGP;
+
+    fn check(g: &crate::graph::Graph, source: VId) {
+        let cluster = Cluster::heterogeneous_small(2, 4, 0.005);
+        let ep = WindGP::default().partition(g, &cluster, 1);
+        let sg = SimGraph::build(g, &cluster, &ep);
+        let (dist, rep) = sssp(&sg, source, &mut PureBackend);
+        let want = reference::sssp(g, source);
+        for v in 0..g.num_vertices() {
+            if want[v].is_infinite() {
+                assert!(dist[v].is_infinite(), "vertex {v} reachable mismatch");
+            } else {
+                assert!((dist[v] - want[v]).abs() < 1e-4, "vertex {v}: {} vs {}", dist[v], want[v]);
+            }
+        }
+        assert!(rep.supersteps > 0);
+    }
+
+    #[test]
+    fn matches_reference_er() {
+        check(&gen::erdos_renyi(200, 800, 1), 0);
+    }
+
+    #[test]
+    fn matches_reference_disconnected() {
+        let mut b = crate::graph::GraphBuilder::new();
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(10, 11); // unreachable island
+        check(&b.build(12), 0);
+    }
+
+    #[test]
+    fn frontier_cost_is_sparse() {
+        // SSSP on a long path: each superstep advances one hop, so total
+        // compute is O(path length), far below dense * supersteps.
+        let g = gen::path(100);
+        let cluster = Cluster::homogeneous(2, 1_000_000);
+        let ep = WindGP::default().partition(&g, &cluster, 1);
+        let sg = SimGraph::build(&g, &cluster, &ep);
+        let (_, rep) = sssp(&sg, 0, &mut PureBackend);
+        let dense_one_step: f64 = (0..2)
+            .map(|i| {
+                let m = &cluster.machines[i];
+                m.c_node * sg.locals[i].num_verts() as f64
+                    + m.c_edge * sg.locals[i].num_edges() as f64
+            })
+            .sum();
+        let total_cal: f64 = rep.total_cal.iter().sum();
+        // ~99 supersteps, each touching ~1 vertex: total ≈ dense cost of
+        // a couple of full sweeps, not 99 of them
+        assert!(
+            total_cal < dense_one_step * rep.supersteps as f64 / 4.0,
+            "cal {total_cal} vs dense-per-step {dense_one_step} x {}",
+            rep.supersteps
+        );
+    }
+}

@@ -1,0 +1,94 @@
+//! Distributed weakly-connected components by min-label propagation —
+//! an extra workload beyond the paper's four, used by the examples and
+//! failure-injection tests. Frontier-sparse like SSSP.
+
+use crate::graph::VId;
+use crate::simulator::{CostClock, SimGraph, SimReport};
+
+pub fn wcc(sg: &SimGraph) -> (Vec<VId>, SimReport) {
+    let n = sg.g.num_vertices();
+    let p = sg.p;
+    let mut label: Vec<VId> = (0..n as VId).collect();
+    let mut active = vec![true; n];
+    let mut clock = CostClock::new(p);
+    let mut cal = vec![0.0f64; p];
+    let mut com = vec![0.0f64; p];
+
+    loop {
+        cal.iter_mut().for_each(|c| *c = 0.0);
+        com.iter_mut().for_each(|c| *c = 0.0);
+        let mut new_label = label.clone();
+        for i in 0..p {
+            let l = &sg.locals[i];
+            let mut f_nodes = 0u64;
+            let mut f_edges = 0u64;
+            for (lu, &gu) in l.verts.iter().enumerate() {
+                if !active[gu as usize] {
+                    continue;
+                }
+                f_nodes += 1;
+                for &lv in l.neighbors(lu as u32) {
+                    f_edges += 1;
+                    let gv = l.verts[lv as usize];
+                    let lu_label = label[gu as usize];
+                    if lu_label < new_label[gv as usize] {
+                        new_label[gv as usize] = lu_label;
+                    }
+                }
+            }
+            let m = &sg.cluster.machines[i];
+            cal[i] = m.c_node * f_nodes as f64 + m.c_edge * f_edges as f64;
+        }
+        let mut any = false;
+        for v in 0..n {
+            let changed = new_label[v] < label[v];
+            active[v] = changed;
+            if changed {
+                label[v] = new_label[v];
+                any = true;
+                sg.charge_sync(v as VId, &mut com);
+            }
+        }
+        clock.superstep(&cal, &com);
+        if !any {
+            break;
+        }
+    }
+    (label, SimReport::from_clock("WCC", clock))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::machines::Cluster;
+    use crate::partition::Partitioner;
+    use crate::simulator::reference;
+    use crate::windgp::WindGP;
+
+    #[test]
+    fn matches_reference() {
+        let mut b = crate::graph::GraphBuilder::new();
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(5, 6);
+        b.add_edge(6, 7);
+        let g = b.build(10);
+        let cluster = Cluster::homogeneous(2, 1_000);
+        let ep = WindGP::default().partition(&g, &cluster, 1);
+        let sg = SimGraph::build(&g, &cluster, &ep);
+        let (label, _) = wcc(&sg);
+        assert_eq!(label, reference::wcc(&g));
+    }
+
+    #[test]
+    fn er_components_match() {
+        let g = gen::erdos_renyi(200, 250, 3); // sparse -> many components
+        let cluster = Cluster::heterogeneous_small(1, 2, 0.005);
+        let ep = WindGP::default().partition(&g, &cluster, 2);
+        let sg = SimGraph::build(&g, &cluster, &ep);
+        let (label, rep) = wcc(&sg);
+        assert_eq!(label, reference::wcc(&g));
+        assert!(rep.supersteps >= 1);
+    }
+}

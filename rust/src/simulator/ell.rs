@@ -1,0 +1,245 @@
+//! ELL (ELLPACK) blocks: the interchange format between the L3 simulator
+//! and the L1/L2 compute kernels (both the pure-Rust backend and the PJRT
+//! executables compiled from the Pallas kernels).
+//!
+//! Layout contract (mirrors python/compile/kernels/ref.py):
+//!   - `rows` padded rows × `k` lanes; `cols[r*k+j]` indexes into the x
+//!     vector (length `rows`); `vals` is 0.0 on padding (inert for sums);
+//!     `mask` is 1.0 on real entries (min-reductions force padding to INF).
+//!   - Rows `[0, verts)` correspond to the machine's local vertices.
+//!     Degree-overflow rows (vertices with local degree > k — the
+//!     power-law hubs) are *split*: continuation rows appended after the
+//!     vertex region, mapped back via `row_vertex`. This is the TPU-style
+//!     answer to degree skew (DESIGN.md §Hardware-Adaptation).
+//!   - x entries in the continuation/padding region are driver-filled
+//!     (0 for SpMV folds, +INF for min-plus folds) and never read through
+//!     `cols`.
+
+use super::LocalGraph;
+
+/// Padding sentinel matching python/compile/kernels/ref.py::INF.
+pub const INF: f32 = 3.0e38;
+
+#[derive(Clone, Debug)]
+pub struct EllBlock {
+    /// padded row count == x length fed to the kernel
+    pub rows: usize,
+    pub k: usize,
+    pub cols: Vec<i32>,
+    pub vals: Vec<f32>,
+    pub mask: Vec<f32>,
+    /// real row -> local vertex (len = real_rows; rows 0..verts identity)
+    pub row_vertex: Vec<u32>,
+    /// number of local vertices (the x prefix holding real values)
+    pub verts: usize,
+    pub real_rows: usize,
+}
+
+impl EllBlock {
+    /// Rows needed for a local graph at lane width `k` (vertex rows plus
+    /// hub continuation rows).
+    pub fn rows_needed(local: &LocalGraph, k: usize) -> usize {
+        let nv = local.num_verts();
+        let mut extra = 0usize;
+        for v in 0..nv {
+            let d = local.neighbors(v as u32).len();
+            if d > k {
+                extra += d.div_ceil(k) - 1;
+            }
+        }
+        nv + extra
+    }
+
+    /// Build a block. `pad_to` rounds `rows` up (to an AOT variant size);
+    /// `weight(local_row_vertex, local_neighbor)` supplies edge values.
+    pub fn build<F: Fn(u32, u32) -> f32>(
+        local: &LocalGraph,
+        k: usize,
+        pad_to: Option<usize>,
+        weight: F,
+    ) -> EllBlock {
+        let nv = local.num_verts();
+        let needed = Self::rows_needed(local, k);
+        let rows = pad_to.map_or(needed, |p| p.max(needed));
+        let mut cols = vec![0i32; rows * k];
+        let mut vals = vec![0f32; rows * k];
+        let mut mask = vec![0f32; rows * k];
+        let mut row_vertex: Vec<u32> = (0..nv as u32).collect();
+        let mut next_row = nv;
+        for v in 0..nv {
+            let nbrs = local.neighbors(v as u32);
+            for (j, &nb) in nbrs.iter().enumerate() {
+                let (row, lane) = if j < k {
+                    (v, j)
+                } else {
+                    // continuation row for lane block j/k
+                    let chunk = j / k;
+                    let row = next_row + chunk - 1;
+                    (row, j % k)
+                };
+                let idx = row * k + lane;
+                cols[idx] = nb as i32;
+                vals[idx] = weight(v as u32, nb);
+                mask[idx] = 1.0;
+            }
+            if nbrs.len() > k {
+                let extra = nbrs.len().div_ceil(k) - 1;
+                for c in 0..extra {
+                    row_vertex.push(v as u32);
+                    debug_assert_eq!(row_vertex.len() - 1, next_row + c);
+                }
+                next_row += extra;
+            }
+        }
+        let real_rows = next_row.max(nv);
+        EllBlock { rows, k, cols, vals, mask, row_vertex, verts: nv, real_rows }
+    }
+
+    /// Fill an x vector for this block from per-local-vertex values.
+    pub fn fill_x(&self, values: &[f32], pad_value: f32) -> Vec<f32> {
+        debug_assert_eq!(values.len(), self.verts);
+        let mut x = vec![pad_value; self.rows];
+        x[..self.verts].copy_from_slice(values);
+        x
+    }
+
+    /// Fold a kernel output back to per-vertex values by summation
+    /// (SpMV/PageRank: continuation rows add into their vertex).
+    pub fn fold_sum(&self, y: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.verts];
+        for (r, &v) in self.row_vertex.iter().enumerate() {
+            out[v as usize] += y[r];
+        }
+        out
+    }
+
+    /// Fold by minimum (min-plus/SSSP). Continuation rows carry the
+    /// pad_value (INF) self-term, so the min is safe.
+    pub fn fold_min(&self, y: &[f32]) -> Vec<f32> {
+        let mut out = vec![INF; self.verts];
+        for (r, &v) in self.row_vertex.iter().enumerate() {
+            out[v as usize] = out[v as usize].min(y[r]);
+        }
+        out
+    }
+}
+
+/// Compute backend over ELL blocks: the pure reference below, or the PJRT
+/// executor in [`crate::runtime`].
+pub trait EllBackend {
+    /// y[r] = Σ_j vals[r,j] · x[cols[r,j]]
+    fn spmv(&mut self, machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32>;
+    /// y[r] = min(x[r], min_j masked(vals[r,j] + x[cols[r,j]]))
+    fn minplus(&mut self, machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32>;
+}
+
+/// Straightforward CPU implementation (and the oracle for the PJRT path).
+#[derive(Default)]
+pub struct PureBackend;
+
+impl EllBackend for PureBackend {
+    fn spmv(&mut self, _machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0f32; blk.rows];
+        for r in 0..blk.real_rows {
+            let mut acc = 0.0f32;
+            for j in 0..blk.k {
+                let idx = r * blk.k + j;
+                acc += blk.vals[idx] * x[blk.cols[idx] as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    fn minplus(&mut self, _machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![INF; blk.rows];
+        for r in 0..blk.real_rows {
+            let mut best = x[r];
+            for j in 0..blk.k {
+                let idx = r * blk.k + j;
+                if blk.mask[idx] > 0.0 {
+                    let cand = blk.vals[idx] + x[blk.cols[idx] as usize];
+                    if cand < best {
+                        best = cand;
+                    }
+                }
+            }
+            y[r] = best;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::machines::Cluster;
+    use crate::partition::EdgePartition;
+    use crate::simulator::SimGraph;
+
+    fn local_of(g: &crate::graph::Graph) -> LocalGraph {
+        // single machine holding everything
+        let cluster = Cluster::homogeneous(1, u64::MAX / 8);
+        let ep = EdgePartition::from_assignment(1, vec![0; g.num_edges()]);
+        let sg = SimGraph::build(g, &cluster, &ep);
+        sg.locals.into_iter().next().unwrap()
+    }
+
+    #[test]
+    fn spmv_counts_degrees_with_unit_weights() {
+        let g = gen::clique(5);
+        let l = local_of(&g);
+        let blk = EllBlock::build(&l, 8, None, |_, _| 1.0);
+        let x = blk.fill_x(&vec![1.0; blk.verts], 0.0);
+        let y = PureBackend.spmv(0, &blk, &x);
+        let folded = blk.fold_sum(&y);
+        for v in 0..5 {
+            assert_eq!(folded[v], 4.0);
+        }
+    }
+
+    #[test]
+    fn hub_rows_split_and_fold() {
+        let g = gen::star(20); // hub degree 19 > k=4
+        let l = local_of(&g);
+        assert!(EllBlock::rows_needed(&l, 4) > l.num_verts());
+        let blk = EllBlock::build(&l, 4, None, |_, _| 1.0);
+        let x = blk.fill_x(&vec![1.0; blk.verts], 0.0);
+        let folded = blk.fold_sum(&PureBackend.spmv(0, &blk, &x));
+        let hub_local = l.lidx[&0] as usize;
+        assert_eq!(folded[hub_local], 19.0);
+        let leaf_local = l.lidx[&5] as usize;
+        assert_eq!(folded[leaf_local], 1.0);
+    }
+
+    #[test]
+    fn minplus_with_split_rows() {
+        let g = gen::star(10);
+        let l = local_of(&g);
+        let blk = EllBlock::build(&l, 3, None, |_, _| 1.0);
+        let hub = l.lidx[&0] as usize;
+        let mut dist = vec![INF; blk.verts];
+        dist[l.lidx[&7] as usize] = 0.0; // a leaf is the source
+        let x = blk.fill_x(&dist, INF);
+        let folded = blk.fold_min(&PureBackend.minplus(0, &blk, &x));
+        assert_eq!(folded[hub], 1.0);
+        // other leaves untouched in one round
+        assert!(folded[l.lidx[&3] as usize] >= INF / 2.0);
+    }
+
+    #[test]
+    fn pad_to_rounds_up() {
+        let g = gen::path(5);
+        let l = local_of(&g);
+        let blk = EllBlock::build(&l, 4, Some(64), |_, _| 1.0);
+        assert_eq!(blk.rows, 64);
+        assert_eq!(blk.cols.len(), 64 * 4);
+        // padded rows produce zero under spmv
+        let x = blk.fill_x(&vec![1.0; blk.verts], 0.0);
+        let y = PureBackend.spmv(0, &blk, &x);
+        for r in blk.real_rows..64 {
+            assert_eq!(y[r], 0.0);
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Single-machine reference implementations of the distributed algorithms.
+//! The simulator's distributed executions are asserted equal to these
+//! (exactly for BFS/SSSP/Triangle/WCC, to float tolerance for PageRank),
+//! which is what makes the simulated §5.4 runtimes trustworthy: the same
+//! work is genuinely performed, only the clock is modeled.
+
+use crate::graph::{Graph, VId};
+
+pub const DAMPING: f32 = 0.85;
+
+/// Standard power-iteration PageRank over the undirected graph (every edge
+/// is a bidirectional link), uniform teleport, dangling mass redistributed
+/// uniformly. `iters` fixed so distributed runs can match step-for-step.
+pub fn pagerank(g: &Graph, iters: usize) -> Vec<f32> {
+    let n = g.num_vertices();
+    let nf = n as f32;
+    let mut x = vec![1.0f32 / nf; n];
+    let mut y = vec![0.0f32; n];
+    for _ in 0..iters {
+        let mut dangling = 0.0f32;
+        for v in 0..n {
+            if g.degree(v as VId) == 0 {
+                dangling += x[v];
+            }
+        }
+        let teleport = (1.0 - DAMPING) / nf + DAMPING * dangling / nf;
+        for v in 0..n as VId {
+            let mut acc = 0.0f32;
+            for &u in g.neighbors(v) {
+                acc += x[u as usize] / g.degree(u) as f32;
+            }
+            y[v as usize] = DAMPING * acc + teleport;
+        }
+        std::mem::swap(&mut x, &mut y);
+    }
+    x
+}
+
+/// Bellman-Ford SSSP with per-edge weights derived deterministically from
+/// the edge's endpoint ids (so distributed runs can recompute the same
+/// weight without a side table). Unreached = f32::INFINITY.
+pub fn edge_weight(u: VId, v: VId) -> f32 {
+    let h = crate::util::rng::hash64(((u as u64) << 32) | v as u64);
+    1.0 + (h % 9) as f32 // weights in 1..=9
+}
+
+pub fn sssp(g: &Graph, source: VId) -> Vec<f32> {
+    let n = g.num_vertices();
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    // Bellman-Ford rounds (matches the distributed superstep structure)
+    loop {
+        let mut changed = false;
+        for &(u, v) in &g.edges {
+            let w = edge_weight(u, v);
+            let du = dist[u as usize];
+            let dv = dist[v as usize];
+            if du + w < dist[v as usize] {
+                dist[v as usize] = du + w;
+                changed = true;
+            }
+            if dv + w < dist[u as usize] {
+                dist[u as usize] = dv + w;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    dist
+}
+
+/// BFS hop distances; unreached = u32::MAX.
+pub fn bfs(g: &Graph, source: VId) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut dist = vec![u32::MAX; n];
+    dist[source as usize] = 0;
+    let mut frontier = vec![source];
+    let mut level = 0u32;
+    while !frontier.is_empty() {
+        level += 1;
+        let mut next = Vec::new();
+        for &u in &frontier {
+            for &v in g.neighbors(u) {
+                if dist[v as usize] == u32::MAX {
+                    dist[v as usize] = level;
+                    next.push(v);
+                }
+            }
+        }
+        frontier = next;
+    }
+    dist
+}
+
+/// Exact triangle count (edge-iterator with the smaller adjacency scanned,
+/// counting each triangle once via the ordering u < v < w).
+pub fn triangles(g: &Graph) -> u64 {
+    let n = g.num_vertices();
+    // neighbor lists are sorted by construction (edges sorted lexicographic
+    // and CSR fill preserves order for each vertex) — verify in debug
+    let mut count = 0u64;
+    let mut marker = vec![false; n];
+    for u in 0..n as VId {
+        for &v in g.neighbors(u) {
+            if v > u {
+                marker[v as usize] = true;
+            }
+        }
+        for &v in g.neighbors(u) {
+            if v <= u {
+                continue;
+            }
+            for &w in g.neighbors(v) {
+                if w > v && marker[w as usize] {
+                    count += 1;
+                }
+            }
+        }
+        for &v in g.neighbors(u) {
+            if v > u {
+                marker[v as usize] = false;
+            }
+        }
+    }
+    count
+}
+
+/// Connected components by min-label propagation; returns component label
+/// per vertex (the minimum vertex id in the component).
+pub fn wcc(g: &Graph) -> Vec<VId> {
+    let n = g.num_vertices();
+    let mut label: Vec<VId> = (0..n as VId).collect();
+    loop {
+        let mut changed = false;
+        for &(u, v) in &g.edges {
+            let lu = label[u as usize];
+            let lv = label[v as usize];
+            if lu < lv {
+                label[v as usize] = lu;
+                changed = true;
+            } else if lv < lu {
+                label[u as usize] = lv;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    label
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn pagerank_sums_to_one() {
+        let g = gen::erdos_renyi(100, 300, 1);
+        let x = pagerank(&g, 50);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "sum {s}");
+    }
+
+    #[test]
+    fn pagerank_star_center_highest() {
+        let g = gen::star(20);
+        let x = pagerank(&g, 60);
+        for leaf in 1..20 {
+            assert!(x[0] > x[leaf]);
+        }
+    }
+
+    #[test]
+    fn bfs_path_distances() {
+        let g = gen::path(10);
+        let d = bfs(&g, 0);
+        for v in 0..10 {
+            assert_eq!(d[v], v as u32);
+        }
+    }
+
+    #[test]
+    fn sssp_matches_bfs_reachability() {
+        let g = gen::erdos_renyi(100, 200, 2);
+        let d = sssp(&g, 0);
+        let b = bfs(&g, 0);
+        for v in 0..100 {
+            assert_eq!(d[v].is_infinite(), b[v] == u32::MAX, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn triangle_counts_known() {
+        assert_eq!(triangles(&gen::clique(4)), 4);
+        assert_eq!(triangles(&gen::clique(5)), 10);
+        assert_eq!(triangles(&gen::path(10)), 0);
+        assert_eq!(triangles(&gen::star(10)), 0);
+    }
+
+    #[test]
+    fn wcc_two_components() {
+        let mut b = crate::graph::GraphBuilder::new();
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(5, 6);
+        let g = b.build(7);
+        let l = wcc(&g);
+        assert_eq!(l[0], 0);
+        assert_eq!(l[2], 0);
+        assert_eq!(l[5], 5);
+        assert_eq!(l[6], 5);
+        assert_eq!(l[4], 4); // isolated
+    }
+
+    #[test]
+    fn edge_weight_deterministic_positive() {
+        for (u, v) in [(0u32, 1u32), (5, 9), (100, 7)] {
+            let w = edge_weight(u, v);
+            assert_eq!(w, edge_weight(u, v));
+            assert!((1.0..=10.0).contains(&w));
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Tiny benchmarking helper used by the `benches/` targets (the offline
+//! crate set has no criterion; this reproduces its warmup + sampling +
+//! summary-line shape with std::time only).
+
+use std::time::{Duration, Instant};
+
+/// Statistics from one benchmark run.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} mean {:>12?}  min {:>12?}  max {:>12?}  ({} samples)",
+            self.name, self.mean, self.min, self.max, self.samples
+        )
+    }
+}
+
+/// Run `f` `samples` times after one warmup; print and return stats.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchStats {
+    f(); // warmup
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    let total: Duration = times.iter().sum();
+    let stats = BenchStats {
+        name: name.to_string(),
+        samples: times.len(),
+        mean: total / times.len() as u32,
+        min: *times.iter().min().unwrap(),
+        max: *times.iter().max().unwrap(),
+    };
+    println!("{}", stats.line());
+    stats
+}
+
+/// Throughput helper: items/second given a duration.
+pub fn throughput(items: usize, d: Duration) -> f64 {
+    items as f64 / d.as_secs_f64().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0;
+        let s = bench("noop", 3, || count += 1);
+        assert_eq!(count, 4); // warmup + 3 samples
+        assert_eq!(s.samples, 3);
+        assert!(s.min <= s.mean && s.mean <= s.max.max(s.mean));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = throughput(1000, Duration::from_secs(2));
+        assert!((t - 500.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,71 @@
+//! Small self-contained utilities shared across the library.
+//!
+//! The build environment is fully offline with a minimal crate set, so the
+//! pieces a typical project pulls from crates.io (`rand`, `serde_json`,
+//! tabular printers, property-test harnesses) are implemented here from
+//! scratch and unit-tested in place.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+pub use rng::SplitMix64;
+
+/// Greatest common divisor (used by the §2.1 machine-resource
+/// quantification: rates are normalized by `gcd({Mem_i})` etc.).
+pub fn gcd(a: u64, b: u64) -> u64 {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// gcd over a slice; returns 1 for an empty slice so divisions stay safe.
+pub fn gcd_all(xs: &[u64]) -> u64 {
+    let g = xs.iter().copied().fold(0u64, gcd);
+    if g == 0 {
+        1
+    } else {
+        g
+    }
+}
+
+/// Natural logarithm guarded for the `ln TC` axes of Figures 8/12/13.
+pub fn ln_safe(x: f64) -> f64 {
+    if x <= 0.0 {
+        0.0
+    } else {
+        x.ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcd_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(7, 13), 1);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(gcd(5, 0), 5);
+    }
+
+    #[test]
+    fn gcd_all_basics() {
+        assert_eq!(gcd_all(&[8, 12, 20]), 4);
+        assert_eq!(gcd_all(&[]), 1);
+        assert_eq!(gcd_all(&[0, 0]), 1);
+    }
+
+    #[test]
+    fn ln_safe_guards() {
+        assert_eq!(ln_safe(0.0), 0.0);
+        assert_eq!(ln_safe(-3.0), 0.0);
+        assert!((ln_safe(std::f64::consts::E) - 1.0).abs() < 1e-12);
+    }
+}

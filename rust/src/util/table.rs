@@ -1,0 +1,83 @@
+//! Plain-text table rendering for the experiment harness — the paper's
+//! tables and figure-series are reprinted in the same rows/columns layout.
+
+/// Render a table with a header row. Columns are right-aligned except the
+/// first (row label).
+pub fn render(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            if i == 0 {
+                line.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+            } else {
+                line.push_str(&format!("{:>w$} | ", c, w = widths[i]));
+            }
+        }
+        line.trim_end().to_string()
+    };
+    let hdr: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    let mut sep = String::from("|");
+    for w in &widths {
+        sep.push_str(&"-".repeat(w + 2));
+        sep.push('|');
+    }
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Human-readable large numbers in the paper's style: 60M, 2.7G, 1.5K.
+pub fn human(x: f64) -> String {
+    let a = x.abs();
+    if a >= 1e9 {
+        format!("{:.1}G", x / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.0}M", x / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.1}K", x / 1e3)
+    } else {
+        format!("{:.0}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let t = render(
+            &["TC", "0", "0.3"],
+            &[
+                vec!["TW".into(), "64M".into(), "60M".into()],
+                vec!["CO".into(), "34M".into(), "31M".into()],
+            ],
+        );
+        assert!(t.contains("| TW |"));
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    fn human_suffixes() {
+        assert_eq!(human(60_000_000.0), "60M");
+        assert_eq!(human(2_700_000_000.0), "2.7G");
+        assert_eq!(human(1_500.0), "1.5K");
+        assert_eq!(human(42.0), "42");
+    }
+}

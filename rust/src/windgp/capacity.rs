@@ -1,0 +1,271 @@
+//! Graph-oriented preprocessing (§3.2): per-machine edge capacities δ_i.
+//!
+//! The MIP (Eq. 2) is approximated by Algorithm 1, a water-filling
+//! heuristic: try to equalize computation time `C_i · δ_i = ω` where
+//! `C_i = C_i^edge + (|V|/|E|)·C_i^node`; machines whose memory cannot hold
+//! their share are capped at `δ_i² = M_i / (M^edge + M^node·|V|/|E|)` and
+//! the remainder is re-spread over the rest. Lemma 1: optimal ignoring
+//! integrality; Theorem 1: error ≤ p²/|E| relative to the Eq. 2 optimum.
+//!
+//! [`exact_capacities_bruteforce`] is the GUROBI/SCIP stand-in used by
+//! tests to verify the bound on small instances (DESIGN.md §4).
+
+use crate::graph::Graph;
+use crate::machines::Cluster;
+
+/// Effective per-edge compute rate C_i = C_i^edge + (|V|/|E|)·C_i^node.
+pub fn effective_rates(g: &Graph, cluster: &Cluster) -> Vec<f64> {
+    let ratio = if g.num_edges() == 0 {
+        0.0
+    } else {
+        g.num_vertices() as f64 / g.num_edges() as f64
+    };
+    cluster
+        .machines
+        .iter()
+        .map(|m| m.c_edge + ratio * m.c_node)
+        .collect()
+}
+
+/// Per-edge memory occupation μ = M^edge + M^node·|V|/|E|.
+pub fn mem_per_edge(g: &Graph, cluster: &Cluster) -> f64 {
+    let ratio = if g.num_edges() == 0 {
+        0.0
+    } else {
+        g.num_vertices() as f64 / g.num_edges() as f64
+    };
+    cluster.m_edge as f64 + cluster.m_node as f64 * ratio
+}
+
+/// Algorithm 1. Returns δ_i with Σδ_i = |E| whenever the cluster's total
+/// memory admits a feasible partition; if it does not, memory caps are
+/// returned (callers detect Σδ < |E| and report infeasibility).
+pub fn capacities(g: &Graph, cluster: &Cluster) -> Vec<u64> {
+    let p = cluster.len();
+    let total = g.num_edges() as u64;
+    let c = effective_rates(g, cluster);
+    let mu = mem_per_edge(g, cluster);
+    let caps: Vec<u64> = cluster
+        .machines
+        .iter()
+        .map(|m| (m.mem as f64 / mu).floor() as u64)
+        .collect();
+
+    let mut delta = vec![0u64; p];
+    let mut active: Vec<usize> = (0..p).collect();
+    let mut remaining = total;
+
+    // Water-fill: repeatedly hand each active machine R/T · 1/C_i; cap the
+    // ones that exceed memory and re-spread. At most p rounds.
+    while remaining > 0 && !active.is_empty() {
+        let t: f64 = active.iter().map(|&i| 1.0 / c[i]).sum();
+        let mut capped_any = false;
+        active.retain(|&i| {
+            let ideal = remaining as f64 / t / c[i];
+            if ideal as u64 >= caps[i] {
+                delta[i] = caps[i];
+                capped_any = true;
+                false
+            } else {
+                true
+            }
+        });
+        let used: u64 = delta.iter().sum();
+        remaining = total.saturating_sub(used);
+        if !capped_any {
+            // No cap hit: finalize the equal-ω split with floor + remainder.
+            let t: f64 = active.iter().map(|&i| 1.0 / c[i]).sum();
+            let mut handed = 0u64;
+            for &i in &active {
+                delta[i] = ((remaining as f64 / t) / c[i]).floor() as u64;
+                handed += delta[i];
+            }
+            // Distribute the flooring remainder one edge at a time to the
+            // cheapest machines with headroom (keeps Theorem 1's bound).
+            let mut leftover = remaining - handed;
+            let mut order: Vec<usize> = active.clone();
+            order.sort_by(|&a, &b| c[a].partial_cmp(&c[b]).unwrap());
+            'outer: while leftover > 0 {
+                let mut progressed = false;
+                for &i in &order {
+                    if leftover == 0 {
+                        break 'outer;
+                    }
+                    if delta[i] < caps[i] {
+                        delta[i] += 1;
+                        leftover -= 1;
+                        progressed = true;
+                    }
+                }
+                if !progressed {
+                    break; // everyone capped: infeasible remainder
+                }
+            }
+            break;
+        }
+    }
+    delta
+}
+
+/// λ achieved by a capacity vector: max_i C_i·δ_i (the Eq. 2 objective,
+/// after the |V_i| ≈ (|V|/|E|)·|E_i| simplification).
+pub fn lambda(g: &Graph, cluster: &Cluster, delta: &[u64]) -> f64 {
+    let c = effective_rates(g, cluster);
+    delta
+        .iter()
+        .zip(&c)
+        .map(|(&d, &ci)| d as f64 * ci)
+        .fold(0.0, f64::max)
+}
+
+/// Exhaustive Eq. 2 solver for tiny instances (p ≤ 4, |E| small) — the
+/// MIP-solver stand-in for validating Algorithm 1's approximation error.
+/// Returns None if no feasible integer split exists.
+pub fn exact_capacities_bruteforce(g: &Graph, cluster: &Cluster) -> Option<Vec<u64>> {
+    let p = cluster.len();
+    let total = g.num_edges() as u64;
+    assert!(p >= 1 && p <= 4, "bruteforce only for tiny p");
+    let c = effective_rates(g, cluster);
+    let mu = mem_per_edge(g, cluster);
+    let caps: Vec<u64> = cluster
+        .machines
+        .iter()
+        .map(|m| (m.mem as f64 / mu).floor() as u64)
+        .collect();
+
+    let mut best: Option<(f64, Vec<u64>)> = None;
+    let mut cur = vec![0u64; p];
+    fn rec(
+        i: usize,
+        left: u64,
+        cur: &mut Vec<u64>,
+        caps: &[u64],
+        c: &[f64],
+        best: &mut Option<(f64, Vec<u64>)>,
+    ) {
+        let p = caps.len();
+        if i == p - 1 {
+            if left > caps[i] {
+                return;
+            }
+            cur[i] = left;
+            let lam = cur
+                .iter()
+                .zip(c)
+                .map(|(&d, &ci)| d as f64 * ci)
+                .fold(0.0, f64::max);
+            if best.as_ref().map_or(true, |(b, _)| lam < *b) {
+                *best = Some((lam, cur.clone()));
+            }
+            return;
+        }
+        for d in 0..=left.min(caps[i]) {
+            cur[i] = d;
+            rec(i + 1, left - d, cur, caps, c, best);
+        }
+        cur[i] = 0;
+    }
+    rec(0, total, &mut cur, &caps, &c, &mut best);
+    best.map(|(_, d)| d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::machines::Machine;
+
+    fn toy_graph(m: usize) -> Graph {
+        // ER graph with ~m edges; exact count matters only via num_edges()
+        gen::erdos_renyi(m, m * 2, 9)
+    }
+
+    #[test]
+    fn homogeneous_split_is_even() {
+        let g = gen::erdos_renyi(100, 400, 1);
+        let cluster = Cluster::homogeneous(4, 10_000_000);
+        let d = capacities(&g, &cluster);
+        let m = g.num_edges() as u64;
+        assert_eq!(d.iter().sum::<u64>(), m);
+        for &x in &d {
+            assert!((x as i64 - (m / 4) as i64).abs() <= 1, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn faster_machines_get_more() {
+        let g = toy_graph(1000);
+        let cluster = Cluster::new(vec![
+            Machine::new(u64::MAX / 4, 0.0, 1.0, 1.0), // fast
+            Machine::new(u64::MAX / 4, 0.0, 3.0, 1.0), // 3x slower
+        ]);
+        let d = capacities(&g, &cluster);
+        assert_eq!(d.iter().sum::<u64>(), g.num_edges() as u64);
+        // equal ω -> δ_0 ≈ 3 δ_1
+        let ratio = d[0] as f64 / d[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn memory_caps_respected_and_respread() {
+        let g = toy_graph(1000);
+        let m = g.num_edges() as u64;
+        let mu = mem_per_edge(&g, &Cluster::homogeneous(1, 0));
+        // machine 0 can hold only ~10% of edges
+        let small_mem = (mu * (m as f64) * 0.1) as u64;
+        let cluster = Cluster::new(vec![
+            Machine::new(small_mem, 0.0, 1.0, 1.0),
+            Machine::new(u64::MAX / 4, 0.0, 1.0, 1.0),
+            Machine::new(u64::MAX / 4, 0.0, 1.0, 1.0),
+        ]);
+        let d = capacities(&g, &cluster);
+        assert_eq!(d.iter().sum::<u64>(), m);
+        let cap0 = (small_mem as f64 / mem_per_edge(&g, &cluster)).floor() as u64;
+        assert_eq!(d[0], cap0);
+        assert!(d[1] > d[0] && d[2] > d[0]);
+    }
+
+    #[test]
+    fn infeasible_returns_partial() {
+        let g = toy_graph(1000);
+        let cluster = Cluster::new(vec![Machine::new(10, 0.0, 1.0, 1.0); 2]);
+        let d = capacities(&g, &cluster);
+        assert!(d.iter().sum::<u64>() < g.num_edges() as u64);
+    }
+
+    #[test]
+    fn error_bound_vs_bruteforce() {
+        // Theorem 1: (λ_alg − λ*) / λ* ≤ p²/|E| (plus integer slack).
+        let g = gen::erdos_renyi(30, 60, 4);
+        let m = g.num_edges() as u64;
+        for mems in [[400u64, 400, 400], [100, 400, 400], [60, 100, 400]] {
+            let cluster = Cluster::new(vec![
+                Machine::new(mems[0], 1.0, 1.0, 1.0),
+                Machine::new(mems[1], 1.0, 2.0, 1.0),
+                Machine::new(mems[2], 1.0, 4.0, 1.0),
+            ]);
+            let d = capacities(&g, &cluster);
+            if d.iter().sum::<u64>() < m {
+                continue; // infeasible config
+            }
+            let opt = exact_capacities_bruteforce(&g, &cluster).unwrap();
+            let la = lambda(&g, &cluster, &d);
+            let lo = lambda(&g, &cluster, &opt);
+            let bound = (3.0f64 * 3.0) / m as f64;
+            assert!(
+                la <= lo * (1.0 + bound) + 1e-9 + *effective_rates(&g, &cluster)
+                    .iter()
+                    .fold(&0.0, |a, b| if b > a { b } else { a }),
+                "alg {la} opt {lo} bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_edges_graph() {
+        let g = gen::path(1);
+        let cluster = Cluster::homogeneous(2, 100);
+        let d = capacities(&g, &cluster);
+        assert_eq!(d.iter().sum::<u64>(), 0);
+    }
+}

@@ -1,0 +1,625 @@
+//! Partition expansion by best-first search (§3.3, Algorithms 2 + 3).
+//!
+//! Partitions are grown one at a time over the *working graph* (edges not
+//! yet assigned to earlier partitions). Per partition we maintain:
+//!   - core set `C` (vertices whose remaining edges are all claimed),
+//!   - boundary set `S` (vertices covered by `E_i`),
+//!   - for every `v ∈ S\C` the priority of Eq. 5
+//!       `w(v) = (1+α)·|N(v)\S| − (α + I_B(v)·β)·|N(v)|`
+//!     where `N(·)` ranges over the working graph and `B` is the global
+//!     border set (vertices already replicated in earlier partitions).
+//!
+//! Selection uses a lazy min-heap (stale entries skipped via per-vertex
+//! version counters) for the §3.3 `O(|E_i| + |V_i| log |V_i|)` bound.
+//! With α = β = 0 the priority degenerates to `|N(v)\S|` — exactly NE's
+//! rule [62] — so the NE baseline and the Figure-8 "WindGP*" ablation
+//! reuse this engine.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::graph::{EId, Graph, VId};
+use crate::machines::Cluster;
+use crate::partition::{EdgePartition, PartId, UNASSIGNED};
+use crate::util::SplitMix64;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ExpandParams {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl ExpandParams {
+    /// NE's selection rule (α = β = 0): minimize |N(v)\S| only.
+    pub fn ne() -> Self {
+        Self { alpha: 0.0, beta: 0.0 }
+    }
+}
+
+/// Lazy heap entry; min-heap by score, vertex id tie-break (determinism).
+struct Entry {
+    score: f64,
+    v: VId,
+    version: u32,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.score == other.score && self.v == other.v
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want the min score on top
+        other
+            .score
+            .partial_cmp(&self.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.v.cmp(&self.v))
+    }
+}
+
+pub struct Expander<'a> {
+    g: &'a Graph,
+    cluster: &'a Cluster,
+    /// globally assigned edges (across all partitions built so far)
+    pub assigned: Vec<bool>,
+    /// remaining (unassigned-edge) degree per vertex
+    pub rdeg: Vec<u32>,
+    /// global border set B
+    pub border: Vec<bool>,
+    rng: SplitMix64,
+    cursor: usize,
+    // ---- per-partition scratch ----
+    in_s: Vec<bool>,
+    in_core: Vec<bool>,
+    /// |N(v)\S| over unassigned edges, valid while in_s[v]
+    ext: Vec<u32>,
+    /// edges claimed for the current partition, per vertex
+    claimed_cur: Vec<u32>,
+    version: Vec<u32>,
+    touched: Vec<VId>,
+    heap: BinaryHeap<Entry>,
+    boundary_size: usize,
+}
+
+impl<'a> Expander<'a> {
+    pub fn new(g: &'a Graph, cluster: &'a Cluster, seed: u64) -> Self {
+        let assigned = vec![false; g.num_edges()];
+        let border = vec![false; g.num_vertices()];
+        Self::with_state(g, cluster, assigned, border, seed)
+    }
+
+    /// Resume from existing assignment state (used by SLS re-partition).
+    pub fn with_state(
+        g: &'a Graph,
+        cluster: &'a Cluster,
+        assigned: Vec<bool>,
+        border: Vec<bool>,
+        seed: u64,
+    ) -> Self {
+        let n = g.num_vertices();
+        let mut rdeg = vec![0u32; n];
+        for u in 0..n as VId {
+            let mut d = 0;
+            for &e in g.incident_edges(u) {
+                if !assigned[e as usize] {
+                    d += 1;
+                }
+            }
+            rdeg[u as usize] = d;
+        }
+        Self {
+            g,
+            cluster,
+            assigned,
+            rdeg,
+            border,
+            rng: SplitMix64::new(seed ^ 0x4558_5044),
+            cursor: 0,
+            in_s: vec![false; n],
+            in_core: vec![false; n],
+            ext: vec![0; n],
+            claimed_cur: vec![0; n],
+            version: vec![0; n],
+            touched: Vec::new(),
+            heap: BinaryHeap::new(),
+            boundary_size: 0,
+        }
+    }
+
+    #[inline]
+    fn score(&self, v: VId, p: &ExpandParams) -> f64 {
+        let vi = v as usize;
+        let tot = (self.rdeg[vi] + self.claimed_cur[vi]) as f64;
+        let ib = if self.border[vi] { p.beta } else { 0.0 };
+        (1.0 + p.alpha) * self.ext[vi] as f64 - (p.alpha + ib) * tot
+    }
+
+    fn push_entry(&mut self, v: VId, p: &ExpandParams) {
+        let e = Entry { score: self.score(v, p), v, version: self.version[v as usize] };
+        self.heap.push(e);
+    }
+
+    /// Add `y` to S: compute ext[y], decrement ext of in-S neighbors.
+    fn add_to_s(&mut self, y: VId, p: &ExpandParams) {
+        debug_assert!(!self.in_s[y as usize]);
+        self.in_s[y as usize] = true;
+        self.touched.push(y);
+        self.boundary_size += 1;
+        let mut ext = 0u32;
+        // single adjacency pass: count non-S unassigned neighbors of y and
+        // notify in-S neighbors that y moved into S
+        let (start, end) = (
+            self.g.offsets[y as usize] as usize,
+            self.g.offsets[y as usize + 1] as usize,
+        );
+        for idx in start..end {
+            let e = self.g.incident[idx];
+            if self.assigned[e as usize] {
+                continue;
+            }
+            let z = self.g.neighbors[idx];
+            if self.in_s[z as usize] {
+                if !self.in_core[z as usize] {
+                    self.ext[z as usize] -= 1;
+                    self.version[z as usize] += 1;
+                    self.push_entry(z, p);
+                }
+            } else {
+                ext += 1;
+            }
+        }
+        self.ext[y as usize] = ext;
+        self.version[y as usize] += 1;
+        self.push_entry(y, p);
+    }
+
+    /// One `AllocEdges` call (Algorithm 3). Returns false when the
+    /// partition must stop (capacity or memory exhausted).
+    #[allow(clippy::too_many_arguments)]
+    fn alloc_edges(
+        &mut self,
+        x: VId,
+        delta: u64,
+        mem: u64,
+        e_list: &mut Vec<EId>,
+        mem_used: &mut u64,
+        p: &ExpandParams,
+    ) -> bool {
+        if !self.in_s[x as usize] {
+            self.add_to_s(x, p);
+        }
+        if !self.in_core[x as usize] {
+            self.in_core[x as usize] = true;
+            self.boundary_size -= 1;
+        }
+        let (start, end) = (
+            self.g.offsets[x as usize] as usize,
+            self.g.offsets[x as usize + 1] as usize,
+        );
+        for idx in start..end {
+            let e = self.g.incident[idx];
+            if self.assigned[e as usize] {
+                continue;
+            }
+            let y = self.g.neighbors[idx];
+            if self.in_s[y as usize] {
+                continue;
+            }
+            self.add_to_s(y, p);
+            // claim all unassigned edges between y and S (includes x̄y)
+            let (ys, ye) = (
+                self.g.offsets[y as usize] as usize,
+                self.g.offsets[y as usize + 1] as usize,
+            );
+            for yidx in ys..ye {
+                let e2 = self.g.incident[yidx];
+                if self.assigned[e2 as usize] {
+                    continue;
+                }
+                let z = self.g.neighbors[yidx];
+                if !self.in_s[z as usize] {
+                    continue;
+                }
+                if !self.claim(e2, y, z, mem, e_list, mem_used) {
+                    return false;
+                }
+                if e_list.len() as u64 >= delta {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Claim one edge for the current partition, honoring the memory cap.
+    fn claim(
+        &mut self,
+        e: EId,
+        y: VId,
+        z: VId,
+        mem: u64,
+        e_list: &mut Vec<EId>,
+        mem_used: &mut u64,
+    ) -> bool {
+        let new_vs = (self.claimed_cur[y as usize] == 0) as u64
+            + (self.claimed_cur[z as usize] == 0) as u64;
+        let need = self.cluster.m_edge + self.cluster.m_node * new_vs;
+        if *mem_used + need > mem {
+            return false;
+        }
+        *mem_used += need;
+        self.assigned[e as usize] = true;
+        e_list.push(e);
+        self.rdeg[y as usize] -= 1;
+        self.rdeg[z as usize] -= 1;
+        self.claimed_cur[y as usize] += 1;
+        self.claimed_cur[z as usize] += 1;
+        true
+    }
+
+    /// `vertexSelection(V \ C)` for seeding a new component: lowest
+    /// remaining degree within a bounded scan window (degree-and-distance
+    /// heuristic of §3.3, deterministic).
+    fn fresh_vertex(&mut self) -> Option<VId> {
+        let n = self.g.num_vertices();
+        // eligible = unassigned incident edges remain AND not already core
+        // in the current partition (V \ C per Algorithm 2; core vertices
+        // with remaining edges are memory-blocked and must be skipped)
+        let eligible = |s: &Self, i: usize| s.rdeg[i] > 0 && !s.in_core[i];
+        // advance the persistent cursor past fully-exhausted vertices only
+        // (core vertices with remaining edges stay eligible next partition)
+        while self.cursor < n && self.rdeg[self.cursor] == 0 {
+            self.cursor += 1;
+        }
+        let mut start = self.cursor;
+        while start < n && !eligible(self, start) {
+            start += 1;
+        }
+        if start >= n {
+            // wrap once: earlier vertices may have regained rdeg (SLS resume)
+            start = 0;
+            while start < n && !eligible(self, start) {
+                start += 1;
+            }
+            if start >= n {
+                return None;
+            }
+        }
+        // min remaining degree within a bounded window; ties broken by the
+        // seeded rng — this is the diversification the SLS re-partition
+        // operator (Algorithm 7) relies on to escape local optima
+        let mut cands: Vec<VId> = vec![start as VId];
+        let mut best_d = self.rdeg[start];
+        let mut seen = 0;
+        let mut i = start + 1;
+        while i < n && seen < 63 {
+            if eligible(self, i) {
+                seen += 1;
+                let d = self.rdeg[i];
+                if d < best_d {
+                    best_d = d;
+                    cands.clear();
+                    cands.push(i as VId);
+                } else if d == best_d {
+                    cands.push(i as VId);
+                }
+            }
+            i += 1;
+        }
+        Some(cands[self.rng.next_usize(cands.len())])
+    }
+
+    /// Algorithm 2: grow partition `part` up to `delta` edges. Returns the
+    /// claimed edge ids in insertion (LIFO-able) order.
+    pub fn expand_partition(&mut self, _part: PartId, delta: u64, p: &ExpandParams) -> Vec<EId> {
+        let mut e_list: Vec<EId> = Vec::with_capacity(delta as usize);
+        if delta == 0 {
+            return e_list;
+        }
+        let part_idx = _part as usize;
+        let mem = self.cluster.machines[part_idx].mem;
+        let mut mem_used = 0u64;
+        loop {
+            if e_list.len() as u64 >= delta {
+                break;
+            }
+            let x = if self.boundary_size == 0 {
+                match self.fresh_vertex() {
+                    Some(x) => x,
+                    None => break, // no unassigned edges remain
+                }
+            } else {
+                match self.pop_best(p) {
+                    Some(x) => x,
+                    None => match self.fresh_vertex() {
+                        Some(x) => x,
+                        None => break,
+                    },
+                }
+            };
+            if !self.alloc_edges(x, delta, mem, &mut e_list, &mut mem_used, p) {
+                break;
+            }
+            // a fully-interior x may have claimed nothing (its edges were
+            // already absorbed, or memory blocked them); progress is
+            // guaranteed because x is now core and fresh selection skips
+            // core vertices
+            if e_list.len() as u64 >= delta {
+                break;
+            }
+        }
+        // B ← B ∪ (S \ C)
+        for &v in &self.touched {
+            if self.in_s[v as usize] && !self.in_core[v as usize] && self.claimed_cur[v as usize] > 0
+            {
+                self.border[v as usize] = true;
+            }
+        }
+        // reset per-partition scratch
+        for &v in &self.touched {
+            self.in_s[v as usize] = false;
+            self.in_core[v as usize] = false;
+            self.ext[v as usize] = 0;
+            self.claimed_cur[v as usize] = 0;
+            self.version[v as usize] += 1;
+        }
+        self.touched.clear();
+        self.heap.clear();
+        self.boundary_size = 0;
+        e_list
+    }
+
+    fn pop_best(&mut self, _p: &ExpandParams) -> Option<VId> {
+        while let Some(entry) = self.heap.pop() {
+            let v = entry.v as usize;
+            if !self.in_s[v] || self.in_core[v] {
+                continue;
+            }
+            if entry.version != self.version[v] {
+                continue; // stale
+            }
+            return Some(entry.v);
+        }
+        None
+    }
+
+    /// Assign any still-unassigned edges (capacity rounding / memory
+    /// cut-offs) greedily to machines with slack, preferring endpoint
+    /// owners — keeps Definition 3's completeness invariant.
+    pub fn sweep_leftovers(&mut self, ep: &mut EdgePartition, order: &mut [Vec<EId>]) {
+        use crate::partition::CostTracker;
+        if ep.assignment.iter().all(|&a| a != UNASSIGNED) {
+            return;
+        }
+        let mut t = CostTracker::new(self.g, self.cluster, ep);
+        let m = self.g.num_edges();
+        for e in 0..m as EId {
+            if t.assignment[e as usize] != UNASSIGNED {
+                continue;
+            }
+            let (u, v) = self.g.edge(e);
+            let mut best: Option<(u32, f64, u64)> = None; // (part, t, rank)
+            for i in 0..t.p {
+                let newv = t.new_endpoints(e, i as PartId);
+                if !t.edge_fits(i, newv) {
+                    continue;
+                }
+                // rank: prefer partitions already holding both endpoints,
+                // then one, then none; break ties by lowest current load
+                let holds = (t.has_vertex(u, i as PartId) as u64)
+                    + (t.has_vertex(v, i as PartId) as u64);
+                let rank = 2 - holds;
+                let ti = t.t(i);
+                let better = match best {
+                    None => true,
+                    Some((_, bt, br)) => rank < br || (rank == br && ti < bt),
+                };
+                if better {
+                    best = Some((i as u32, ti, rank));
+                }
+            }
+            // fall back to the machine with max slack even if tight
+            let part = best.map(|(i, _, _)| i).unwrap_or_else(|| {
+                (0..t.p)
+                    .max_by_key(|&i| t.mem_slack(i))
+                    .unwrap() as u32
+            });
+            t.add_edge(e, part);
+            order[part as usize].push(e);
+        }
+        *ep = t.to_partition();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::machines::Machine;
+    use crate::partition::Metrics;
+
+    fn big_mem_cluster(p: usize) -> Cluster {
+        Cluster::new(vec![Machine::new(u64::MAX / 8, 1.0, 1.0, 1.0); p])
+    }
+
+    #[test]
+    fn claims_every_edge_once() {
+        let g = gen::erdos_renyi(120, 600, 1);
+        let cluster = big_mem_cluster(3);
+        let mut ex = Expander::new(&g, &cluster, 1);
+        let m = g.num_edges() as u64;
+        let mut all: Vec<EId> = Vec::new();
+        for i in 0..3 {
+            let d = if i == 2 { m } else { m / 3 };
+            all.extend(ex.expand_partition(i, d, &ExpandParams::ne()));
+        }
+        all.sort_unstable();
+        let expect: Vec<EId> = (0..m as EId).collect();
+        assert_eq!(all, expect, "every edge claimed exactly once");
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let g = gen::erdos_renyi(200, 1000, 2);
+        let cluster = big_mem_cluster(2);
+        let mut ex = Expander::new(&g, &cluster, 1);
+        let e = ex.expand_partition(0, 100, &ExpandParams::ne());
+        assert!(e.len() <= 100 && e.len() >= 95, "len {}", e.len());
+    }
+
+    #[test]
+    fn respects_memory() {
+        let g = gen::erdos_renyi(200, 1000, 3);
+        // memory for ~50 edges: 50*2 + ~60 vertices*1 ≈ 160
+        let cluster = Cluster::new(vec![Machine::new(160, 1.0, 1.0, 1.0)]);
+        let mut ex = Expander::new(&g, &cluster, 1);
+        let e = ex.expand_partition(0, 100_000, &ExpandParams::ne());
+        // check the claimed subgraph truly fits
+        let mut vs = std::collections::HashSet::new();
+        for &eid in &e {
+            let (u, v) = g.edge(eid);
+            vs.insert(u);
+            vs.insert(v);
+        }
+        assert!(2 * e.len() as u64 + vs.len() as u64 <= 160);
+        assert!(!e.is_empty());
+    }
+
+    /// Figure 3 scenario at the selection level: after expanding a seed
+    /// region, the boundary holds a chain head "A" (ext=1, small degree)
+    /// and a hub "G" (more out-edges but far more in-S neighbors). NE
+    /// (α=0) walks down the chain; best-first (α large enough) absorbs G.
+    fn fig3_pick_order(params: ExpandParams) -> Vec<VId> {
+        // 0 = seed; A = 1, G = 2; 8,9 extra seed-neighbors also adjacent
+        // to G (they are interior and get absorbed first by both rules);
+        // chain 1-5; G's outside neighbors 6,7.
+        let mut b = crate::graph::GraphBuilder::new();
+        for v in [1u32, 2, 8, 9] {
+            b.add_edge(0, v);
+        }
+        b.add_edge(2, 8);
+        b.add_edge(2, 9);
+        b.add_edge(2, 6);
+        b.add_edge(2, 7);
+        b.add_edge(1, 5);
+        // leak so the helper can return data independent of local lifetimes
+        let g: &'static Graph = Box::leak(Box::new(b.build(10)));
+        let cluster: &'static Cluster = Box::leak(Box::new(big_mem_cluster(1)));
+        let mut ex = Expander::new(g, cluster, 1);
+        let mut e_list = Vec::new();
+        let mut mem_used = 0u64;
+        ex.alloc_edges(0, u64::MAX, u64::MAX, &mut e_list, &mut mem_used, &params);
+        let mut picks = Vec::new();
+        while let Some(x) = ex.pop_best(&params) {
+            picks.push(x);
+            ex.alloc_edges(x, u64::MAX, u64::MAX, &mut e_list, &mut mem_used, &params);
+        }
+        picks
+    }
+
+    #[test]
+    fn best_first_prefers_cohesion() {
+        let pos = |picks: &[VId], v: VId| picks.iter().position(|&x| x == v).unwrap();
+        // NE rule: chain head A (=1) chosen before hub G (=2)
+        let ne = fig3_pick_order(ExpandParams::ne());
+        assert!(pos(&ne, 1) < pos(&ne, 2), "NE order {ne:?}");
+        // best-first with α=0.6: hub G wins (higher |N∩S| cohesion)
+        let bf = fig3_pick_order(ExpandParams { alpha: 0.6, beta: 0.0 });
+        assert!(pos(&bf, 2) < pos(&bf, 1), "best-first order {bf:?}");
+    }
+
+    #[test]
+    fn border_beta_prefers_existing_borders() {
+        // two otherwise-identical boundary candidates; one is in B.
+        // With β > 0 the border vertex must win.
+        let mut b = crate::graph::GraphBuilder::new();
+        b.add_edge(0, 1);
+        b.add_edge(0, 2);
+        b.add_edge(1, 3); // out-edge of 1
+        b.add_edge(2, 4); // out-edge of 2
+        let g = b.build(5);
+        let cluster = big_mem_cluster(1);
+        let g: &'static Graph = Box::leak(Box::new(g));
+        let cluster: &'static Cluster = Box::leak(Box::new(cluster));
+        let params = ExpandParams { alpha: 0.3, beta: 0.3 };
+        let mut ex = Expander::new(g, cluster, 1);
+        ex.border[2] = true; // vertex 2 already replicated elsewhere
+        let mut e_list = Vec::new();
+        let mut mem_used = 0u64;
+        ex.alloc_edges(0, u64::MAX, u64::MAX, &mut e_list, &mut mem_used, &params);
+        let first = ex.pop_best(&params).unwrap();
+        assert_eq!(first, 2, "border vertex should be preferred");
+    }
+
+    #[test]
+    fn ne_vs_bestfirst_rf_on_skewed() {
+        // On a skewed graph, best-first should match or beat NE on RF.
+        let g = crate::graph::rmat::generate(&crate::graph::rmat::RmatParams::graph500(10, 8), 4);
+        let cluster = big_mem_cluster(8);
+        let m = g.num_edges() as u64;
+        let run = |p: ExpandParams| {
+            let mut ex = Expander::new(&g, &cluster, 2);
+            let mut ep = EdgePartition::unassigned(&g, 8);
+            for i in 0..8u32 {
+                let edges = ex.expand_partition(i, m / 8 + 1, &p);
+                for &e in &edges {
+                    ep.assignment[e as usize] = i;
+                }
+            }
+            let mut order = vec![Vec::new(); 8];
+            ex.sweep_leftovers(&mut ep, &mut order);
+            Metrics::new(&g, &cluster).report(&ep).rf
+        };
+        let rf_ne = run(ExpandParams::ne());
+        let rf_bf = run(ExpandParams { alpha: 0.3, beta: 0.3 });
+        assert!(rf_bf <= rf_ne * 1.08, "bf {rf_bf} vs ne {rf_ne}");
+    }
+
+    #[test]
+    fn sweep_leftovers_completes() {
+        let g = gen::erdos_renyi(100, 400, 5);
+        let cluster = big_mem_cluster(4);
+        let mut ex = Expander::new(&g, &cluster, 3);
+        let mut ep = EdgePartition::unassigned(&g, 4);
+        let mut order = vec![Vec::new(); 4];
+        // deliberately tiny deltas -> most edges left over
+        for i in 0..4u32 {
+            let edges = ex.expand_partition(i, 10, &ExpandParams::ne());
+            for &e in &edges {
+                ep.assignment[e as usize] = i;
+            }
+            order[i as usize] = edges;
+        }
+        ex.sweep_leftovers(&mut ep, &mut order);
+        assert!(ep.is_complete());
+        let total: usize = order.iter().map(|o| o.len()).sum();
+        assert_eq!(total, g.num_edges());
+    }
+
+    #[test]
+    fn disconnected_components_all_reached() {
+        // two disjoint cliques; expansion must hop components via
+        // vertexSelection
+        let mut b = crate::graph::GraphBuilder::new();
+        for base in [0u32, 10] {
+            for u in 0..5 {
+                for v in (u + 1)..5 {
+                    b.add_edge(base + u, base + v);
+                }
+            }
+        }
+        let g = b.build(15);
+        let cluster = big_mem_cluster(1);
+        let mut ex = Expander::new(&g, &cluster, 1);
+        let e = ex.expand_partition(0, 1000, &ExpandParams::ne());
+        assert_eq!(e.len(), 20, "both cliques fully claimed");
+    }
+}

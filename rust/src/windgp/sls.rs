@@ -1,0 +1,461 @@
+//! Subgraph-local search post-processing (§3.4, Algorithms 4–7).
+//!
+//! Two operators over the incremental [`CostTracker`]:
+//!
+//! - **destroy-and-repair** (Algorithm 5/6): machines with
+//!   `T_i ≥ min T + γ·(max T − min T)` lose a θ-fraction of their edges
+//!   (LIFO — last-claimed first, preserving each subgraph's connected
+//!   core), which are then re-placed greedily: first among machines
+//!   holding *both* endpoints, then *either*, then anywhere — always the
+//!   feasible machine with the lowest current total cost.
+//! - **re-partition** (Algorithm 7): on `N0` consecutive failed repairs,
+//!   pick the worst machine `i*`, the `k−1` machines sharing the most
+//!   replicas with it (`n_{i*,j}`), free all their edges and re-run the
+//!   best-first expansion (Algorithm 2) on the union.
+//!
+//! The main loop (Algorithm 4) runs `T0` global tries and keeps the best
+//! assignment seen, so SLS never returns something worse than its input.
+
+use crate::graph::{EId, Graph};
+use crate::machines::Cluster;
+use crate::partition::{CostTracker, EdgePartition, PartId, UNASSIGNED};
+use crate::util::SplitMix64;
+
+use super::expand::{ExpandParams, Expander};
+
+/// Which cost the post-processing minimizes (§4: Map-Reduce engines such
+/// as GraphX/Giraph barrier all computation before any communication, so
+/// the relevant metric is `max_i(max_j T_j^cal + T_i^com)` instead of TC).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Objective {
+    /// Definition 4: TC = max_i (T_i^cal + T_i^com) — BSP engines
+    #[default]
+    MaxTotal,
+    /// §4 Map-Reduce routine (Figure 7)
+    MapReduce,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SlsParams {
+    /// destroy-threshold quantile γ (default 0.9)
+    pub gamma: f64,
+    /// fraction of edges removed per destroyed machine θ (default 0.01)
+    pub theta: f64,
+    /// consecutive fail budget before re-partition N0 (default 5)
+    pub n0: usize,
+    /// global tries T0
+    pub t0: usize,
+    /// machines re-partitioned at once k
+    pub k: usize,
+    /// expansion parameters used by the re-partition operator
+    pub alpha: f64,
+    pub beta: f64,
+    /// the cost the search minimizes
+    pub objective: Objective,
+}
+
+impl Default for SlsParams {
+    fn default() -> Self {
+        Self { gamma: 0.7, theta: 0.02, n0: 5, t0: 30, k: 3, alpha: 0.3, beta: 0.3, objective: Objective::default() }
+    }
+}
+
+pub struct SubgraphLocalSearch<'a> {
+    g: &'a Graph,
+    objective: Objective,
+    cluster: &'a Cluster,
+    tracker: CostTracker<'a>,
+    /// per-partition edge insertion order (for LIFO destroys)
+    order: Vec<Vec<EId>>,
+    /// expansion capacities δ_i (reused by re-partition)
+    deltas: Vec<u64>,
+    rng: SplitMix64,
+    best_assignment: Vec<PartId>,
+    best_tc: f64,
+    best_feasible: bool,
+}
+
+impl<'a> SubgraphLocalSearch<'a> {
+    pub fn new(
+        g: &'a Graph,
+        cluster: &'a Cluster,
+        ep: EdgePartition,
+        order: Vec<Vec<EId>>,
+        deltas: Vec<u64>,
+        seed: u64,
+    ) -> Self {
+        let tracker = CostTracker::new(g, cluster, &ep);
+        let best_tc = tracker.tc();
+        let best_feasible = (0..tracker.p).all(|i| tracker.mem_slack(i) >= 0);
+        let best_assignment = tracker.assignment.clone();
+        Self {
+            g,
+            objective: Objective::default(),
+            cluster,
+            tracker,
+            order,
+            deltas,
+            rng: SplitMix64::new(seed ^ 0x534C_5321),
+            best_assignment,
+            best_tc,
+            best_feasible,
+        }
+    }
+
+    /// Current value of the configured objective.
+    fn cost(&self) -> f64 {
+        match self.objective {
+            Objective::MaxTotal => self.tracker.tc(),
+            Objective::MapReduce => self.tracker.map_reduce_cost(),
+        }
+    }
+
+    /// Algorithm 4 main loop.
+    pub fn run(&mut self, p: &SlsParams) {
+        self.objective = p.objective;
+        // re-baseline the incumbent under the configured objective
+        self.best_tc = self.cost();
+        let mut fails = 0usize;
+        for _ in 0..p.t0 {
+            if self.destroy_repair(p) {
+                fails = 0;
+            } else {
+                fails += 1;
+            }
+            self.snapshot_if_best();
+            if fails > p.n0 {
+                self.repartition(p);
+                self.snapshot_if_best();
+                fails = 0;
+            }
+        }
+    }
+
+    fn snapshot_if_best(&mut self) {
+        let tc = self.cost();
+        let feasible = (0..self.tracker.p).all(|i| self.tracker.mem_slack(i) >= 0);
+        // feasibility dominates; among equally-feasible states, lower TC wins
+        let better = (feasible && !self.best_feasible)
+            || (feasible == self.best_feasible && tc < self.best_tc);
+        if better {
+            self.best_tc = tc;
+            self.best_feasible = feasible;
+            self.best_assignment.clone_from(&self.tracker.assignment);
+        }
+    }
+
+    /// Algorithm 5. Returns true when TC improved.
+    pub fn destroy_repair(&mut self, p: &SlsParams) -> bool {
+        let before = self.cost();
+        let objective = self.objective;
+        let t = &mut self.tracker;
+        let np = t.p;
+        let tmin = (0..np).map(|i| t.t(i)).fold(f64::INFINITY, f64::min);
+        let tmax = (0..np).map(|i| t.t(i)).fold(0.0f64, f64::max);
+        if !(tmax > tmin) {
+            return false;
+        }
+        let thd = tmin + p.gamma * (tmax - tmin);
+
+        // destroy: LIFO removal of a θ-fraction from each hot machine
+        let mut removed: Vec<EId> = Vec::new();
+        for i in 0..np {
+            if t.t(i) < thd {
+                continue;
+            }
+            let quota = ((self.order[i].len() as f64 * p.theta).ceil() as usize).max(1);
+            let mut taken = 0;
+            while taken < quota {
+                let e = match self.order[i].pop() {
+                    Some(e) => e,
+                    None => break,
+                };
+                // order lists can contain stale ids after re-partition;
+                // skip edges no longer owned by machine i
+                if t.assignment[e as usize] != i as PartId {
+                    continue;
+                }
+                t.remove_edge(e);
+                removed.push(e);
+                taken += 1;
+            }
+        }
+        if removed.is_empty() {
+            return false;
+        }
+
+        // repair: greedy balanced re-placement (Algorithm 6 ladder).
+        // A rung "fails" (returns None, the paper's i = 0) when no
+        // candidate is both memory-feasible and *below the destroy
+        // threshold* — otherwise LIFO edges, whose endpoints live on the
+        // hot machine, would be handed straight back to it.
+        for &e in &removed {
+            let (u, v) = self.g.edge(e);
+            let su = t.parts_of(u);
+            let sv = t.parts_of(v);
+            let both: Vec<PartId> = su.iter().copied().filter(|x| sv.contains(x)).collect();
+            let either: Vec<PartId> = {
+                let mut m = su.clone();
+                for &x in &sv {
+                    if !m.contains(&x) {
+                        m.push(x);
+                    }
+                }
+                m
+            };
+            let all: Vec<PartId> = (0..np as PartId).collect();
+            let target = Self::balanced_greedy(t, e, &both, thd)
+                .or_else(|| Self::balanced_greedy(t, e, &either, thd))
+                .or_else(|| Self::balanced_greedy(t, e, &all, thd))
+                .or_else(|| Self::balanced_greedy(t, e, &all, f64::INFINITY))
+                .unwrap_or_else(|| {
+                    // nothing fits: put it back on the machine with max slack
+                    (0..np).max_by_key(|&i| t.mem_slack(i)).unwrap() as PartId
+                });
+            t.add_edge(e, target);
+            self.order[target as usize].push(e);
+        }
+        let after = match objective {
+            Objective::MaxTotal => t.tc(),
+            Objective::MapReduce => t.map_reduce_cost(),
+        };
+        after < before - 1e-12
+    }
+
+    /// Algorithm 6: feasible machine from `cands` with the lowest total
+    /// cost T_i strictly below `thd`. None when no candidate qualifies
+    /// (the paper's i = 0 failure signal).
+    fn balanced_greedy(t: &CostTracker, e: EId, cands: &[PartId], thd: f64) -> Option<PartId> {
+        let mut best: Option<(PartId, f64)> = None;
+        for &i in cands {
+            let newv = t.new_endpoints(e, i);
+            if !t.edge_fits(i as usize, newv) {
+                continue;
+            }
+            let ti = t.t(i as usize);
+            if ti >= thd {
+                continue;
+            }
+            if best.map_or(true, |(_, bt)| ti < bt) {
+                best = Some((i, ti));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Algorithm 7: free the worst machine + its k−1 strongest replica
+    /// partners and re-expand them with the original capacities.
+    pub fn repartition(&mut self, p: &SlsParams) {
+        let np = self.tracker.p;
+        if np < 2 {
+            return;
+        }
+        let worst = (0..np)
+            .max_by(|&a, &b| self.tracker.t(a).partial_cmp(&self.tracker.t(b)).unwrap())
+            .unwrap();
+        let mut partners: Vec<usize> = (0..np).filter(|&j| j != worst).collect();
+        partners.sort_by_key(|&j| std::cmp::Reverse(self.tracker.nij(worst, j)));
+        partners.truncate(p.k.saturating_sub(1));
+        let mut selected = partners;
+        selected.push(worst);
+        selected.sort_unstable();
+
+        // free all their edges
+        for &i in &selected {
+            for e in std::mem::take(&mut self.order[i]) {
+                if self.tracker.assignment[e as usize] == i as PartId {
+                    self.tracker.remove_edge(e);
+                }
+            }
+        }
+        // rebuild with the expansion engine, resuming global state:
+        // assigned = everything except the freed edges; border = vertices
+        // replicated among the *unselected* partitions
+        let assigned: Vec<bool> = self
+            .tracker
+            .assignment
+            .iter()
+            .map(|&a| a != UNASSIGNED)
+            .collect();
+        let mut border = vec![false; self.g.num_vertices()];
+        for v in 0..self.g.num_vertices() as u32 {
+            if self.tracker.parts_of(v).len() > 1 {
+                border[v as usize] = true;
+            }
+        }
+        let seed = self.rng.next_u64();
+        let mut ex = Expander::with_state(self.g, self.cluster, assigned, border, seed);
+        let params = ExpandParams { alpha: p.alpha, beta: p.beta };
+        for &i in &selected {
+            let edges = ex.expand_partition(i as PartId, self.deltas[i], &params);
+            for &e in &edges {
+                self.tracker.add_edge(e, i as PartId);
+            }
+            self.order[i] = edges;
+        }
+        // leftovers (memory cut-offs during re-expansion) go greedy
+        for e in 0..self.g.num_edges() as EId {
+            if self.tracker.assignment[e as usize] == UNASSIGNED {
+                let all: Vec<PartId> = (0..np as PartId).collect();
+                let target = Self::balanced_greedy(&self.tracker, e, &all, f64::INFINITY)
+                    .unwrap_or_else(|| {
+                        (0..np).max_by_key(|&i| self.tracker.mem_slack(i)).unwrap() as PartId
+                    });
+                self.tracker.add_edge(e, target);
+                self.order[target as usize].push(e);
+            }
+        }
+    }
+
+    /// Final result: the best feasible assignment seen.
+    pub fn into_partition(mut self) -> EdgePartition {
+        self.snapshot_if_best();
+        EdgePartition { p: self.tracker.p, assignment: self.best_assignment }
+    }
+
+    pub fn tc(&self) -> f64 {
+        self.tracker.tc()
+    }
+
+    pub fn best_tc(&self) -> f64 {
+        self.best_tc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::machines::Machine;
+    use crate::partition::Metrics;
+
+    /// Build a deliberately unbalanced starting partition.
+    fn skewed_start(g: &Graph, p: usize) -> (EdgePartition, Vec<Vec<EId>>) {
+        let m = g.num_edges();
+        let mut ep = EdgePartition::unassigned(g, p);
+        let mut order = vec![Vec::new(); p];
+        for e in 0..m {
+            // 70% of edges to machine 0
+            let part = if e % 10 < 7 { 0 } else { 1 + e % (p - 1) };
+            ep.assignment[e] = part as PartId;
+            order[part].push(e as EId);
+        }
+        (ep, order)
+    }
+
+    fn cluster(p: usize) -> Cluster {
+        Cluster::new(vec![Machine::new(1_000_000, 1.0, 2.0, 1.0); p])
+    }
+
+    #[test]
+    fn sls_improves_skewed_partition() {
+        let g = gen::erdos_renyi(300, 1500, 1);
+        let c = cluster(4);
+        let (ep, order) = skewed_start(&g, 4);
+        let before = Metrics::new(&g, &c).report(&ep).tc;
+        let deltas = vec![(g.num_edges() / 4 + 1) as u64; 4];
+        let mut sls = SubgraphLocalSearch::new(&g, &c, ep, order, deltas, 2);
+        sls.run(&SlsParams { t0: 30, theta: 0.05, gamma: 0.5, ..Default::default() });
+        let ep2 = sls.into_partition();
+        let after = Metrics::new(&g, &c).report(&ep2).tc;
+        assert!(ep2.is_complete());
+        assert!(after < before * 0.9, "before {before}, after {after}");
+    }
+
+    #[test]
+    fn sls_never_worse_than_input() {
+        let g = gen::erdos_renyi(100, 500, 7);
+        let c = cluster(3);
+        let (ep, order) = skewed_start(&g, 3);
+        let before = Metrics::new(&g, &c).report(&ep).tc;
+        let deltas = vec![(g.num_edges() / 3 + 1) as u64; 3];
+        let mut sls = SubgraphLocalSearch::new(&g, &c, ep, order, deltas, 5);
+        sls.run(&SlsParams::default());
+        let after = Metrics::new(&g, &c).report(&sls.into_partition()).tc;
+        assert!(after <= before + 1e-9);
+    }
+
+    #[test]
+    fn repartition_preserves_completeness() {
+        let g = gen::erdos_renyi(200, 800, 3);
+        let c = cluster(4);
+        let (ep, order) = skewed_start(&g, 4);
+        let deltas = vec![(g.num_edges() / 4 + 1) as u64; 4];
+        let mut sls = SubgraphLocalSearch::new(&g, &c, ep, order, deltas, 9);
+        sls.repartition(&SlsParams::default());
+        let ep2 = sls.into_partition();
+        assert!(ep2.is_complete());
+    }
+
+    #[test]
+    fn destroy_repair_respects_memory() {
+        // feasible-but-unbalanced start under tight memory: SLS must
+        // improve TC without ever snapshotting an infeasible state
+        let g = gen::erdos_renyi(100, 400, 2);
+        let mu = 2.0 + 100.0 / g.num_edges() as f64;
+        let mem = (g.num_edges() as f64 * mu * 0.8) as u64; // each fits 80%
+        let c = Cluster::new(vec![Machine::new(mem, 1.0, 2.0, 1.0); 4]);
+        let (ep, order) = skewed_start(&g, 4); // 70% on machine 0: feasible
+        assert!(Metrics::new(&g, &c).report(&ep).all_feasible());
+        let deltas = vec![(g.num_edges() / 4 + 1) as u64; 4];
+        let mut sls = SubgraphLocalSearch::new(&g, &c, ep, order, deltas, 4);
+        sls.run(&SlsParams { t0: 10, theta: 0.05, gamma: 0.5, ..Default::default() });
+        let ep2 = sls.into_partition();
+        let r = Metrics::new(&g, &c).report(&ep2);
+        assert!(ep2.is_complete());
+        assert!(r.all_feasible());
+    }
+}
+
+#[cfg(test)]
+mod objective_tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::machines::{Cluster, Machine};
+    use crate::partition::{EdgePartition, Metrics};
+
+    #[test]
+    fn map_reduce_objective_optimizes_figure7_cost() {
+        // §4: under the Map-Reduce routine the search should minimize
+        // max_i(max_j T_j^cal + T_i^com) rather than TC. Run both
+        // objectives from the same skewed start and check each wins on
+        // its own metric (or ties).
+        let g = gen::erdos_renyi(300, 1500, 21);
+        let c = Cluster::new(vec![Machine::new(1_000_000, 1.0, 2.0, 3.0); 4]);
+        let m = g.num_edges();
+        let mut ep = EdgePartition::unassigned(&g, 4);
+        let mut order = vec![Vec::new(); 4];
+        for e in 0..m {
+            let part = if e % 10 < 7 { 0 } else { 1 + e % 3 };
+            ep.assignment[e] = part as u32;
+            order[part].push(e as u32);
+        }
+        let deltas = vec![(m / 4 + 1) as u64; 4];
+        let run = |objective: Objective| {
+            let mut sls = SubgraphLocalSearch::new(&g, &c, ep.clone(), order.clone(), deltas.clone(), 3);
+            sls.run(&SlsParams { objective, t0: 30, theta: 0.05, gamma: 0.5, ..Default::default() });
+            let out = sls.into_partition();
+            let metrics = Metrics::new(&g, &c);
+            let r = metrics.report(&out);
+            (r.tc, metrics.map_reduce_objective(&out))
+        };
+        let (tc_a, mr_a) = run(Objective::MaxTotal);
+        let (tc_b, mr_b) = run(Objective::MapReduce);
+        assert!(mr_b <= mr_a * 1.02, "mapreduce objective {mr_b} vs {mr_a}");
+        assert!(tc_a <= tc_b * 1.05, "tc objective {tc_a} vs {tc_b}");
+    }
+
+    #[test]
+    fn map_reduce_cost_matches_metrics() {
+        use crate::partition::CostTracker;
+        let g = gen::erdos_renyi(80, 300, 5);
+        let c = Cluster::new(vec![Machine::new(1_000_000, 1.0, 2.0, 3.0); 3]);
+        let ep = EdgePartition::from_assignment(
+            3,
+            (0..g.num_edges()).map(|e| (e % 3) as u32).collect(),
+        );
+        let t = CostTracker::new(&g, &c, &ep);
+        let want = Metrics::new(&g, &c).map_reduce_objective(&ep);
+        assert!((t.map_reduce_cost() - want).abs() < 1e-9);
+    }
+}

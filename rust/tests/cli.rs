@@ -1,0 +1,78 @@
+//! CLI smoke tests: run the actual `windgp` binary end-to-end.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_windgp"))
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["experiment", "partition", "simulate", "gen", "smoke", "list"] {
+        assert!(text.contains(cmd), "missing {cmd}");
+    }
+}
+
+#[test]
+fn list_shows_algorithms_and_experiments() {
+    let out = bin().arg("list").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("windgp"));
+    assert!(text.contains("table14"));
+}
+
+#[test]
+fn partition_small_graph_prints_report() {
+    let out = bin()
+        .args(["partition", "--graph", "rn-s", "--algo", "windgp", "--shrink", "4"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("TC"));
+    assert!(text.contains("feasible"));
+    assert!(text.contains("true"));
+}
+
+#[test]
+fn simulate_bfs_runs() {
+    let out = bin()
+        .args([
+            "simulate", "--graph", "rn-s", "--algo", "ne", "--workload", "bfs", "--shrink", "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("BFS"));
+    assert!(text.contains("supersteps"));
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn unknown_algo_fails_cleanly() {
+    let out = bin()
+        .args(["partition", "--graph", "rn-s", "--algo", "bogus", "--shrink", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown algorithm"));
+}

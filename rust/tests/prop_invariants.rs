@@ -1,0 +1,209 @@
+//! Property-based invariant suite (proptest-style: seeded random
+//! generation + shrink-free assertion loops; the offline crate set has no
+//! proptest, so cases are enumerated from a SplitMix64 stream).
+//!
+//! Invariants:
+//!   P1  every partitioner yields complete partitions (Definition 3)
+//!   P2  capacity vectors respect memory and sum to |E| when feasible
+//!   P3  Algorithm 1 matches the brute-force optimum within Theorem 1's
+//!       bound on random tiny instances
+//!   P4  CostTracker stays consistent with from-scratch Metrics under
+//!       arbitrary move sequences
+//!   P5  TC(WindGP) never exceeds TC(random hash) on any tested instance
+//!   P6  replica-pair matrix symmetry + RF/com identities
+
+use windgp::baselines::{Dbh, Ebv, Hdrf, NeighborExpansion, PowerGraphGreedy, RandomHash};
+use windgp::graph::gen;
+use windgp::machines::{Cluster, Machine};
+use windgp::partition::{CostTracker, EdgePartition, Metrics, Partitioner, UNASSIGNED};
+use windgp::util::SplitMix64;
+use windgp::windgp::{capacity, WindGP};
+
+fn random_graph(rng: &mut SplitMix64) -> windgp::Graph {
+    let n = 20 + rng.next_usize(200);
+    let m = n + rng.next_usize(4 * n);
+    gen::erdos_renyi(n, m, rng.next_u64())
+}
+
+fn random_cluster(rng: &mut SplitMix64, g: &windgp::Graph, feasible: bool) -> Cluster {
+    let p = 2 + rng.next_usize(6);
+    let mu = 2.0 + g.num_vertices() as f64 / g.num_edges().max(1) as f64;
+    let total_need = g.num_edges() as f64 * mu;
+    let slack = if feasible { 1.5 + rng.next_f64() * 2.0 } else { 0.3 };
+    let machines: Vec<Machine> = (0..p)
+        .map(|_| {
+            let share = 0.5 + rng.next_f64();
+            Machine::new(
+                ((total_need * slack / p as f64) * share) as u64,
+                rng.next_f64() * 5.0,
+                1.0 + rng.next_f64() * 10.0,
+                1.0 + rng.next_f64() * 10.0,
+            )
+        })
+        .collect();
+    Cluster::new(machines)
+}
+
+#[test]
+fn p1_completeness_across_partitioners() {
+    let mut rng = SplitMix64::new(101);
+    for case in 0..15 {
+        let g = random_graph(&mut rng);
+        let cluster = random_cluster(&mut rng, &g, true);
+        let algos: Vec<Box<dyn Partitioner>> = vec![
+            Box::new(RandomHash),
+            Box::new(Dbh),
+            Box::new(PowerGraphGreedy),
+            Box::new(Hdrf::default()),
+            Box::new(NeighborExpansion::default()),
+            Box::new(Ebv::default()),
+            Box::new(WindGP::default()),
+        ];
+        for a in &algos {
+            let ep = a.partition(&g, &cluster, case);
+            assert!(ep.is_complete(), "case {case}: {} incomplete", a.name());
+            // Definition 3 disjointness is structural; check totals
+            let total: usize = ep.edges_by_part().iter().map(|v| v.len()).sum();
+            assert_eq!(total, g.num_edges());
+        }
+    }
+}
+
+#[test]
+fn p2_capacity_memory_and_sum() {
+    let mut rng = SplitMix64::new(202);
+    for _ in 0..40 {
+        let g = random_graph(&mut rng);
+        let cluster = random_cluster(&mut rng, &g, true);
+        let d = capacity::capacities(&g, &cluster);
+        let mu = capacity::mem_per_edge(&g, &cluster);
+        for (i, &di) in d.iter().enumerate() {
+            assert!(
+                di as f64 * mu <= cluster.machines[i].mem as f64 + mu,
+                "capacity exceeds memory"
+            );
+        }
+        assert!(d.iter().sum::<u64>() <= g.num_edges() as u64);
+        // with generous slack, the sum must be exactly |E|
+        let generous = Cluster::new(
+            cluster
+                .machines
+                .iter()
+                .map(|m| Machine::new(u64::MAX / 16, m.c_node, m.c_edge, m.c_com))
+                .collect(),
+        );
+        let d2 = capacity::capacities(&g, &generous);
+        assert_eq!(d2.iter().sum::<u64>(), g.num_edges() as u64);
+    }
+}
+
+#[test]
+fn p3_algorithm1_near_optimal_on_tiny_instances() {
+    let mut rng = SplitMix64::new(303);
+    for _ in 0..25 {
+        let g = gen::erdos_renyi(12 + rng.next_usize(10), 30 + rng.next_usize(30), rng.next_u64());
+        let p = 2 + rng.next_usize(2); // 2..=3
+        let mu = 2.0 + g.num_vertices() as f64 / g.num_edges() as f64;
+        let total_need = g.num_edges() as f64 * mu;
+        let machines: Vec<Machine> = (0..p)
+            .map(|_| {
+                Machine::new(
+                    ((total_need * (0.6 + rng.next_f64())) / p as f64 * 1.6) as u64,
+                    0.0,
+                    1.0 + rng.next_f64() * 4.0,
+                    1.0,
+                )
+            })
+            .collect();
+        let cluster = Cluster::new(machines);
+        let d = capacity::capacities(&g, &cluster);
+        if d.iter().sum::<u64>() < g.num_edges() as u64 {
+            continue; // infeasible instance
+        }
+        let Some(opt) = capacity::exact_capacities_bruteforce(&g, &cluster) else {
+            continue;
+        };
+        let la = capacity::lambda(&g, &cluster, &d);
+        let lo = capacity::lambda(&g, &cluster, &opt);
+        let rates = capacity::effective_rates(&g, &cluster);
+        let cmax = rates.iter().cloned().fold(0.0, f64::max);
+        // Theorem 1 bound plus one-edge integer slack
+        let bound = lo * (p * p) as f64 / g.num_edges() as f64 + cmax * p as f64;
+        assert!(la <= lo + bound + 1e-9, "alg {la} opt {lo} bound {bound}");
+    }
+}
+
+#[test]
+fn p4_tracker_matches_metrics_under_churn() {
+    let mut rng = SplitMix64::new(404);
+    for _ in 0..10 {
+        let g = random_graph(&mut rng);
+        let cluster = random_cluster(&mut rng, &g, true);
+        let p = cluster.len();
+        let mut ep = EdgePartition::unassigned(&g, p);
+        for e in 0..g.num_edges() {
+            if rng.next_f64() < 0.8 {
+                ep.assignment[e] = rng.next_usize(p) as u32;
+            }
+        }
+        let mut t = CostTracker::new(&g, &cluster, &ep);
+        for _ in 0..300 {
+            let e = rng.next_usize(g.num_edges()) as u32;
+            let cur = t.assignment[e as usize];
+            if cur == UNASSIGNED {
+                t.add_edge(e, rng.next_usize(p) as u32);
+            } else if rng.next_f64() < 0.5 {
+                t.remove_edge(e);
+            } else {
+                t.move_edge(e, rng.next_usize(p) as u32);
+            }
+        }
+        let r = Metrics::new(&g, &cluster).report(&t.to_partition());
+        for i in 0..p {
+            assert!((t.t_cal(i) - r.t_cal[i]).abs() < 1e-6);
+            assert!((t.t_com(i) - r.t_com[i]).abs() < 1e-6);
+            assert_eq!(t.v_count[i], r.v_count[i]);
+            assert_eq!(t.e_count[i], r.e_count[i]);
+        }
+        assert!((t.tc() - r.tc).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn p5_windgp_never_loses_to_hash() {
+    let mut rng = SplitMix64::new(505);
+    for case in 0..10 {
+        let g = random_graph(&mut rng);
+        let cluster = random_cluster(&mut rng, &g, true);
+        let m = Metrics::new(&g, &cluster);
+        let wind = m.report(&WindGP::default().partition(&g, &cluster, case)).tc;
+        let hash = m.report(&RandomHash.partition(&g, &cluster, case)).tc;
+        assert!(wind <= hash * 1.05, "case {case}: windgp {wind} hash {hash}");
+    }
+}
+
+#[test]
+fn p6_replica_identities() {
+    let mut rng = SplitMix64::new(606);
+    for _ in 0..10 {
+        let g = random_graph(&mut rng);
+        let cluster = random_cluster(&mut rng, &g, true);
+        let ep = Hdrf::default().partition(&g, &cluster, 1);
+        let m = Metrics::new(&g, &cluster);
+        let pairs = m.replica_pairs(&ep);
+        let p = cluster.len();
+        for i in 0..p {
+            assert_eq!(pairs[i][i], 0);
+            for j in 0..p {
+                assert_eq!(pairs[i][j], pairs[j][i]);
+            }
+        }
+        // RF identity: sum |S(u)| = sum over partitions of |V_i|
+        let r = m.report(&ep);
+        let nonisolated = (0..g.num_vertices() as u32)
+            .filter(|&v| g.degree(v) > 0)
+            .count() as f64;
+        let vsum: u64 = r.v_count.iter().sum();
+        assert!((r.rf - vsum as f64 / nonisolated).abs() < 1e-9);
+    }
+}
