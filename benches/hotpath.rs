@@ -11,6 +11,7 @@
 use windgp::graph::rmat::{generate, RmatParams};
 use windgp::machines::Cluster;
 use windgp::partition::{CostTracker, EdgePartition};
+#[cfg(feature = "pjrt")]
 use windgp::runtime::{PjrtBackend, PjrtEngine};
 use windgp::simulator::ell::{EllBackend, EllBlock, PureBackend};
 use windgp::simulator::SimGraph;
@@ -80,29 +81,34 @@ fn main() {
     );
     println!("  -> {:.1}M lanes/s", throughput(blk.rows * blk.k, s.mean) / 1e6);
 
-    if PjrtEngine::default_dir().join("manifest.json").exists() {
-        let engine = PjrtEngine::load(PjrtEngine::default_dir()).unwrap();
-        let mut be = PjrtBackend::new(engine);
-        // pick an artifact-shaped block
-        let (k, pad) = be.chooser("pagerank")(l);
-        if let Some(n) = pad {
-            let blk = EllBlock::build(l, k, Some(n), |_, _| 0.5);
-            let x = blk.fill_x(&vec![1.0; blk.verts], 0.0);
-            let s = bench(
-                &format!("ell spmv PJRT ({} rows x {})", blk.rows, blk.k),
-                5,
-                || {
-                    let y = be.spmv(0, &blk, &x);
-                    assert_eq!(y.len(), blk.rows);
-                },
-            );
-            println!(
-                "  -> {:.1}M lanes/s ({} pjrt calls)",
-                throughput(blk.rows * blk.k, s.mean) / 1e6,
-                be.pjrt_calls
-            );
+    #[cfg(feature = "pjrt")]
+    {
+        if PjrtEngine::default_dir().join("manifest.json").exists() {
+            let engine = PjrtEngine::load(PjrtEngine::default_dir()).unwrap();
+            let mut be = PjrtBackend::new(engine);
+            // pick an artifact-shaped block
+            let (k, pad) = be.chooser("pagerank")(l);
+            if let Some(n) = pad {
+                let blk = EllBlock::build(l, k, Some(n), |_, _| 0.5);
+                let x = blk.fill_x(&vec![1.0; blk.verts], 0.0);
+                let s = bench(
+                    &format!("ell spmv PJRT ({} rows x {})", blk.rows, blk.k),
+                    5,
+                    || {
+                        let y = be.spmv(0, &blk, &x);
+                        assert_eq!(y.len(), blk.rows);
+                    },
+                );
+                println!(
+                    "  -> {:.1}M lanes/s ({} pjrt calls)",
+                    throughput(blk.rows * blk.k, s.mean) / 1e6,
+                    be.pjrt_calls
+                );
+            }
+        } else {
+            println!("(PJRT kernel bench skipped: run `make artifacts`)");
         }
-    } else {
-        println!("(PJRT kernel bench skipped: run `make artifacts`)");
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(PJRT kernel bench skipped: build with `--features pjrt`)");
 }

@@ -13,7 +13,7 @@
 
 pub mod pool;
 
-pub use pool::parallel_map;
+pub use pool::{parallel_map, parallel_map_workers};
 
 use std::time::Instant;
 

@@ -1,42 +1,133 @@
 //! Minimal scoped worker pool: `parallel_map` spreads independent closures
 //! over `min(n_jobs, cores)` threads. (The offline crate set has no rayon;
 //! this covers the harness's embarrassingly-parallel fan-outs.)
+//!
+//! Design notes (§Perf):
+//!  - The work queue is the only shared mutable state; each `(index, item)`
+//!    is popped under a short lock, but `f` runs and its result lands in a
+//!    **worker-local** buffer — there is no shared result mutex, so result
+//!    writes never contend (the old implementation funneled every write
+//!    through a single `Mutex<&mut Vec<Option<R>>>`, serializing workers
+//!    whose closures are cheap relative to the lock).
+//!  - Per-slot assembly happens after the scope joins: every index is
+//!    written exactly once, in deterministic order, so output order always
+//!    equals input order regardless of scheduling.
+//!  - A panicking worker no longer masks itself as a `PoisonError`: sibling
+//!    workers recover the queue from poisoning and drain the remaining
+//!    items, and the original panic payload is re-raised verbatim via
+//!    `resume_unwind` when the panicking worker is joined.
+//!  - `WINDGP_WORKERS=<n>` overrides the thread count (n = 1 forces the
+//!    strictly sequential path — used by determinism tests and benches).
+
+use std::cell::Cell;
+use std::sync::Mutex;
+
+thread_local! {
+    /// True while the current thread is a pool worker. Nested
+    /// `parallel_map` calls (e.g. `Metrics::report`'s chunked pass inside
+    /// an experiment fan-out worker) run sequentially instead of stacking
+    /// cores² threads — the outer level already saturates the machine.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Worker count for `n` jobs: `WINDGP_WORKERS` if set, else the machine's
+/// available parallelism, in both cases clamped to `[1, n]`.
+fn configured_workers(n: usize) -> usize {
+    let cap = n.max(1);
+    if let Ok(v) = std::env::var("WINDGP_WORKERS") {
+        if let Ok(k) = v.trim().parse::<usize>() {
+            if k >= 1 {
+                return k.min(cap);
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(4)
+        .min(cap)
+}
 
 /// Map `f` over `items` in parallel, preserving order.
+///
+/// Deterministic contract: the output is exactly
+/// `items.into_iter().map(f).collect()` for any worker count — only
+/// wall-clock changes. If `f` panics for some item, the first panic payload
+/// (in worker-join order) is propagated to the caller after all workers
+/// finish; completed results are dropped.
 pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
 {
+    let workers = configured_workers(items.len());
+    parallel_map_workers(items, workers, f)
+}
+
+/// [`parallel_map`] with an explicit worker count (clamped to `[1, n]`).
+/// `workers == 1` runs strictly sequentially on the calling thread — the
+/// reference path that determinism tests compare the parallel path against.
+pub fn parallel_map_workers<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
     let n = items.len();
-    if n <= 1 {
+    let workers = workers.max(1).min(n.max(1));
+    if n <= 1 || workers == 1 || IN_POOL_WORKER.with(|c| c.get()) {
         return items.into_iter().map(f).collect();
     }
-    let workers = std::thread::available_parallelism()
-        .map(|c| c.get())
-        .unwrap_or(4)
-        .min(n);
-    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
-    let queue = std::sync::Mutex::new(work);
-    let slots_mutex = std::sync::Mutex::new(&mut slots);
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let item = { queue.lock().unwrap().pop() };
-                match item {
-                    Some((idx, t)) => {
-                        let r = f(t);
-                        let mut guard = slots_mutex.lock().unwrap();
-                        guard[idx] = Some(r);
+
+    let mut work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    // Pop from the back; reversed so items are handed out in index order
+    // (keeps cache-friendly progression and stable load shapes).
+    work.reverse();
+    let queue = Mutex::new(work);
+    let queue = &queue;
+    let f = &f;
+
+    // Each worker accumulates (index, result) pairs privately; the scope
+    // join is the only synchronization point for results.
+    let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(move || {
+                    IN_POOL_WORKER.with(|c| c.set(true));
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        // A sibling panic can only poison the queue lock,
+                        // never corrupt the Vec (pop happens outside `f`);
+                        // recover and keep draining so no item is lost.
+                        let next = queue.lock().unwrap_or_else(|e| e.into_inner()).pop();
+                        match next {
+                            Some((idx, t)) => local.push((idx, f(t))),
+                            None => return local,
+                        }
                     }
-                    None => break,
-                }
-            });
-        }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|payload| std::panic::resume_unwind(payload))
+            })
+            .collect()
     });
-    slots.into_iter().map(|s| s.unwrap()).collect()
+
+    // Disjoint per-slot writes: every index appears exactly once across the
+    // worker buffers.
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (idx, r) in per_worker.into_iter().flatten() {
+        debug_assert!(slots[idx].is_none(), "index {idx} produced twice");
+        slots[idx] = Some(r);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("parallel_map: item dropped by a worker"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -50,9 +141,27 @@ mod tests {
     }
 
     #[test]
+    fn empty_input_returns_empty() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
     fn single_item_runs_inline() {
         let out = parallel_map(vec![7], |x: i32| x + 1);
         assert_eq!(out, vec![8]);
+    }
+
+    #[test]
+    fn more_items_than_cores() {
+        // n far above any plausible core count: every item must still be
+        // mapped exactly once, in order.
+        let n = 10_000usize;
+        let out = parallel_map((0..n).collect(), |x: usize| x.wrapping_mul(3) ^ 1);
+        assert_eq!(out.len(), n);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i.wrapping_mul(3) ^ 1);
+        }
     }
 
     #[test]
@@ -66,5 +175,66 @@ mod tests {
             acc
         });
         assert_eq!(out.len(), 64);
+    }
+
+    #[test]
+    fn explicit_worker_counts_agree_with_sequential() {
+        let items: Vec<u64> = (0..257).collect();
+        let seq: Vec<u64> = items.iter().map(|&x| x * x + 1).collect();
+        for workers in [1usize, 2, 3, 8, 64] {
+            let par = parallel_map_workers(items.clone(), workers, |x| x * x + 1);
+            assert_eq!(par, seq, "workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn nested_calls_run_sequentially_and_correctly() {
+        // inner parallel_map inside a pool worker must not fan out again,
+        // and the combined result must match the pure-sequential answer
+        let out = parallel_map_workers((0..8u64).collect(), 4, |x| {
+            let inner = parallel_map((0..10u64).collect(), move |y| x * 100 + y);
+            inner.iter().sum::<u64>()
+        });
+        let expect: Vec<u64> = (0..8u64)
+            .map(|x| (0..10u64).map(|y| x * 100 + y).sum())
+            .collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn worker_panic_propagates_original_payload() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_map_workers((0..32).collect(), 4, |x: i32| {
+                if x == 17 {
+                    panic!("boom-17");
+                }
+                x
+            })
+        }));
+        let payload = result.expect_err("worker panic must propagate");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("boom-17"), "payload masked: {msg:?}");
+    }
+
+    #[test]
+    fn panic_in_one_worker_does_not_deadlock_others() {
+        // All non-panicking items are still computed (drained by siblings)
+        // before the panic surfaces — the call must terminate either way.
+        for _ in 0..5 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                parallel_map_workers((0..200).collect(), 8, |x: i32| {
+                    if x == 0 {
+                        panic!("first item dies");
+                    }
+                    x
+                })
+            }));
+            assert!(r.is_err());
+        }
     }
 }

@@ -8,6 +8,7 @@ use crate::baselines::{
     Cpp49, Dbh, Ebv, GrapHLike, HaSGP, Haep, Hdrf, MetisLike, NeighborExpansion, PowerGraphGreedy,
     RandomHash,
 };
+use crate::coordinator::parallel_map;
 use crate::graph::{gen, Graph};
 use crate::machines::Cluster;
 use crate::partition::Partitioner;
@@ -113,7 +114,21 @@ impl ExpCtx {
     }
 
     /// Average a metric over `self.seeds` runs.
-    pub fn avg<F: Fn(u64) -> f64>(&self, f: F) -> f64 {
+    ///
+    /// The per-seed runs are independent (each `Partitioner::partition` is
+    /// deterministic in its seed), so they fan out through
+    /// [`parallel_map`]; results come back in seed order and are summed
+    /// sequentially, making the average bit-identical to
+    /// [`Self::avg_sequential`] for any worker count.
+    pub fn avg<F: Fn(u64) -> f64 + Sync>(&self, f: F) -> f64 {
+        let seeds: Vec<u64> = (0..self.seeds).map(|s| s * 7919 + 1).collect();
+        let vals = parallel_map(seeds, |s| f(s));
+        vals.iter().sum::<f64>() / self.seeds as f64
+    }
+
+    /// Strictly sequential reference for [`Self::avg`] — kept so tests can
+    /// prove the parallel fan-out changes nothing but wall-clock.
+    pub fn avg_sequential<F: Fn(u64) -> f64>(&self, f: F) -> f64 {
         let total: f64 = (0..self.seeds).map(|s| f(s * 7919 + 1)).sum();
         total / self.seeds as f64
     }
@@ -210,5 +225,12 @@ mod tests {
         let a = ctx.avg(|s| s as f64);
         let b = ctx.avg(|s| s as f64);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn avg_matches_sequential_bitwise() {
+        let ctx = ExpCtx::new(7, 4);
+        let f = |s: u64| (s as f64).sqrt() * 3.7 + 1.0 / (s + 1) as f64;
+        assert_eq!(ctx.avg(f).to_bits(), ctx.avg_sequential(f).to_bits());
     }
 }

@@ -23,6 +23,11 @@ pub mod experiments;
 pub mod graph;
 pub mod machines;
 pub mod partition;
+/// PJRT runtime bridge — only built with the off-by-default `pjrt` cargo
+/// feature (it needs the `xla` crate and the `make artifacts` HLO files;
+/// the default build runs every workload on the pure-Rust
+/// [`simulator::ell::PureBackend`]).
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod simulator;
 pub mod util;

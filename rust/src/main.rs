@@ -16,6 +16,7 @@ use windgp::coordinator::{run_job, Job, Workload};
 use windgp::experiments::{self, common, ExpCtx};
 use windgp::machines::Cluster;
 use windgp::partition::Metrics;
+#[cfg(feature = "pjrt")]
 use windgp::runtime::{PjrtBackend, PjrtEngine};
 use windgp::simulator::ell::PureBackend;
 use windgp::util::table;
@@ -59,6 +60,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "experiment" => cmd_experiment(&flags),
         "partition" => cmd_partition(&flags),
         "simulate" => cmd_simulate(&flags),
+        "bench" => cmd_bench(&flags),
         "gen" => cmd_gen(&flags),
         "smoke" => cmd_smoke(),
         "list" => cmd_list(),
@@ -83,6 +85,8 @@ fn print_help() {
                       partition a dataset and print the quality report\n\
            simulate   --graph NAME --algo NAME --workload pagerank|sssp|bfs|triangle|wcc\n\
                       [--pjrt] [--iters N]  run a distributed workload\n\
+           bench      [--shrink N] [--samples N] [--out FILE]\n\
+                      run the hot-path suite, write BENCH_hotpath.json\n\
            gen        --graph NAME --out FILE   write a stand-in dataset\n\
            smoke      verify the PJRT artifact round trip\n\
            list       datasets / algorithms / experiment ids"
@@ -198,6 +202,15 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         workloads: vec![w],
     };
     let use_pjrt = flags.contains_key("pjrt");
+    #[cfg(not(feature = "pjrt"))]
+    if use_pjrt {
+        bail!(
+            "this binary was built without the 'pjrt' cargo feature; \
+             add the `xla` dependency, rebuild with `cargo build --features pjrt`, \
+             and run `make artifacts` (see README.md §pjrt)"
+        );
+    }
+    #[cfg(feature = "pjrt")]
     let rep = if use_pjrt {
         let engine = PjrtEngine::load(PjrtEngine::default_dir())?;
         let mut be = PjrtBackend::new(engine);
@@ -210,6 +223,8 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     } else {
         run_job(&job, Some(&mut PureBackend))
     };
+    #[cfg(not(feature = "pjrt"))]
+    let rep = run_job(&job, Some(&mut PureBackend));
     println!(
         "{} partition: TC={} ({:.3}s wall)",
         rep.partitioner,
@@ -227,6 +242,152 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `windgp bench` — the hot-path suite behind every §Perf claim: expansion,
+/// incremental tracker, the full WindGP pipeline, the Definition-4 metric
+/// pass, the pure ELL kernel, and the parallel-vs-sequential experiment
+/// fan-out. Results land in a machine-readable `BENCH_hotpath.json` so
+/// successive PRs can diff their perf trajectory.
+fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
+    use std::collections::BTreeMap;
+    use windgp::coordinator::parallel_map;
+    use windgp::graph::rmat::{generate, RmatParams};
+    use windgp::partition::{CostTracker, EdgePartition, Partitioner};
+    use windgp::simulator::ell::{EllBackend, EllBlock};
+    use windgp::simulator::SimGraph;
+    use windgp::util::bench::{bench, BenchStats};
+    use windgp::util::json::Json;
+    use windgp::util::SplitMix64;
+    use windgp::windgp::expand::{ExpandParams, Expander};
+    use windgp::windgp::WindGP;
+
+    let shrink: u32 = flags.get("shrink").map_or(Ok(2), |s| s.parse())?;
+    let samples: usize = flags.get("samples").map_or(Ok(3), |s| s.parse())?;
+    let out = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "BENCH_hotpath.json".into());
+
+    let scale = 15u32.saturating_sub(shrink).max(8);
+    let g = generate(&RmatParams::graph500(scale, 16), 11);
+    let m = g.num_edges();
+    println!("bench graph: |V|={} |E|={} (scale {scale})", g.num_vertices(), m);
+    let cluster = Cluster::heterogeneous_small(3, 6, (m as f64) / 1.6e7);
+    let p = cluster.len();
+    let metrics = Metrics::new(&g, &cluster);
+    let mut results: Vec<BenchStats> = Vec::new();
+
+    // --- L3 expansion engine ---
+    results.push(bench("expand/best-first full graph", samples, || {
+        let mut ex = Expander::new(&g, &cluster, 1);
+        let params = ExpandParams { alpha: 0.3, beta: 0.3 };
+        let mut total = 0usize;
+        for i in 0..p as u32 {
+            total += ex
+                .expand_partition(i, (m as u64) / p as u64 + 1, &params)
+                .len();
+        }
+        assert!(total > m / 2);
+    }));
+
+    // --- incremental tracker (the SLS inner loop) ---
+    let mut rng = SplitMix64::new(3);
+    let assignment: Vec<u32> = (0..m).map(|_| rng.next_usize(p) as u32).collect();
+    let ep = EdgePartition::from_assignment(p, assignment);
+    let mut tracker = CostTracker::new(&g, &cluster, &ep);
+    let n_moves = 200_000.min(4 * m);
+    let moves: Vec<(u32, u32)> = (0..n_moves)
+        .map(|_| (rng.next_usize(m) as u32, rng.next_usize(p) as u32))
+        .collect();
+    results.push(bench(
+        &format!("tracker/{n_moves} random edge moves"),
+        samples,
+        || {
+            for &(e, part) in &moves {
+                tracker.move_edge(e, part);
+            }
+        },
+    ));
+
+    // --- the headline partitioner ---
+    results.push(bench("windgp/full pipeline", samples, || {
+        let ep = WindGP::default().partition(&g, &cluster, 1);
+        assert!(ep.is_complete());
+    }));
+
+    // --- Definition-4 metric pass (chunk-parallel on large graphs) ---
+    let wind_ep = WindGP::default().partition(&g, &cluster, 1);
+    results.push(bench("metrics/full report", samples, || {
+        let r = metrics.report(&wind_ep);
+        assert!(r.tc > 0.0);
+    }));
+
+    // --- pure ELL kernel ---
+    let sg = SimGraph::build(&g, &cluster, &wind_ep);
+    let l = &sg.locals[0];
+    let blk = EllBlock::build(l, 16, None, |_, _| 0.5);
+    let x = blk.fill_x(&vec![1.0; blk.verts], 0.0);
+    let mut pure = PureBackend;
+    results.push(bench(
+        &format!("ell/spmv pure ({} rows x {})", blk.rows, blk.k),
+        samples.max(5),
+        || {
+            let y = pure.spmv(0, &blk, &x);
+            assert_eq!(y.len(), blk.rows);
+        },
+    ));
+
+    // --- experiment fan-out: parallel_map vs the sequential reference ---
+    results.push(bench("pool/parallel_map 4x partition+report", samples, || {
+        let tcs = parallel_map(vec![1u64, 2, 3, 4], |seed| {
+            metrics
+                .report(&WindGP::default().partition(&g, &cluster, seed))
+                .tc
+        });
+        assert_eq!(tcs.len(), 4);
+    }));
+    results.push(bench("pool/sequential 4x partition+report", samples, || {
+        let tcs: Vec<f64> = [1u64, 2, 3, 4]
+            .iter()
+            .map(|&seed| {
+                metrics
+                    .report(&WindGP::default().partition(&g, &cluster, seed))
+                    .tc
+            })
+            .collect();
+        assert_eq!(tcs.len(), 4);
+    }));
+
+    // --- emit machine-readable results ---
+    let dur_ns = |d: std::time::Duration| Json::Num(d.as_nanos() as f64);
+    let entries: Vec<Json> = results
+        .iter()
+        .map(|s| {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(s.name.clone()));
+            o.insert("samples".to_string(), Json::Num(s.samples as f64));
+            o.insert("mean_ns".to_string(), dur_ns(s.mean));
+            o.insert("min_ns".to_string(), dur_ns(s.min));
+            o.insert("max_ns".to_string(), dur_ns(s.max));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut graph_o = BTreeMap::new();
+    graph_o.insert("scale".to_string(), Json::Num(scale as f64));
+    graph_o.insert("vertices".to_string(), Json::Num(g.num_vertices() as f64));
+    graph_o.insert("edges".to_string(), Json::Num(m as f64));
+    let mut root = BTreeMap::new();
+    root.insert(
+        "schema".to_string(),
+        Json::Str("windgp-bench-hotpath-v1".to_string()),
+    );
+    root.insert("graph".to_string(), Json::Obj(graph_o));
+    root.insert("machines".to_string(), Json::Num(p as f64));
+    root.insert("results".to_string(), Json::Arr(entries));
+    std::fs::write(&out, Json::Obj(root).dump())?;
+    println!("wrote {out} ({} benchmarks)", results.len());
+    Ok(())
+}
+
 fn cmd_gen(flags: &HashMap<String, String>) -> Result<()> {
     let ctx = ctx_from(flags)?;
     let name = flags.get("graph").ok_or_else(|| anyhow!("--graph required"))?;
@@ -237,6 +398,7 @@ fn cmd_gen(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_smoke() -> Result<()> {
     let mut engine = PjrtEngine::load(PjrtEngine::default_dir())?;
     println!(
@@ -247,6 +409,16 @@ fn cmd_smoke() -> Result<()> {
     engine.smoke_test()?;
     println!("PJRT round trip OK");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_smoke() -> Result<()> {
+    bail!(
+        "this binary was built without the 'pjrt' cargo feature; \
+         add the `xla` dependency, rebuild with `cargo build --features pjrt`, \
+         and run `make artifacts` to exercise the PJRT round trip \
+         (see README.md §pjrt)"
+    )
 }
 
 fn cmd_list() -> Result<()> {

@@ -10,10 +10,29 @@
 //!   RF      = Σ_u |S(u)| / |V(G)|        (u over vertices with deg > 0)
 //!   α'      = max_i |E_i| / (|E|/p)
 
-use crate::graph::Graph;
+use crate::coordinator::pool::parallel_map;
+use crate::graph::{Graph, VId};
 use crate::machines::Cluster;
 
 use super::{EdgePartition, UNASSIGNED};
+
+/// Vertex count below which metric passes stay single-threaded (the
+/// fan-out overhead dominates on the unit-test-sized graphs, and the
+/// sequential path is the bit-exact reference).
+const PAR_MIN_VERTICES: usize = 1 << 14;
+
+/// Fixed chunk size for the parallel passes. Chunking depends only on the
+/// vertex count — never on the worker count — and partials are merged in
+/// chunk-index order, so results are byte-identical across machines and
+/// `WINDGP_WORKERS` settings.
+const PAR_CHUNK: usize = 1 << 13;
+
+fn chunk_bounds(n: usize) -> Vec<(usize, usize)> {
+    (0..n)
+        .step_by(PAR_CHUNK)
+        .map(|lo| (lo, (lo + PAR_CHUNK).min(n)))
+        .collect()
+}
 
 /// Per-machine cost breakdown + aggregates.
 #[derive(Clone, Debug)]
@@ -58,58 +77,106 @@ impl<'a> Metrics<'a> {
     }
 
     /// Replica sets S(u): sorted partition lists per vertex.
+    ///
+    /// Built per vertex from the CSR `incident` edge ids, which makes every
+    /// vertex independent — large graphs are processed in fixed chunks via
+    /// [`parallel_map`] (order-preserving, so the result is identical to the
+    /// sequential pass).
     pub fn replica_sets(&self, ep: &EdgePartition) -> Vec<Vec<u32>> {
-        let mut sets = vec![Vec::new(); self.g.num_vertices()];
-        for (e, &a) in ep.assignment.iter().enumerate() {
-            if a == UNASSIGNED {
-                continue;
-            }
-            let (u, v) = self.g.edge(e as u32);
-            for w in [u, v] {
-                let s = &mut sets[w as usize];
-                if let Err(pos) = s.binary_search(&a) {
-                    s.insert(pos, a);
-                }
-            }
+        let n = self.g.num_vertices();
+        let build_range = |lo: usize, hi: usize| -> Vec<Vec<u32>> {
+            (lo..hi)
+                .map(|u| {
+                    let mut s: Vec<u32> = self
+                        .g
+                        .incident_edges(u as VId)
+                        .iter()
+                        .map(|&e| ep.assignment[e as usize])
+                        .filter(|&a| a != UNASSIGNED)
+                        .collect();
+                    s.sort_unstable();
+                    s.dedup();
+                    s
+                })
+                .collect()
+        };
+        if n < PAR_MIN_VERTICES {
+            return build_range(0, n);
+        }
+        let parts = parallel_map(chunk_bounds(n), |(lo, hi)| build_range(lo, hi));
+        let mut sets = Vec::with_capacity(n);
+        for part in parts {
+            sets.extend(part);
         }
         sets
     }
 
     /// Full Definition-4 report.
+    ///
+    /// The per-machine accounting (|V_i|, T_i^com, RF terms) is a pure
+    /// per-vertex reduction; on large graphs it runs chunked through
+    /// [`parallel_map`] with partials merged in chunk order, keeping the
+    /// report deterministic for any worker count while wall-clock scales
+    /// with cores.
     pub fn report(&self, ep: &EdgePartition) -> CostReport {
         let p = ep.p;
+        let n = self.g.num_vertices();
         let sets = self.replica_sets(ep);
-        let mut v_count = vec![0u64; p];
         let mut e_count = vec![0u64; p];
         for &a in &ep.assignment {
             if a != UNASSIGNED {
                 e_count[a as usize] += 1;
             }
         }
-        let mut t_com = vec![0f64; p];
-        let mut rf_sum = 0u64;
-        let mut rf_verts = 0u64;
-        for (u, s) in sets.iter().enumerate() {
-            if self.g.degree(u as u32) > 0 {
-                rf_verts += 1;
-                rf_sum += s.len() as u64;
-            }
-            if s.is_empty() {
-                continue;
-            }
-            for &i in s {
-                v_count[i as usize] += 1;
-            }
-            if s.len() > 1 {
-                let csum: f64 = s.iter().map(|&i| self.cluster.machines[i as usize].c_com).sum();
-                let k = s.len() as f64;
+        // (v_count, t_com, rf_sum, rf_verts) over one vertex range
+        let accumulate = |lo: usize, hi: usize| -> (Vec<u64>, Vec<f64>, u64, u64) {
+            let mut v_count = vec![0u64; p];
+            let mut t_com = vec![0f64; p];
+            let mut rf_sum = 0u64;
+            let mut rf_verts = 0u64;
+            for (off, s) in sets[lo..hi].iter().enumerate() {
+                let u = lo + off;
+                if self.g.degree(u as VId) > 0 {
+                    rf_verts += 1;
+                    rf_sum += s.len() as u64;
+                }
+                if s.is_empty() {
+                    continue;
+                }
                 for &i in s {
-                    let ci = self.cluster.machines[i as usize].c_com;
-                    // Σ_{j≠i} (C_i + C_j) = (k-1)·C_i + (csum − C_i)
-                    t_com[i as usize] += (k - 1.0) * ci + (csum - ci);
+                    v_count[i as usize] += 1;
+                }
+                if s.len() > 1 {
+                    let csum: f64 =
+                        s.iter().map(|&i| self.cluster.machines[i as usize].c_com).sum();
+                    let k = s.len() as f64;
+                    for &i in s {
+                        let ci = self.cluster.machines[i as usize].c_com;
+                        // Σ_{j≠i} (C_i + C_j) = (k-1)·C_i + (csum − C_i)
+                        t_com[i as usize] += (k - 1.0) * ci + (csum - ci);
+                    }
                 }
             }
-        }
+            (v_count, t_com, rf_sum, rf_verts)
+        };
+        let (v_count, t_com, rf_sum, rf_verts) = if n < PAR_MIN_VERTICES {
+            accumulate(0, n)
+        } else {
+            let parts = parallel_map(chunk_bounds(n), |(lo, hi)| accumulate(lo, hi));
+            let mut v_count = vec![0u64; p];
+            let mut t_com = vec![0f64; p];
+            let mut rf_sum = 0u64;
+            let mut rf_verts = 0u64;
+            for (pv, pt, ps, pn) in parts {
+                for i in 0..p {
+                    v_count[i] += pv[i];
+                    t_com[i] += pt[i];
+                }
+                rf_sum += ps;
+                rf_verts += pn;
+            }
+            (v_count, t_com, rf_sum, rf_verts)
+        };
         let mut t_cal = vec![0f64; p];
         let mut feasible = vec![true; p];
         for i in 0..p {

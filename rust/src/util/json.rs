@@ -1,8 +1,10 @@
-//! Minimal JSON parser — just enough for `artifacts/manifest.json` and the
-//! cluster config files. No serde in the offline crate set, so this is a
-//! small recursive-descent parser over the JSON grammar (objects, arrays,
-//! strings with escapes, numbers, booleans, null). Not streaming; inputs
-//! are tiny.
+//! Minimal JSON parser + serializer — just enough for
+//! `artifacts/manifest.json`, the cluster config files, and the
+//! `BENCH_hotpath.json` emitted by `windgp bench`. No serde in the offline
+//! crate set, so this is a small recursive-descent parser over the JSON
+//! grammar (objects, arrays, strings with escapes, numbers, booleans,
+//! null) and a matching [`Json::dump`] writer. Not streaming; inputs are
+//! tiny.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -53,6 +55,71 @@ impl Json {
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
+
+    /// Serialize to a compact JSON string. Round-trips through [`parse`]
+    /// (floats print via Rust's shortest decimal `Display`, which never
+    /// emits exponent notation; non-finite numbers serialize as `null`,
+    /// the standard JSON stance).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_json_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 #[derive(Debug)]
@@ -288,5 +355,43 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn dump_roundtrips_through_parse() {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str("tracker/\"hot\" path\n".into()));
+        obj.insert("mean_ns".to_string(), Json::Num(1234567.25));
+        obj.insert("ok".to_string(), Json::Bool(true));
+        obj.insert("none".to_string(), Json::Null);
+        obj.insert(
+            "list".to_string(),
+            Json::Arr(vec![Json::Num(1.0), Json::Num(-2.5), Json::Str("x".into())]),
+        );
+        let j = Json::Obj(obj);
+        let text = j.dump();
+        assert_eq!(parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn dump_escapes_control_chars() {
+        let j = Json::Str("a\u{1}b".into());
+        assert_eq!(j.dump(), "\"a\\u0001b\"");
+        assert_eq!(parse(&j.dump()).unwrap(), j);
+    }
+
+    #[test]
+    fn dump_nonfinite_as_null() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+    }
+
+    #[test]
+    fn dump_plain_values() {
+        assert_eq!(Json::Null.dump(), "null");
+        assert_eq!(Json::Bool(false).dump(), "false");
+        assert_eq!(Json::Num(42.0).dump(), "42");
+        assert_eq!(Json::Arr(vec![]).dump(), "[]");
+        assert_eq!(Json::Obj(BTreeMap::new()).dump(), "{}");
     }
 }

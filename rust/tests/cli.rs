@@ -61,6 +61,45 @@ fn simulate_bfs_runs() {
 }
 
 #[test]
+fn bench_emits_valid_json() {
+    let dir = std::env::temp_dir().join("windgp_cli_bench_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_path = dir.join("BENCH_hotpath.json");
+    let _ = std::fs::remove_file(&out_path);
+    let out = bin()
+        .args([
+            "bench",
+            "--shrink",
+            "5",
+            "--samples",
+            "1",
+            "--out",
+            out_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = std::fs::read_to_string(&out_path).unwrap();
+    let j = windgp::util::json::parse(&text).expect("BENCH_hotpath.json must be valid JSON");
+    assert_eq!(
+        j.get("schema").and_then(|s| s.as_str()),
+        Some("windgp-bench-hotpath-v1")
+    );
+    assert!(j.get("graph").and_then(|g| g.get("edges")).is_some());
+    let results = j.get("results").unwrap().as_arr().unwrap();
+    assert!(results.len() >= 5, "only {} benchmarks", results.len());
+    for r in results {
+        assert!(r.get("name").unwrap().as_str().is_some());
+        assert!(r.get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("samples").unwrap().as_usize().unwrap() >= 1);
+    }
+}
+
+#[test]
 fn unknown_command_fails_cleanly() {
     let out = bin().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());

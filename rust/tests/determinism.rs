@@ -1,0 +1,203 @@
+//! Determinism + parallel-safety golden suite.
+//!
+//! The experiment harness fans out over `coordinator::pool::parallel_map`
+//! (per-partitioner sweeps, multi-seed averaging, chunked metric passes),
+//! so these tests pin the contract that parallelism changes *only*
+//! wall-clock:
+//!
+//!   D1  every partitioner is byte-identical across repeated runs on a
+//!       fixed (g, cluster, seed)
+//!   D2  partitions computed inside parallel_map workers (1 vs many) equal
+//!       the directly-computed assignment bit-for-bit
+//!   D3  ExpCtx::avg (parallel fan-out) equals ExpCtx::avg_sequential
+//!       bitwise on a real partition-quality metric
+//!   D4  a multi-seed experiment table rendered through parallel_map is
+//!       byte-identical between WINDGP_WORKERS=1 (the sequential path) and
+//!       a multi-worker run, and across fresh contexts
+//!   D5  CostTracker stays consistent with from-scratch Metrics under
+//!       random add/remove/move sequences (incl. the n_{i,j} table)
+
+use windgp::coordinator::{parallel_map, parallel_map_workers};
+use windgp::experiments::{common, ExpCtx};
+use windgp::graph::{gen, rmat};
+use windgp::machines::Cluster;
+use windgp::partition::{
+    CostTracker, EdgePartition, Metrics, PartId, Partitioner, UNASSIGNED,
+};
+use windgp::util::{table, SplitMix64};
+
+/// Every registered partitioner, WindGP ablation variants included.
+const ALL_ALGOS: [&str; 15] = [
+    "hash", "dbh", "greedy", "hdrf", "ne", "ebv", "metis", "cpp49", "graph-h",
+    "hasgp", "haep", "windgp", "windgp-", "windgp*", "windgp+",
+];
+
+fn fixture() -> (windgp::Graph, Cluster) {
+    let g = rmat::generate(&rmat::RmatParams::graph500(10, 8), 7);
+    let cluster = Cluster::heterogeneous_small(2, 4, 0.05);
+    (g, cluster)
+}
+
+#[test]
+fn d1_assignments_identical_across_repeated_runs() {
+    let (g, cluster) = fixture();
+    for name in ALL_ALGOS {
+        let a = common::partitioner_by_name(name).unwrap();
+        for seed in [1u64, 42] {
+            let first = a.partition(&g, &cluster, seed);
+            let second = a.partition(&g, &cluster, seed);
+            assert!(first.is_complete(), "{name} incomplete (seed {seed})");
+            assert_eq!(
+                first.assignment, second.assignment,
+                "{name} not deterministic (seed {seed})"
+            );
+        }
+    }
+}
+
+#[test]
+fn d2_assignments_identical_across_worker_counts() {
+    let (g, cluster) = fixture();
+    for name in ALL_ALGOS {
+        let a = common::partitioner_by_name(name).unwrap();
+        let direct = a.partition(&g, &cluster, 42).assignment;
+        for workers in [1usize, 8] {
+            let runs: Vec<Vec<PartId>> =
+                parallel_map_workers((0..4u64).collect(), workers, |_| {
+                    a.partition(&g, &cluster, 42).assignment
+                });
+            for run in runs {
+                assert_eq!(
+                    run, direct,
+                    "{name} drifted under parallel_map (workers = {workers})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn d3_avg_parallel_equals_sequential_bitwise() {
+    let (g, cluster) = fixture();
+    let m = Metrics::new(&g, &cluster);
+    let ctx = ExpCtx::new(4, 4);
+    let wind = windgp::windgp::WindGP::default();
+    let metric = |seed: u64| m.report(&wind.partition(&g, &cluster, seed)).tc;
+    let par = ctx.avg(metric);
+    let seq = ctx.avg_sequential(metric);
+    assert_eq!(par.to_bits(), seq.to_bits(), "avg {par} != sequential {seq}");
+}
+
+/// A fig12-shaped multi-seed table: per-partitioner sweep through
+/// parallel_map, per-seed averaging through ExpCtx::avg, rendered with the
+/// experiment table writer. Small graphs keep it fast.
+fn mini_table(ctx: &ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for name in ["rn-s", "cp-s"] {
+        let g = ctx.graph(name);
+        let cluster = ctx.cluster_for(name, &g);
+        let m = Metrics::new(&g, &cluster);
+        let algos = common::traditional_partitioners();
+        let tcs: Vec<(String, f64)> = parallel_map(algos, |a| {
+            let tc = ctx.avg(|seed| m.report(&a.partition(&g, &cluster, seed)).tc);
+            (a.name().to_string(), tc)
+        });
+        let mut row = vec![name.to_string()];
+        for (_, tc) in &tcs {
+            row.push(format!("{tc:.6}"));
+        }
+        rows.push(row);
+    }
+    table::render(&["Graph", "METIS", "HDRF", "NE", "EBV", "WindGP"], &rows)
+}
+
+#[test]
+fn d4_multi_seed_table_byte_identical_parallel_vs_sequential() {
+    let ctx = ExpCtx::new(3, 4);
+    std::env::set_var("WINDGP_WORKERS", "1");
+    let sequential = mini_table(&ctx);
+    std::env::set_var("WINDGP_WORKERS", "4");
+    let parallel = mini_table(&ctx);
+    std::env::remove_var("WINDGP_WORKERS");
+    assert_eq!(
+        sequential, parallel,
+        "parallel experiment table diverged from the sequential path"
+    );
+    // a fresh context (fresh graph cache) reproduces the table exactly
+    let again = mini_table(&ExpCtx::new(3, 4));
+    assert_eq!(parallel, again);
+}
+
+#[test]
+fn d5_tracker_consistent_with_metrics_under_random_moves() {
+    let mut rng = SplitMix64::new(987_654_321);
+    for case in 0..6usize {
+        let n = 80 + case * 37;
+        let g = gen::erdos_renyi(n, 300 + case * 120, rng.next_u64());
+        let p = 3 + case % 3;
+        let cluster = Cluster::heterogeneous_small(1, p - 1, 0.5);
+        let mut ep = EdgePartition::unassigned(&g, p);
+        for e in 0..g.num_edges() {
+            if rng.next_f64() < 0.7 {
+                ep.assignment[e] = rng.next_usize(p) as PartId;
+            }
+        }
+        let mut t = CostTracker::new(&g, &cluster, &ep);
+        for _ in 0..400 {
+            let e = rng.next_usize(g.num_edges()) as u32;
+            let cur = t.assignment[e as usize];
+            if cur == UNASSIGNED {
+                t.add_edge(e, rng.next_usize(p) as PartId);
+            } else if rng.next_f64() < 0.4 {
+                t.remove_edge(e);
+            } else {
+                t.move_edge(e, rng.next_usize(p) as PartId);
+            }
+        }
+        let metrics = Metrics::new(&g, &cluster);
+        let snapshot = t.to_partition();
+        let r = metrics.report(&snapshot);
+        for i in 0..p {
+            assert_eq!(t.v_count[i], r.v_count[i], "case {case}: v_count[{i}]");
+            assert_eq!(t.e_count[i], r.e_count[i], "case {case}: e_count[{i}]");
+            assert!(
+                (t.t_cal(i) - r.t_cal[i]).abs() < 1e-6,
+                "case {case}: t_cal[{i}] {} vs {}",
+                t.t_cal(i),
+                r.t_cal[i]
+            );
+            assert!(
+                (t.t_com(i) - r.t_com[i]).abs() < 1e-6,
+                "case {case}: t_com[{i}] {} vs {}",
+                t.t_com(i),
+                r.t_com[i]
+            );
+        }
+        assert!((t.tc() - r.tc).abs() < 1e-6, "case {case}: tc");
+        let pairs = metrics.replica_pairs(&snapshot);
+        for i in 0..p {
+            for j in 0..p {
+                assert_eq!(t.nij(i, j), pairs[i][j], "case {case}: nij[{i}][{j}]");
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_map_results_match_sequential_reference() {
+    let (g, cluster) = fixture();
+    let m = Metrics::new(&g, &cluster);
+    let seeds: Vec<u64> = (0..6).collect();
+    let seq: Vec<f64> = seeds
+        .iter()
+        .map(|&s| m.report(&windgp::windgp::WindGP::default().partition(&g, &cluster, s)).tc)
+        .collect();
+    for workers in [1usize, 2, 8] {
+        let par = parallel_map_workers(seeds.clone(), workers, |s| {
+            m.report(&windgp::windgp::WindGP::default().partition(&g, &cluster, s)).tc
+        });
+        let seq_bits: Vec<u64> = seq.iter().map(|x| x.to_bits()).collect();
+        let par_bits: Vec<u64> = par.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(par_bits, seq_bits, "workers = {workers}");
+    }
+}
