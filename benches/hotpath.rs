@@ -45,16 +45,56 @@ fn main() {
     let mut rng = SplitMix64::new(3);
     let assignment: Vec<u32> = (0..m).map(|_| rng.next_usize(9) as u32).collect();
     let ep = EdgePartition::from_assignment(9, assignment);
-    let mut t = CostTracker::new(&g, &cluster, &ep);
+    let t0 = CostTracker::new(&g, &cluster, &ep);
     let moves: Vec<(u32, u32)> = (0..200_000)
         .map(|_| (rng.next_usize(m) as u32, rng.next_usize(9) as u32))
         .collect();
     let s = bench("tracker: 200K random edge moves", 3, || {
+        // fresh snapshot per sample so every replay measures the same state
+        let mut t = t0.clone();
         for &(e, p) in &moves {
             t.move_edge(e, p);
         }
     });
     println!("  -> {:.2}M moves/s", throughput(moves.len(), s.mean) / 1e6);
+
+    // --- ingest: parallel parse + build vs the sequential builder ---
+    {
+        use windgp::graph::{ingest, io as graph_io, GraphBuilder};
+        let dir = std::env::temp_dir().join("windgp_hotpath_ingest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let txt = dir.join("hotpath.txt");
+        graph_io::write_edge_list(&g, &txt).unwrap();
+        let bytes = std::fs::read(&txt).unwrap();
+        let s = bench("ingest: chunked text parse", 3, || {
+            let parsed = ingest::parse_text(&bytes, 0).unwrap();
+            let total: usize = parsed.chunks.iter().map(|c| c.len()).sum();
+            assert_eq!(total, m);
+        });
+        println!("  -> {:.2}M edges parsed/s", throughput(m, s.mean) / 1e6);
+        let mut raw = g.edges.clone();
+        rng.shuffle(&mut raw);
+        let s = bench("ingest: parallel build (merge + CSR)", 3, || {
+            let gb = ingest::build_parallel(raw.clone(), 0, 0);
+            assert_eq!(gb.num_edges(), m);
+        });
+        println!("  -> {:.2}M edges built/s", throughput(m, s.mean) / 1e6);
+        let s = bench("ingest: sequential build (GraphBuilder)", 3, || {
+            let mut b = GraphBuilder::with_capacity(raw.len());
+            for &(u, v) in &raw {
+                b.add_edge(u, v);
+            }
+            assert_eq!(b.build(0).num_edges(), m);
+        });
+        println!("  -> {:.2}M edges built/s", throughput(m, s.mean) / 1e6);
+        let bin = dir.join("hotpath.bin");
+        graph_io::write_binary(&g, &bin).unwrap();
+        let s = bench("ingest: binary cache v2 reload", 3, || {
+            let g2 = graph_io::read_binary(&bin).unwrap();
+            assert_eq!(g2.num_edges(), m);
+        });
+        println!("  -> {:.2}M edges reloaded/s", throughput(m, s.mean) / 1e6);
+    }
 
     // --- one full WindGP run (the headline partitioner) ---
     let s = bench("windgp: full pipeline", 3, || {

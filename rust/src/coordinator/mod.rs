@@ -13,7 +13,9 @@
 
 pub mod pool;
 
-pub use pool::{parallel_map, parallel_map_workers};
+pub use pool::{
+    chunk_ranges, effective_workers, merge_sorted_dedup, parallel_map, parallel_map_workers,
+};
 
 use std::time::Instant;
 

@@ -30,6 +30,13 @@ thread_local! {
     static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
 }
 
+/// Worker count `parallel_map` would use for `n` jobs (`WINDGP_WORKERS`
+/// override included). Public so data-parallel callers (e.g. the graph
+/// ingest pipeline) can size their chunking to the same fan-out.
+pub fn effective_workers(n: usize) -> usize {
+    configured_workers(n)
+}
+
 /// Worker count for `n` jobs: `WINDGP_WORKERS` if set, else the machine's
 /// available parallelism, in both cases clamped to `[1, n]`.
 fn configured_workers(n: usize) -> usize {
@@ -130,6 +137,122 @@ where
         .collect()
 }
 
+/// Split `0..n` into at most `k` contiguous, near-equal, non-empty ranges
+/// covering every index exactly once. Returns an empty list for `n == 0`.
+pub fn chunk_ranges(n: usize, k: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = k.clamp(1, n);
+    (0..k).map(|i| (i * n / k, (i + 1) * n / k)).collect()
+}
+
+/// Chunked-merge helper: merge `chunks` — each individually **sorted**
+/// (duplicates allowed) — into one globally sorted, deduplicated vector.
+///
+/// The merge is range-partitioned for parallelism: splitter keys are
+/// sampled from chunk quantiles, each chunk is sliced per key range via
+/// binary search, and the per-range k-way merges run on the worker pool.
+/// The output is the sorted deduplicated union of all chunks regardless
+/// of `workers` — only wall-clock changes.
+pub fn merge_sorted_dedup<T>(chunks: Vec<Vec<T>>, workers: usize) -> Vec<T>
+where
+    T: Ord + Copy + Send + Sync,
+{
+    let mut parts: Vec<Vec<T>> = chunks.into_iter().filter(|c| !c.is_empty()).collect();
+    if parts.is_empty() {
+        return Vec::new();
+    }
+    if parts.len() == 1 {
+        let mut only = parts.pop().unwrap();
+        only.dedup();
+        return only;
+    }
+    let r = workers.max(1);
+    // quantile samples from every chunk -> up to r-1 splitter keys
+    let mut samples: Vec<T> = Vec::new();
+    for c in &parts {
+        for j in 1..r {
+            samples.push(c[j * c.len() / r]);
+        }
+    }
+    // key ranges [lo, hi): lo inclusive, hi exclusive, None = unbounded.
+    // All copies of any given key fall in exactly one range, so per-range
+    // dedup composes into global dedup.
+    let ranges: Vec<(Option<T>, Option<T>)> = if samples.is_empty() {
+        vec![(None, None)]
+    } else {
+        samples.sort_unstable();
+        let mut bounds: Vec<T> = Vec::with_capacity(r - 1);
+        for j in 1..r {
+            bounds.push(samples[j * samples.len() / r]);
+        }
+        bounds.dedup();
+        let mut v = Vec::with_capacity(bounds.len() + 1);
+        let mut lo: Option<T> = None;
+        for &b in &bounds {
+            v.push((lo, Some(b)));
+            lo = Some(b);
+        }
+        v.push((lo, None));
+        v
+    };
+    let parts_ref = &parts;
+    let merged: Vec<Vec<T>> = parallel_map_workers(ranges, workers, move |(lo, hi)| {
+        let subs: Vec<&[T]> = parts_ref
+            .iter()
+            .map(|c| {
+                let s = match lo {
+                    Some(l) => c.partition_point(|&x| x < l),
+                    None => 0,
+                };
+                let e = match hi {
+                    Some(h) => c.partition_point(|&x| x < h),
+                    None => c.len(),
+                };
+                &c[s..e]
+            })
+            .filter(|s| !s.is_empty())
+            .collect();
+        kway_merge_dedup(&subs)
+    });
+    let total: usize = merged.iter().map(|v| v.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for v in merged {
+        out.extend(v);
+    }
+    out
+}
+
+/// Linear-scan k-way merge with dedup. `subs` are sorted slices; k is
+/// bounded by the worker count, so the O(total·k) head scan beats a heap.
+fn kway_merge_dedup<T: Ord + Copy>(subs: &[&[T]]) -> Vec<T> {
+    let total: usize = subs.iter().map(|s| s.len()).sum();
+    let mut idx = vec![0usize; subs.len()];
+    let mut out: Vec<T> = Vec::with_capacity(total);
+    loop {
+        let mut best: Option<(usize, T)> = None;
+        for (k, s) in subs.iter().enumerate() {
+            if idx[k] < s.len() {
+                let x = s[idx[k]];
+                if best.map_or(true, |(_, b)| x < b) {
+                    best = Some((k, x));
+                }
+            }
+        }
+        match best {
+            None => break,
+            Some((k, x)) => {
+                idx[k] += 1;
+                if out.last() != Some(&x) {
+                    out.push(x);
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,6 +342,66 @@ mod tests {
             .or_else(|| payload.downcast_ref::<String>().cloned())
             .unwrap_or_default();
         assert!(msg.contains("boom-17"), "payload masked: {msg:?}");
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (n, k) in [(0usize, 4usize), (1, 4), (7, 3), (100, 8), (8, 100), (5, 1)] {
+            let r = chunk_ranges(n, k);
+            if n == 0 {
+                assert!(r.is_empty());
+                continue;
+            }
+            assert!(r.len() <= k.max(1) && r.len() <= n);
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, n);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            for &(a, b) in &r {
+                assert!(a < b, "non-empty chunk");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_sorted_dedup_matches_flat_sort() {
+        let mut state = 0x9E37u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u32 % 500
+        };
+        for n_chunks in [1usize, 2, 5, 9] {
+            let chunks: Vec<Vec<u32>> = (0..n_chunks)
+                .map(|i| {
+                    let mut c: Vec<u32> = (0..50 + i * 31).map(|_| next()).collect();
+                    c.sort_unstable();
+                    c
+                })
+                .collect();
+            let mut expect: Vec<u32> = chunks.iter().flatten().copied().collect();
+            expect.sort_unstable();
+            expect.dedup();
+            for workers in [1usize, 2, 4, 8] {
+                let got = merge_sorted_dedup(chunks.clone(), workers);
+                assert_eq!(got, expect, "chunks={n_chunks} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_sorted_dedup_edge_cases() {
+        let empty: Vec<Vec<u32>> = vec![];
+        assert!(merge_sorted_dedup(empty, 4).is_empty());
+        assert!(merge_sorted_dedup(vec![Vec::<u32>::new(), Vec::new()], 4).is_empty());
+        // duplicates within and across chunks collapse to one copy
+        let got = merge_sorted_dedup(vec![vec![1u32, 1, 2], vec![2, 2, 3], vec![1, 3]], 3);
+        assert_eq!(got, vec![1, 2, 3]);
+        // pair keys (the graph ingest case)
+        let a = vec![(0u32, 1u32), (0, 2), (5, 9)];
+        let b = vec![(0, 2), (3, 4)];
+        let got = merge_sorted_dedup(vec![a, b], 2);
+        assert_eq!(got, vec![(0, 1), (0, 2), (3, 4), (5, 9)]);
     }
 
     #[test]

@@ -95,6 +95,9 @@ impl Graph {
                 return Err(format!("edge {i} out of range"));
             }
         }
+        if self.edges.windows(2).any(|w| w[0] >= w[1]) {
+            return Err("edge array not strictly sorted".into());
+        }
         for u in 0..n {
             for (&nb, &e) in self.neighbors(u).iter().zip(self.incident_edges(u)) {
                 let (a, b) = self.edge(e);

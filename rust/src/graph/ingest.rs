@@ -1,0 +1,588 @@
+//! Parallel graph ingestion.
+//!
+//! Loading dominates wall time on real SNAP datasets long before
+//! partitioning starts, so this module parallelizes the whole ingest path
+//! on the [`crate::coordinator::pool`] worker pool:
+//!
+//!   1. **chunked parse** — the text file is split into byte ranges cut at
+//!      line boundaries ([`line_chunks`]) and each chunk is parsed
+//!      concurrently into a canonical `(u < v)` edge list (self-loops
+//!      dropped), exactly mirroring `GraphBuilder::add_edge`;
+//!   2. **chunk-local sort + k-way merge-dedup** — each chunk is sorted in
+//!      parallel, then [`merge_sorted_dedup`] range-partitions the merge
+//!      across workers, replacing the sequential global
+//!      `sort_unstable` + `dedup` of `GraphBuilder::build`;
+//!   3. **two-pass parallel CSR fill** — degree counts partitioned by
+//!      vertex range are merged into the offset array, then adjacency
+//!      slots are written with per-vertex cursors partitioned by vertex
+//!      range (each worker owns a contiguous `offsets` span, so all
+//!      writes are disjoint).
+//!
+//! The contract, pinned by `rust/tests/ingest.rs`: for any worker count the
+//! result is **byte-identical** to the sequential
+//! [`GraphBuilder::build`] / [`super::io::read_edge_list`] path.
+//!
+//! Gapped id spaces (SNAP exports with ids up to 2^31) are handled by an
+//! optional dense remap ([`Remap`]) so CSR arrays are sized by the number
+//! of *distinct* vertices instead of `max_id + 1`.
+
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::pool::{
+    chunk_ranges, effective_workers, merge_sorted_dedup, parallel_map_workers,
+};
+
+use super::{EId, Graph, VId};
+
+/// How gapped vertex ids are handled during ingest.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Remap {
+    /// Keep original ids: CSR arrays are sized `max_id + 1`, matching the
+    /// sequential `GraphBuilder` path bit-for-bit.
+    #[default]
+    Never,
+    /// Remap to dense ids only when the id space dwarfs the edge count
+    /// (`max_id + 1 > 8·m`), i.e. when `max_id`-sized arrays would waste
+    /// far more memory than the edges themselves.
+    Auto,
+    /// Always remap to dense ids (when the input is already dense this is
+    /// a no-op and no mapping is reported).
+    Always,
+}
+
+/// Ingest knobs. `workers == 0` means auto (machine parallelism, honoring
+/// the `WINDGP_WORKERS` override).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IngestOptions {
+    pub workers: usize,
+    pub remap: Remap,
+}
+
+/// Result of an ingest: the graph plus, when dense remapping fired, the
+/// original id of every new vertex (`vertex_ids[new] = original`). When
+/// remapping fires, the `# ... vertices` header hint is ignored — it
+/// counts vertices in the original id space, and honoring it would
+/// re-create the `max_id`-sized arrays the remap exists to avoid — so
+/// `num_vertices()` equals the number of distinct endpoint ids.
+pub struct Ingested {
+    pub graph: Graph,
+    pub vertex_ids: Option<Vec<VId>>,
+}
+
+/// Outcome of the chunked text parse.
+pub struct ParsedText {
+    /// per-chunk canonical `(u < v)` edges, self-loops dropped, file order
+    pub chunks: Vec<Vec<(VId, VId)>>,
+    /// max endpoint id seen (0 when there are no edges)
+    pub max_v: VId,
+    /// `# ... <n> vertices` header hint, when present
+    pub vertex_hint: Option<usize>,
+}
+
+fn resolve_workers(w: usize) -> usize {
+    if w == 0 {
+        // cap the chunk fan-out; beyond this the per-chunk fixed costs
+        // (degree arrays, merge splitters) outweigh extra parallelism
+        effective_workers(64)
+    } else {
+        w
+    }
+}
+
+/// Parse a `# ... <n> vertices ... edges` comment (the header
+/// `write_edge_list` emits) into a vertex-count hint. The match is kept
+/// deliberately narrow — the comment must mention *both* "vertices" and
+/// "edges", with a number directly before "vertices" — so incidental
+/// prose comments ("# subsampled from a graph with 10^9 vertices") don't
+/// silently pin an enormous vertex count; absurd counts beyond the u32 id
+/// space are ignored too.
+pub(crate) fn vertex_count_hint(line: &str) -> Option<usize> {
+    if !line.contains("edges") {
+        return None;
+    }
+    let before = line[..line.find("vertices")?].trim_end().as_bytes();
+    let mut start = before.len();
+    while start > 0 && before[start - 1].is_ascii_digit() {
+        start -= 1;
+    }
+    if start == before.len() {
+        return None;
+    }
+    let n: usize = std::str::from_utf8(&before[start..]).ok()?.parse().ok()?;
+    if n as u64 > (u32::MAX as u64) + 1 {
+        return None;
+    }
+    Some(n)
+}
+
+/// Byte ranges covering `bytes`, each cut ending just after a newline (the
+/// last range ends at EOF). Empty input yields no ranges.
+fn line_chunks(bytes: &[u8], chunks: usize) -> Vec<(usize, usize)> {
+    let n = bytes.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = chunks.max(1);
+    let mut cuts: Vec<usize> = vec![0];
+    for i in 1..k {
+        let mut c = i * n / k;
+        while c < n && bytes[c] != b'\n' {
+            c += 1;
+        }
+        if c < n {
+            c += 1; // place the cut just past the newline
+        }
+        if c > *cuts.last().unwrap() && c < n {
+            cuts.push(c);
+        }
+    }
+    cuts.push(n);
+    cuts.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+fn line_number(bytes: &[u8], pos: usize) -> usize {
+    bytes[..pos].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+struct ParsedChunk {
+    edges: Vec<(VId, VId)>,
+    max_v: VId,
+    hint: Option<usize>,
+}
+
+/// Parse one byte range; semantics identical to the sequential reader
+/// (trim, skip blank/`#`/`%` lines, first two whitespace tokens).
+fn parse_chunk(bytes: &[u8], start: usize, end: usize) -> Result<ParsedChunk> {
+    let mut edges = Vec::new();
+    let mut max_v: VId = 0;
+    let mut hint = None;
+    let mut offset = start;
+    for line in bytes[start..end].split(|&b| b == b'\n') {
+        let line_start = offset;
+        offset += line.len() + 1;
+        let text = std::str::from_utf8(line)
+            .map_err(|_| anyhow!("invalid UTF-8 on line {}", line_number(bytes, line_start)))?;
+        let t = text.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if t.starts_with('#') || t.starts_with('%') {
+            if hint.is_none() {
+                hint = vertex_count_hint(t);
+            }
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (u, v) = match (it.next(), it.next()) {
+            (Some(u), Some(v)) => (u, v),
+            _ => bail!("line {}: expected 'u v'", line_number(bytes, line_start)),
+        };
+        let u: VId = u
+            .parse()
+            .with_context(|| format!("line {}", line_number(bytes, line_start)))?;
+        let v: VId = v
+            .parse()
+            .with_context(|| format!("line {}", line_number(bytes, line_start)))?;
+        if u == v {
+            continue; // drop self-loops, as GraphBuilder::add_edge does
+        }
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        max_v = max_v.max(b);
+        edges.push((a, b));
+    }
+    Ok(ParsedChunk { edges, max_v, hint })
+}
+
+/// Concurrent SNAP-text parse: line-aligned byte chunks fanned out over
+/// the worker pool. `workers == 0` = auto.
+pub fn parse_text(bytes: &[u8], workers: usize) -> Result<ParsedText> {
+    let w = resolve_workers(workers);
+    let ranges = line_chunks(bytes, w);
+    let parsed: Vec<Result<ParsedChunk>> =
+        parallel_map_workers(ranges, w, |(s, e)| parse_chunk(bytes, s, e));
+    let mut chunks = Vec::with_capacity(parsed.len());
+    let mut max_v: VId = 0;
+    let mut vertex_hint = None;
+    for r in parsed {
+        let c = r?;
+        max_v = max_v.max(c.max_v);
+        if vertex_hint.is_none() {
+            vertex_hint = c.hint;
+        }
+        chunks.push(c.edges);
+    }
+    Ok(ParsedText { chunks, max_v, vertex_hint })
+}
+
+/// Parallel equivalent of `GraphBuilder::build` over raw (possibly
+/// duplicated / self-looped / unsorted) edges.
+pub fn build_parallel(raw: Vec<(VId, VId)>, min_vertices: usize, workers: usize) -> Graph {
+    let w = resolve_workers(workers);
+    let ranges = chunk_ranges(raw.len(), w);
+    let raw_ref = &raw;
+    let cleaned: Vec<(Vec<(VId, VId)>, VId)> =
+        parallel_map_workers(ranges, w, move |(s, e)| {
+            let mut edges = Vec::with_capacity(e - s);
+            let mut max_v: VId = 0;
+            for &(u, v) in &raw_ref[s..e] {
+                if u == v {
+                    continue;
+                }
+                let (a, b) = if u < v { (u, v) } else { (v, u) };
+                max_v = max_v.max(b);
+                edges.push((a, b));
+            }
+            (edges, max_v)
+        });
+    let max_v = cleaned.iter().map(|c| c.1).max().unwrap_or(0);
+    let chunks: Vec<Vec<(VId, VId)>> = cleaned.into_iter().map(|c| c.0).collect();
+    build_from_chunks(chunks, max_v, min_vertices, workers)
+}
+
+/// Chunk-local sort + k-way merge-dedup + two-pass parallel CSR fill.
+/// `chunks` hold canonical `(u < v)` edges (duplicates across and within
+/// chunks allowed); `max_v` is the max endpoint over all chunks. Produces
+/// a [`Graph`] byte-identical to `GraphBuilder::build` on the same edges
+/// for any worker count.
+pub fn build_from_chunks(
+    chunks: Vec<Vec<(VId, VId)>>,
+    max_v: VId,
+    min_vertices: usize,
+    workers: usize,
+) -> Graph {
+    let w = resolve_workers(workers);
+    let sorted: Vec<Vec<(VId, VId)>> = parallel_map_workers(chunks, w, |mut c| {
+        c.sort_unstable();
+        c
+    });
+    let edges = merge_sorted_dedup(sorted, w);
+    csr_from_sorted_edges(edges, max_v, min_vertices, w)
+}
+
+/// Two-pass parallel CSR construction from the canonical (sorted, deduped)
+/// edge array.
+fn csr_from_sorted_edges(
+    edges: Vec<(VId, VId)>,
+    max_v: VId,
+    min_vertices: usize,
+    workers: usize,
+) -> Graph {
+    let n = (max_v as usize + 1).max(min_vertices).max(1);
+    let m = edges.len();
+    let edges_ref = &edges;
+
+    // pass 1: degree counts partitioned by vertex range, merged into the
+    // offset array. Each worker scans all edges but counts only endpoints
+    // it owns — the same tradeoff as pass 2 — so transient memory stays
+    // O(n) total instead of O(workers·n) (an n-sized array per edge chunk
+    // would be ruinous for the gapped-id graphs this module targets).
+    let vranges = chunk_ranges(n, workers);
+    let deg_parts: Vec<Vec<u64>> = parallel_map_workers(vranges.clone(), workers, move |(a, b)| {
+        let mut deg = vec![0u64; b - a];
+        // u endpoints: edges are sorted by (u, v), so this worker's u-side
+        // edges form one contiguous subrange found by binary search
+        let lo = edges_ref.partition_point(|&(u, _)| (u as usize) < a);
+        let hi = edges_ref.partition_point(|&(u, _)| (u as usize) < b);
+        for &(u, _) in &edges_ref[lo..hi] {
+            deg[u as usize - a] += 1;
+        }
+        // v endpoints are scattered: full scan
+        for &(_, v) in edges_ref {
+            let vi = v as usize;
+            if vi >= a && vi < b {
+                deg[vi - a] += 1;
+            }
+        }
+        deg
+    });
+    let mut offsets = vec![0u64; n + 1];
+    {
+        let mut acc = 0u64;
+        let mut i = 1usize;
+        for part in &deg_parts {
+            for &d in part {
+                acc += d;
+                offsets[i] = acc;
+                i += 1;
+            }
+        }
+        debug_assert_eq!(acc as usize, 2 * m);
+    }
+
+    // pass 2: slot writes with per-vertex cursors, partitioned by vertex
+    // range. The slots of vertices [a, b) form the contiguous region
+    // [offsets[a], offsets[b]) of neighbors/incident, so each worker gets
+    // an exclusive &mut sub-slice — writes never overlap. Every worker
+    // scans the edges in id order, which reproduces the sequential
+    // builder's per-vertex slot order exactly.
+    let mut neighbors = vec![0 as VId; 2 * m];
+    let mut incident = vec![0 as EId; 2 * m];
+    {
+        struct FillTask<'s> {
+            lo: usize,
+            hi: usize,
+            base: u64,
+            nbr: &'s mut [VId],
+            inc: &'s mut [EId],
+        }
+        let mut tasks: Vec<FillTask> = Vec::with_capacity(vranges.len());
+        let mut nbr_rest: &mut [VId] = neighbors.as_mut_slice();
+        let mut inc_rest: &mut [EId] = incident.as_mut_slice();
+        for &(a, b) in &vranges {
+            let len = (offsets[b] - offsets[a]) as usize;
+            let (nbr_head, nbr_tail) = std::mem::take(&mut nbr_rest).split_at_mut(len);
+            let (inc_head, inc_tail) = std::mem::take(&mut inc_rest).split_at_mut(len);
+            nbr_rest = nbr_tail;
+            inc_rest = inc_tail;
+            tasks.push(FillTask { lo: a, hi: b, base: offsets[a], nbr: nbr_head, inc: inc_head });
+        }
+        let offsets_ref = &offsets;
+        parallel_map_workers(tasks, workers, move |mut t| {
+            let mut cursor: Vec<u64> = offsets_ref[t.lo..t.hi].to_vec();
+            // Per-vertex slot order must equal the sequential builder's:
+            // slots append in ascending edge id. For any vertex w, every
+            // edge (x, w) with x < w sorts before every edge (w, y), so
+            // writing all v-side slots first and u-side slots second —
+            // each loop in id order — reproduces the ascending-id
+            // interleaving exactly.
+            for (e, &(u, v)) in edges_ref.iter().enumerate() {
+                let vi = v as usize;
+                if vi >= t.lo && vi < t.hi {
+                    let slot = (cursor[vi - t.lo] - t.base) as usize;
+                    t.nbr[slot] = u;
+                    t.inc[slot] = e as EId;
+                    cursor[vi - t.lo] += 1;
+                }
+            }
+            // u side: contiguous subrange of the sorted edge array
+            let lo_e = edges_ref.partition_point(|&(u, _)| (u as usize) < t.lo);
+            let hi_e = edges_ref.partition_point(|&(u, _)| (u as usize) < t.hi);
+            for (off, &(u, v)) in edges_ref[lo_e..hi_e].iter().enumerate() {
+                let ui = u as usize;
+                let slot = (cursor[ui - t.lo] - t.base) as usize;
+                t.nbr[slot] = v;
+                t.inc[slot] = (lo_e + off) as EId;
+                cursor[ui - t.lo] += 1;
+            }
+        });
+    }
+    Graph { edges, offsets, neighbors, incident }
+}
+
+/// Distinct endpoint ids across all chunks, sorted ascending.
+fn distinct_vertices(chunks: &[Vec<(VId, VId)>], workers: usize) -> Vec<VId> {
+    let slices: Vec<&[(VId, VId)]> = chunks.iter().map(|c| c.as_slice()).collect();
+    let id_chunks: Vec<Vec<VId>> = parallel_map_workers(slices, workers, |c: &[(VId, VId)]| {
+        let mut ids: Vec<VId> = Vec::with_capacity(2 * c.len());
+        for &(u, v) in c {
+            ids.push(u);
+            ids.push(v);
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    });
+    merge_sorted_dedup(id_chunks, workers)
+}
+
+/// Rewrite endpoints to dense ids (`ids` sorted ascending, old -> position).
+/// The map is monotone, so canonical `(u < v)` ordering is preserved.
+fn apply_remap(
+    chunks: Vec<Vec<(VId, VId)>>,
+    ids: &[VId],
+    workers: usize,
+) -> Vec<Vec<(VId, VId)>> {
+    parallel_map_workers(chunks, workers, |mut c| {
+        for e in c.iter_mut() {
+            e.0 = ids.binary_search(&e.0).unwrap() as VId;
+            e.1 = ids.binary_search(&e.1).unwrap() as VId;
+        }
+        c
+    })
+}
+
+/// In-memory parallel ingest: chunked parse + parallel build, with
+/// optional dense remapping of gapped ids.
+pub fn ingest_text(bytes: &[u8], opts: IngestOptions) -> Result<Ingested> {
+    let w = resolve_workers(opts.workers);
+    let parsed = parse_text(bytes, w)?;
+    let min_vertices = parsed.vertex_hint.unwrap_or(0);
+    let m: usize = parsed.chunks.iter().map(|c| c.len()).sum();
+    let want_remap = match opts.remap {
+        Remap::Never => false,
+        Remap::Always => true,
+        Remap::Auto => (parsed.max_v as u64) + 1 > 8 * (m as u64).max(1),
+    };
+    if want_remap {
+        let ids = distinct_vertices(&parsed.chunks, w);
+        // empty ids (edgeless input) must not report a mapping: the built
+        // graph still has >= 1 vertex and vertex_ids[0] would be out of
+        // bounds for any consumer mapping ids back
+        if !ids.is_empty() && ids.len() != parsed.max_v as usize + 1 {
+            let new_max = ids.len().saturating_sub(1) as VId;
+            let chunks = apply_remap(parsed.chunks, &ids, w);
+            // the header hint counts vertices in the ORIGINAL id space;
+            // applying it to the remapped graph would re-allocate the
+            // max_id-sized arrays the remap exists to avoid, so isolated-
+            // vertex padding is dropped when remapping fires
+            let graph = build_from_chunks(chunks, new_max, 0, w);
+            return Ok(Ingested { graph, vertex_ids: Some(ids) });
+        }
+        // already dense: fall through without a mapping
+    }
+    let graph = build_from_chunks(parsed.chunks, parsed.max_v, min_vertices, w);
+    Ok(Ingested { graph, vertex_ids: None })
+}
+
+/// Parallel SNAP text reader — the drop-in fast path for
+/// [`super::io::read_edge_list`].
+///
+/// Memory profile: the whole file is read into one buffer so chunks can be
+/// parsed by random access (peak ≈ file size + edge vectors). For inputs
+/// too large to slurp, [`super::io::read_edge_list`] remains the
+/// streaming (sequential) fallback.
+pub fn read_edge_list_parallel<P: AsRef<Path>>(path: P, opts: IngestOptions) -> Result<Ingested> {
+    let mut f = File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    ingest_text(&bytes, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn line_chunks_align_to_newlines() {
+        let text = b"0 1\n1 2\n2 3\n3 4\n4 5\n";
+        for k in [1usize, 2, 3, 7, 50] {
+            let r = line_chunks(text, k);
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, text.len());
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+                // every interior cut lands right after a newline
+                assert_eq!(text[w[0].1 - 1], b'\n');
+            }
+        }
+        assert!(line_chunks(b"", 4).is_empty());
+        // no trailing newline: last chunk still reaches EOF
+        let r = line_chunks(b"0 1\n1 2", 3);
+        assert_eq!(r.last().unwrap().1, 7);
+    }
+
+    #[test]
+    fn vertex_count_hint_parses_header() {
+        assert_eq!(vertex_count_hint("# undirected graph: 42 vertices, 7 edges"), Some(42));
+        assert_eq!(vertex_count_hint("# graph: 9 vertices, 0 edges"), Some(9));
+        // narrow match: both words required, number directly before "vertices"
+        assert_eq!(vertex_count_hint("# Nodes: 9 vertices"), None);
+        assert_eq!(vertex_count_hint("# subsampled from a graph with 2000000000 vertices"), None);
+        assert_eq!(vertex_count_hint("# no numbers vertices, some edges"), None);
+        assert_eq!(vertex_count_hint("# plain comment"), None);
+        assert_eq!(vertex_count_hint("# edges only: 12"), None);
+        // counts beyond the u32 id space are ignored
+        assert_eq!(vertex_count_hint("# bogus: 99999999999 vertices, 3 edges"), None);
+    }
+
+    #[test]
+    fn parse_matches_sequential_semantics() {
+        let text = b"# header: 8 vertices, 3 edges\n% alt\n0 1\n  1\t2  \n\n3 3\n2 0\n";
+        let p = parse_text(text, 3).unwrap();
+        let all: Vec<(VId, VId)> = p.chunks.into_iter().flatten().collect();
+        assert_eq!(all, vec![(0, 1), (1, 2), (0, 2)]); // self-loop dropped
+        assert_eq!(p.max_v, 2);
+        assert_eq!(p.vertex_hint, Some(8));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse_text(b"0\n", 2).is_err());
+        assert!(parse_text(b"0 x\n", 2).is_err());
+        assert!(parse_text(b"0 1\n1\n", 4).is_err());
+    }
+
+    #[test]
+    fn build_parallel_equals_sequential_builder() {
+        // raw stream with self-loops, duplicates (both orientations), gaps
+        let raw: Vec<(VId, VId)> = vec![
+            (3, 1),
+            (1, 3),
+            (5, 5),
+            (0, 9),
+            (9, 0),
+            (2, 7),
+            (7, 2),
+            (2, 7),
+            (4, 8),
+        ];
+        let mut b = GraphBuilder::with_capacity(raw.len());
+        for &(u, v) in &raw {
+            b.add_edge(u, v);
+        }
+        let seq = b.build(12);
+        for workers in [1usize, 2, 4, 8] {
+            let par = build_parallel(raw.clone(), 12, workers);
+            assert_eq!(par.edges, seq.edges, "workers={workers}");
+            assert_eq!(par.offsets, seq.offsets, "workers={workers}");
+            assert_eq!(par.neighbors, seq.neighbors, "workers={workers}");
+            assert_eq!(par.incident, seq.incident, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_input_builds_singleton_graph() {
+        let g = build_parallel(Vec::new(), 0, 4);
+        assert_eq!(g.num_vertices(), 1);
+        assert_eq!(g.num_edges(), 0);
+        g.validate().unwrap();
+        let ing = ingest_text(b"# empty\n", IngestOptions::default()).unwrap();
+        assert_eq!(ing.graph.num_edges(), 0);
+        // Remap::Always on an edgeless input must not report an (empty)
+        // mapping for a 1-vertex graph
+        let rem = ingest_text(
+            b"# empty\n",
+            IngestOptions { workers: 2, remap: Remap::Always },
+        )
+        .unwrap();
+        assert!(rem.vertex_ids.is_none());
+        assert_eq!(rem.graph.num_vertices(), 1);
+    }
+
+    #[test]
+    fn remap_collapses_gapped_ids() {
+        let text = b"# gapped\n5 4000000\n7 5\n4000000 7\n";
+        let ing = ingest_text(
+            text,
+            IngestOptions { workers: 2, remap: Remap::Always },
+        )
+        .unwrap();
+        assert_eq!(ing.vertex_ids, Some(vec![5, 7, 4_000_000]));
+        assert_eq!(ing.graph.num_vertices(), 3);
+        assert_eq!(ing.graph.edges, vec![(0, 1), (0, 2), (1, 2)]);
+        ing.graph.validate().unwrap();
+        // Auto fires for this id space too (max_id >> 8m)
+        let auto = ingest_text(text, IngestOptions { workers: 2, remap: Remap::Auto }).unwrap();
+        assert!(auto.vertex_ids.is_some());
+    }
+
+    #[test]
+    fn remap_noop_on_dense_ids() {
+        let text = b"0 1\n1 2\n2 0\n";
+        let ing = ingest_text(
+            text,
+            IngestOptions { workers: 2, remap: Remap::Always },
+        )
+        .unwrap();
+        assert!(ing.vertex_ids.is_none());
+        assert_eq!(ing.graph.num_vertices(), 3);
+        let auto = ingest_text(text, IngestOptions { workers: 2, remap: Remap::Auto }).unwrap();
+        assert!(auto.vertex_ids.is_none());
+    }
+}

@@ -1,7 +1,11 @@
 //! Edge-list IO in the SNAP text format the paper's datasets ship in:
-//! one `u v` pair per line, `#` comments, arbitrary whitespace. A simple
-//! little-endian binary cache (`.bin`) avoids re-parsing large generated
-//! stand-ins between runs.
+//! one `u v` pair per line, `#` comments, arbitrary whitespace. A
+//! little-endian binary cache avoids re-parsing large generated stand-ins
+//! between runs; the v2 format serializes the finished CSR
+//! (`offsets`/`neighbors`/`incident`) behind a length-validated header, so
+//! reload skips the sort/dedup/CSR rebuild entirely. [`load_path`] sniffs
+//! the format and routes text through the parallel
+//! [`super::ingest`] pipeline.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
@@ -9,17 +13,27 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::{Graph, GraphBuilder, VId};
+use super::ingest::{self, Ingested};
+use super::{EId, Graph, GraphBuilder, VId};
 
-/// Read a SNAP-format text edge list.
+/// Read a SNAP-format text edge list (sequential reference path). A
+/// `# ... <n> vertices ...` header, when present, pins the vertex count so
+/// trailing isolated vertices survive the round trip.
 pub fn read_edge_list<P: AsRef<Path>>(path: P) -> Result<Graph> {
     let f = File::open(&path)
         .with_context(|| format!("open {}", path.as_ref().display()))?;
     let mut b = GraphBuilder::new();
+    let mut vertex_hint: Option<usize> = None;
     for (lineno, line) in BufReader::new(f).lines().enumerate() {
         let line = line?;
         let t = line.trim();
-        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+        if t.is_empty() {
+            continue;
+        }
+        if t.starts_with('#') || t.starts_with('%') {
+            if vertex_hint.is_none() {
+                vertex_hint = ingest::vertex_count_hint(t);
+            }
             continue;
         }
         let mut it = t.split_whitespace();
@@ -31,10 +45,12 @@ pub fn read_edge_list<P: AsRef<Path>>(path: P) -> Result<Graph> {
         let v: VId = v.parse().with_context(|| format!("line {}", lineno + 1))?;
         b.add_edge(u, v);
     }
-    Ok(b.build(0))
+    Ok(b.build(vertex_hint.unwrap_or(0)))
 }
 
-/// Write a graph back out as a SNAP text edge list.
+/// Write a graph back out as a SNAP text edge list. The header comment
+/// carries the vertex count [`read_edge_list`] uses to restore trailing
+/// isolated vertices.
 pub fn write_edge_list<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
     let f = File::create(&path)?;
     let mut w = BufWriter::new(f);
@@ -45,45 +61,178 @@ pub fn write_edge_list<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
     Ok(())
 }
 
-const BIN_MAGIC: u32 = 0x5747_4201; // "WGB\x01"
+/// v1: magic, n, m, then m raw (u32, u32) pairs — requires a full rebuild
+/// (sort + dedup + CSR) on load.
+const BIN_MAGIC_V1: u32 = 0x5747_4201; // "WGB\x01"
+/// v2: magic, n, m, offsets (n+1 × u64), neighbors (2m × u32), incident
+/// (2m × u32) — the finished CSR image; reload skips the rebuild.
+const BIN_MAGIC_V2: u32 = 0x5747_4202; // "WGB\x02"
 
-/// Binary cache: magic, n, m, then m (u32,u32) pairs.
+/// Largest vertex count any cache header may claim (ids are u32).
+const MAX_HEADER_N: u64 = (u32::MAX as u64) + 1;
+
+/// Write the binary cache (v2: full CSR image).
 pub fn write_binary<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
     let f = File::create(&path)?;
-    let mut w = BufWriter::new(f);
-    w.write_all(&BIN_MAGIC.to_le_bytes())?;
+    let mut w = BufWriter::with_capacity(1 << 20, f);
+    w.write_all(&BIN_MAGIC_V2.to_le_bytes())?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    for &o in &g.offsets {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &v in &g.neighbors {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for &e in &g.incident {
+        w.write_all(&e.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Legacy v1 writer (header + raw edge pairs). Kept so old caches remain
+/// coverable by tests; new caches are always written as v2.
+pub fn write_binary_v1<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
+    let f = File::create(&path)?;
+    let mut w = BufWriter::with_capacity(1 << 20, f);
+    w.write_all(&BIN_MAGIC_V1.to_le_bytes())?;
     w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
     w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
     for &(u, v) in &g.edges {
         w.write_all(&u.to_le_bytes())?;
         w.write_all(&v.to_le_bytes())?;
     }
+    w.flush()?;
     Ok(())
 }
 
+/// Read a binary cache (v1 or v2, dispatched on magic). The header's
+/// `n`/`m` are validated against the actual file length *before* any
+/// allocation, so truncated or corrupt caches fail with a clear error
+/// instead of OOM-ing or mis-reading.
 pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
-    let f = File::open(&path)
-        .with_context(|| format!("open {}", path.as_ref().display()))?;
-    let mut r = BufReader::new(f);
+    let display = path.as_ref().display().to_string();
+    let f = File::open(&path).with_context(|| format!("open {display}"))?;
+    let file_len = f.metadata()?.len();
+    let mut r = BufReader::with_capacity(1 << 20, f);
     let mut u32buf = [0u8; 4];
     let mut u64buf = [0u8; 8];
-    r.read_exact(&mut u32buf)?;
-    if u32::from_le_bytes(u32buf) != BIN_MAGIC {
-        bail!("bad magic in {}", path.as_ref().display());
+    r.read_exact(&mut u32buf)
+        .with_context(|| format!("corrupt or truncated binary cache {display}: no magic"))?;
+    let magic = u32::from_le_bytes(u32buf);
+    if magic != BIN_MAGIC_V1 && magic != BIN_MAGIC_V2 {
+        bail!("bad magic in {display}");
     }
-    r.read_exact(&mut u64buf)?;
-    let n = u64::from_le_bytes(u64buf) as usize;
-    r.read_exact(&mut u64buf)?;
-    let m = u64::from_le_bytes(u64buf) as usize;
-    let mut b = GraphBuilder::with_capacity(m);
-    for _ in 0..m {
-        r.read_exact(&mut u32buf)?;
-        let u = u32::from_le_bytes(u32buf);
-        r.read_exact(&mut u32buf)?;
-        let v = u32::from_le_bytes(u32buf);
-        b.add_edge(u, v);
+    r.read_exact(&mut u64buf)
+        .with_context(|| format!("corrupt or truncated binary cache {display}: short header"))?;
+    let n = u64::from_le_bytes(u64buf);
+    r.read_exact(&mut u64buf)
+        .with_context(|| format!("corrupt or truncated binary cache {display}: short header"))?;
+    let m = u64::from_le_bytes(u64buf);
+    if n > MAX_HEADER_N {
+        bail!("corrupt binary cache {display}: header claims {n} vertices (ids are u32)");
     }
-    Ok(b.build(n))
+    let header = 4u128 + 8 + 8;
+    let expected: u128 = if magic == BIN_MAGIC_V1 {
+        header + (m as u128) * 8
+    } else {
+        header + (n as u128 + 1) * 8 + (m as u128) * 16
+    };
+    if (file_len as u128) != expected {
+        bail!(
+            "corrupt or truncated binary cache {display}: header claims n={n} m={m} \
+             ({expected} bytes expected, file is {file_len} bytes)"
+        );
+    }
+    let n = n as usize;
+    let m = m as usize;
+
+    if magic == BIN_MAGIC_V1 {
+        let mut b = GraphBuilder::with_capacity(m);
+        for _ in 0..m {
+            r.read_exact(&mut u32buf)?;
+            let u = u32::from_le_bytes(u32buf);
+            r.read_exact(&mut u32buf)?;
+            let v = u32::from_le_bytes(u32buf);
+            // the v1 writer guarantees ids < n; a flipped id byte would
+            // otherwise size the CSR by max_id+1 (OOM) or load a wrong graph
+            if u as usize >= n || v as usize >= n {
+                bail!("corrupt binary cache {display}: edge endpoint out of range");
+            }
+            b.add_edge(u, v);
+        }
+        return Ok(b.build(n));
+    }
+
+    // v2: load the CSR image directly; no rebuild.
+    let mut buf = vec![0u8; 8 * (n + 1)];
+    r.read_exact(&mut buf)?;
+    let offsets: Vec<u64> = buf
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if offsets[0] != 0 || offsets[n] != 2 * m as u64 {
+        bail!("corrupt binary cache {display}: offset table endpoints don't match header");
+    }
+    if offsets.windows(2).any(|w| w[0] > w[1]) {
+        bail!("corrupt binary cache {display}: offsets not monotone");
+    }
+    let mut buf = vec![0u8; 4 * 2 * m];
+    r.read_exact(&mut buf)?;
+    let neighbors: Vec<VId> = buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    r.read_exact(&mut buf)?;
+    let incident: Vec<EId> = buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if neighbors.iter().any(|&v| v as usize >= n) {
+        bail!("corrupt binary cache {display}: neighbor id out of range");
+    }
+    if incident.iter().any(|&e| e as usize >= m) {
+        bail!("corrupt binary cache {display}: edge id out of range");
+    }
+    // reconstruct the canonical edge array from the CSR image: the slot of
+    // the smaller endpoint names the (u, v) pair for edge id incident[slot]
+    let mut edges = vec![(0 as VId, 0 as VId); m];
+    for u in 0..n {
+        let (s, e) = (offsets[u] as usize, offsets[u + 1] as usize);
+        for idx in s..e {
+            let v = neighbors[idx];
+            if (u as u64) < v as u64 {
+                edges[incident[idx] as usize] = (u as VId, v);
+            }
+        }
+    }
+    let g = Graph { edges, offsets, neighbors, incident };
+    if let Err(msg) = g.validate() {
+        bail!("corrupt binary cache {display}: {msg}");
+    }
+    Ok(g)
+}
+
+/// Load a graph from `path`, sniffing the format: binary caches (v1/v2
+/// magic) go through [`read_binary`]; anything else is parsed as SNAP text
+/// by the parallel ingest pipeline with auto remap for gapped ids.
+pub fn load_path<P: AsRef<Path>>(path: P) -> Result<Ingested> {
+    let mut f = File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut head = Vec::with_capacity(4);
+    f.by_ref().take(4).read_to_end(&mut head)?;
+    drop(f);
+    if head.len() == 4 {
+        let word = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+        if word == BIN_MAGIC_V1 || word == BIN_MAGIC_V2 {
+            return Ok(Ingested { graph: read_binary(&path)?, vertex_ids: None });
+        }
+    }
+    ingest::read_edge_list_parallel(
+        &path,
+        ingest::IngestOptions { remap: ingest::Remap::Auto, ..Default::default() },
+    )
 }
 
 /// Load `path` if it exists, else generate via `gen` and cache to `path`.
@@ -113,6 +262,7 @@ mod tests {
         write_edge_list(&g, &p).unwrap();
         let g2 = read_edge_list(&p).unwrap();
         assert_eq!(g.edges, g2.edges);
+        assert_eq!(g.num_vertices(), g2.num_vertices());
     }
 
     #[test]
@@ -122,6 +272,22 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("g.bin");
         write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_eq!(g.edges, g2.edges);
+        assert_eq!(g.offsets, g2.offsets);
+        assert_eq!(g.neighbors, g2.neighbors);
+        assert_eq!(g.incident, g2.incident);
+        assert_eq!(g.num_vertices(), g2.num_vertices());
+        g2.validate().unwrap();
+    }
+
+    #[test]
+    fn legacy_v1_cache_still_reads() {
+        let g = rmat::generate(&rmat::RmatParams::graph500(7, 4), 6);
+        let dir = std::env::temp_dir().join("windgp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g_v1.bin");
+        write_binary_v1(&g, &p).unwrap();
         let g2 = read_binary(&p).unwrap();
         assert_eq!(g.edges, g2.edges);
         assert_eq!(g.num_vertices(), g2.num_vertices());
@@ -155,5 +321,21 @@ mod tests {
         assert!(p.exists());
         let g2 = load_or_generate(&p, || panic!("should hit cache")).unwrap();
         assert_eq!(g1.edges, g2.edges);
+    }
+
+    #[test]
+    fn load_path_sniffs_binary_and_text() {
+        let g = rmat::generate(&rmat::RmatParams::graph500(7, 4), 8);
+        let dir = std::env::temp_dir().join("windgp_io_test_sniff");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bp = dir.join("g.bin");
+        write_binary(&g, &bp).unwrap();
+        let from_bin = load_path(&bp).unwrap();
+        assert_eq!(from_bin.graph.edges, g.edges);
+        let tp = dir.join("g.txt");
+        write_edge_list(&g, &tp).unwrap();
+        let from_txt = load_path(&tp).unwrap();
+        assert_eq!(from_txt.graph.edges, g.edges);
+        assert_eq!(from_txt.graph.num_vertices(), g.num_vertices());
     }
 }

@@ -7,6 +7,7 @@
 
 pub mod csr;
 pub mod gen;
+pub mod ingest;
 pub mod io;
 pub mod mesh;
 pub mod rmat;

@@ -87,7 +87,8 @@ fn print_help() {
                       [--pjrt] [--iters N]  run a distributed workload\n\
            bench      [--shrink N] [--samples N] [--out FILE]\n\
                       run the hot-path suite, write BENCH_hotpath.json\n\
-           gen        --graph NAME --out FILE   write a stand-in dataset\n\
+           gen        --graph NAME --out FILE [--format txt|bin]\n\
+                      write a stand-in dataset (bin = CSR cache v2)\n\
            smoke      verify the PJRT artifact round trip\n\
            list       datasets / algorithms / experiment ids"
     );
@@ -125,7 +126,17 @@ fn graph_and_cluster(
 ) -> Result<(std::sync::Arc<windgp::Graph>, Cluster)> {
     let name = flags.get("graph").ok_or_else(|| anyhow!("--graph required"))?;
     let g = if std::path::Path::new(name).exists() {
-        std::sync::Arc::new(windgp::graph::io::read_edge_list(name)?)
+        // external file: sniff binary caches, parse text through the
+        // parallel ingest pipeline (gapped SNAP ids remapped densely)
+        let ing = windgp::graph::io::load_path(name)?;
+        if let Some(ids) = &ing.vertex_ids {
+            eprintln!(
+                "note: gapped id space remapped to dense 0..{} (max original id {})",
+                ids.len(),
+                ids.last().copied().unwrap_or(0)
+            );
+        }
+        std::sync::Arc::new(ing.graph)
     } else {
         ctx.graph(name)
     };
@@ -293,7 +304,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
     let mut rng = SplitMix64::new(3);
     let assignment: Vec<u32> = (0..m).map(|_| rng.next_usize(p) as u32).collect();
     let ep = EdgePartition::from_assignment(p, assignment);
-    let mut tracker = CostTracker::new(&g, &cluster, &ep);
+    let tracker0 = CostTracker::new(&g, &cluster, &ep);
     let n_moves = 200_000.min(4 * m);
     let moves: Vec<(u32, u32)> = (0..n_moves)
         .map(|_| (rng.next_usize(m) as u32, rng.next_usize(p) as u32))
@@ -302,6 +313,11 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
         &format!("tracker/{n_moves} random edge moves"),
         samples,
         || {
+            // fresh snapshot per sample: replaying on a tracker that
+            // persists across samples would measure ever-drifting state
+            // (the clone is part of the sample; it's O(n + m) memcpy,
+            // small next to 200K replica-list updates)
+            let mut tracker = tracker0.clone();
             for &(e, part) in &moves {
                 tracker.move_edge(e, part);
             }
@@ -357,6 +373,43 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
         assert_eq!(tcs.len(), 4);
     }));
 
+    // --- ingest pipeline: chunked parse, parallel vs sequential build,
+    //     binary cache v2 reload ---
+    {
+        use windgp::graph::{ingest, io as graph_io, GraphBuilder};
+        let dir = std::env::temp_dir().join("windgp_bench_ingest");
+        std::fs::create_dir_all(&dir)?;
+        let txt_path = dir.join(format!("scale{scale}.txt"));
+        graph_io::write_edge_list(&g, &txt_path)?;
+        let bytes = std::fs::read(&txt_path)?;
+        results.push(bench("ingest/parse", samples, || {
+            let parsed = ingest::parse_text(&bytes, 0).unwrap();
+            let total: usize = parsed.chunks.iter().map(|c| c.len()).sum();
+            assert_eq!(total, m);
+        }));
+        // realistic unsorted ingest stream: shuffle the canonical edges
+        let mut raw_edges = g.edges.clone();
+        rng.shuffle(&mut raw_edges);
+        results.push(bench("ingest/build", samples, || {
+            let gb = ingest::build_parallel(raw_edges.clone(), 0, 0);
+            assert_eq!(gb.num_edges(), m);
+        }));
+        results.push(bench("ingest/build-sequential", samples, || {
+            let mut b = GraphBuilder::with_capacity(raw_edges.len());
+            for &(u, v) in &raw_edges {
+                b.add_edge(u, v);
+            }
+            let gs = b.build(0);
+            assert_eq!(gs.num_edges(), m);
+        }));
+        let bin_path = dir.join(format!("scale{scale}.bin"));
+        graph_io::write_binary(&g, &bin_path)?;
+        results.push(bench("ingest/cache-reload", samples, || {
+            let g2 = graph_io::read_binary(&bin_path).unwrap();
+            assert_eq!(g2.num_edges(), m);
+        }));
+    }
+
     // --- emit machine-readable results ---
     let dur_ns = |d: std::time::Duration| Json::Num(d.as_nanos() as f64);
     let entries: Vec<Json> = results
@@ -392,9 +445,19 @@ fn cmd_gen(flags: &HashMap<String, String>) -> Result<()> {
     let ctx = ctx_from(flags)?;
     let name = flags.get("graph").ok_or_else(|| anyhow!("--graph required"))?;
     let out = flags.get("out").ok_or_else(|| anyhow!("--out required"))?;
+    let format = flags.get("format").map(String::as_str).unwrap_or("txt");
     let g = ctx.graph(name);
-    windgp::graph::io::write_edge_list(&g, out)?;
-    println!("wrote {} ({} vertices, {} edges)", out, g.num_vertices(), g.num_edges());
+    match format {
+        "txt" | "text" => windgp::graph::io::write_edge_list(&g, out)?,
+        "bin" | "binary" => windgp::graph::io::write_binary(&g, out)?,
+        other => bail!("unknown format '{other}' (expected txt or bin)"),
+    }
+    println!(
+        "wrote {} ({} vertices, {} edges, {format})",
+        out,
+        g.num_vertices(),
+        g.num_edges()
+    );
     Ok(())
 }
 

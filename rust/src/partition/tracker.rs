@@ -15,6 +15,11 @@ use crate::machines::Cluster;
 
 use super::{CostReport, EdgePartition, Metrics, PartId, UNASSIGNED};
 
+/// `Clone` gives cheap snapshot/restore (deep-copies the bookkeeping
+/// vectors, shares the graph/cluster borrows) — the bench suite replays
+/// move batches on a fresh clone per sample so measurements never see
+/// drifted state.
+#[derive(Clone)]
 pub struct CostTracker<'a> {
     g: &'a Graph,
     cluster: &'a Cluster,
@@ -360,6 +365,39 @@ mod tests {
         assert_eq!(t.mem_slack(0), 3);
         assert!(!t.edge_fits(0, 2)); // needs 4 > 3
         assert!(t.edge_fits(0, 1)); // needs 3 <= 3
+    }
+
+    #[test]
+    fn clone_snapshot_keeps_replay_sample_stable() {
+        // The bench suite replays a fixed move batch once per sample; on a
+        // fresh clone every replay must measure the same state transition
+        // (replaying on the drifted original diverges after one sample).
+        let g = gen::erdos_renyi(60, 240, 8);
+        let cluster = Cluster::new(vec![Machine::new(1_000_000, 1.0, 2.0, 1.0); 3]);
+        let mut rng = SplitMix64::new(21);
+        let m = g.num_edges();
+        let ep = EdgePartition::from_assignment(
+            3,
+            (0..m).map(|_| rng.next_usize(3) as PartId).collect(),
+        );
+        let t0 = CostTracker::new(&g, &cluster, &ep);
+        let moves: Vec<(EId, PartId)> = (0..400)
+            .map(|_| (rng.next_usize(m) as EId, rng.next_usize(3) as PartId))
+            .collect();
+        let replay = |base: &CostTracker| {
+            let mut t = base.clone();
+            for &(e, part) in &moves {
+                t.move_edge(e, part);
+            }
+            t.tc()
+        };
+        let a = replay(&t0);
+        let b = replay(&t0);
+        assert_eq!(a.to_bits(), b.to_bits(), "replay on a clone must be sample-stable");
+        // the snapshot itself is untouched by the replays
+        let fresh = CostTracker::new(&g, &cluster, &ep);
+        assert_eq!(t0.tc().to_bits(), fresh.tc().to_bits());
+        check_consistency(&g, &cluster, &t0);
     }
 
     #[test]

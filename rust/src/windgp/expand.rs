@@ -45,7 +45,7 @@ struct Entry {
 
 impl PartialEq for Entry {
     fn eq(&self, other: &Self) -> bool {
-        self.score == other.score && self.v == other.v
+        self.cmp(other) == Ordering::Equal
     }
 }
 impl Eq for Entry {}
@@ -56,11 +56,14 @@ impl PartialOrd for Entry {
 }
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want the min score on top
+        // reversed: BinaryHeap is a max-heap, we want the min score on top.
+        // total_cmp keeps this a total order even when a score is NaN
+        // (α/β come from user-supplied SlsParams/CLI flags): the old
+        // `partial_cmp().unwrap_or(Equal)` answered Equal for *every* NaN
+        // comparison, which violates transitivity and can corrupt the heap.
         other
             .score
-            .partial_cmp(&self.score)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.score)
             .then_with(|| other.v.cmp(&self.v))
     }
 }
@@ -581,6 +584,49 @@ mod tests {
         let rf_ne = run(ExpandParams::ne());
         let rf_bf = run(ExpandParams { alpha: 0.3, beta: 0.3 });
         assert!(rf_bf <= rf_ne * 1.08, "bf {rf_bf} vs ne {rf_ne}");
+    }
+
+    #[test]
+    fn entry_ordering_is_total_with_nan_scores() {
+        let e = |score: f64, v: VId| Entry { score, v, version: 0 };
+        // antisymmetry must hold even against NaN (the old partial_cmp
+        // fallback said Equal both ways while PartialEq said unequal)
+        let nan = e(f64::NAN, 1);
+        let one = e(1.0, 2);
+        assert_eq!(nan.cmp(&one), one.cmp(&nan).reverse());
+        assert_eq!(nan.cmp(&nan), Ordering::Equal);
+        // heap drains deterministically: finite scores min-first, NaNs in
+        // a stable (vertex-id) order, repeatably
+        let drain = || {
+            let mut h = BinaryHeap::new();
+            for entry in [e(f64::NAN, 1), e(1.0, 2), e(-1.0, 3), e(f64::NAN, 4)] {
+                h.push(entry);
+            }
+            let mut order = Vec::new();
+            while let Some(x) = h.pop() {
+                order.push(x.v);
+            }
+            order
+        };
+        let first = drain();
+        assert_eq!(first.len(), 4);
+        assert_eq!(&first[..2], &[3, 2], "finite scores pop min-first");
+        assert_eq!(first, drain(), "NaN ordering must be deterministic");
+    }
+
+    #[test]
+    fn nan_alpha_expansion_still_terminates_and_claims_all() {
+        // user-supplied α = NaN poisons every priority; expansion must
+        // still terminate and claim every edge exactly once
+        let g = gen::erdos_renyi(80, 300, 11);
+        let cluster = big_mem_cluster(1);
+        let mut ex = Expander::new(&g, &cluster, 1);
+        let params = ExpandParams { alpha: f64::NAN, beta: 0.0 };
+        let e = ex.expand_partition(0, 2 * g.num_edges() as u64, &params);
+        let mut ids = e.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), g.num_edges(), "every edge claimed exactly once");
     }
 
     #[test]

@@ -73,6 +73,9 @@ pub struct SubgraphLocalSearch<'a> {
     best_assignment: Vec<PartId>,
     best_tc: f64,
     best_feasible: bool,
+    /// Algorithm-7 re-partitions executed so far (telemetry + the N0
+    /// trigger regression test).
+    pub repartitions: usize,
 }
 
 impl<'a> SubgraphLocalSearch<'a> {
@@ -99,6 +102,7 @@ impl<'a> SubgraphLocalSearch<'a> {
             best_assignment,
             best_tc,
             best_feasible,
+            repartitions: 0,
         }
     }
 
@@ -123,7 +127,9 @@ impl<'a> SubgraphLocalSearch<'a> {
                 fails += 1;
             }
             self.snapshot_if_best();
-            if fails > p.n0 {
+            // Algorithm 7 fires on the N0-th *consecutive* failed repair
+            // (`>=`: `fails > n0` would wait for N0 + 1 failures)
+            if fails >= p.n0 {
                 self.repartition(p);
                 self.snapshot_if_best();
                 fails = 0;
@@ -250,6 +256,7 @@ impl<'a> SubgraphLocalSearch<'a> {
         if np < 2 {
             return;
         }
+        self.repartitions += 1;
         let worst = (0..np)
             .max_by(|&a, &b| self.tracker.t(a).partial_cmp(&self.tracker.t(b)).unwrap())
             .unwrap();
@@ -373,6 +380,38 @@ mod tests {
         sls.run(&SlsParams::default());
         let after = Metrics::new(&g, &c).report(&sls.into_partition()).tc;
         assert!(after <= before + 1e-9);
+    }
+
+    #[test]
+    fn repartition_fires_after_exactly_n0_consecutive_failures() {
+        // Perfectly symmetric start on identical machines: T_0 == T_1
+        // exactly, so every destroy_repair bails out with "no spread"
+        // (tmax == tmin) without mutating anything — a deterministic
+        // stream of failed repairs. Algorithm 7 must fire on the N0-th
+        // consecutive failure, not the (N0+1)-th.
+        let g = {
+            let mut b = crate::graph::GraphBuilder::new();
+            b.add_edge(0, 1);
+            b.add_edge(1, 2);
+            b.add_edge(2, 3);
+            b.add_edge(0, 3);
+            b.build(0)
+        };
+        // canonical edge ids: 0=(0,1) 1=(0,3) 2=(1,2) 3=(2,3)
+        let c = cluster(2);
+        let ep = EdgePartition::from_assignment(2, vec![0, 0, 1, 1]);
+        let order = vec![vec![0u32, 1], vec![2u32, 3]];
+        let deltas = vec![3u64, 3];
+        let n0 = 4usize;
+        for (t0, want) in [(n0 - 1, 0usize), (n0, 1usize)] {
+            let mut sls =
+                SubgraphLocalSearch::new(&g, &c, ep.clone(), order.clone(), deltas.clone(), 1);
+            sls.run(&SlsParams { n0, t0, ..Default::default() });
+            assert_eq!(
+                sls.repartitions, want,
+                "t0 = {t0}: N0 = {n0} consecutive failures must trigger exactly {want} re-partitions"
+            );
+        }
     }
 
     #[test]

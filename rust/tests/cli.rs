@@ -97,6 +97,91 @@ fn bench_emits_valid_json() {
         assert!(r.get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
         assert!(r.get("samples").unwrap().as_usize().unwrap() >= 1);
     }
+    // the ingest pipeline section must be tracked per PR
+    let names: Vec<&str> = results
+        .iter()
+        .map(|r| r.get("name").unwrap().as_str().unwrap())
+        .collect();
+    for want in [
+        "ingest/parse",
+        "ingest/build",
+        "ingest/build-sequential",
+        "ingest/cache-reload",
+    ] {
+        assert!(names.contains(&want), "missing bench entry {want} in {names:?}");
+    }
+}
+
+#[test]
+fn gen_binary_format_roundtrips_through_partition() {
+    let dir = std::env::temp_dir().join("windgp_cli_gen_bin_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_path = dir.join("rn.bin");
+    let out = bin()
+        .args([
+            "gen",
+            "--graph",
+            "rn-s",
+            "--shrink",
+            "4",
+            "--format",
+            "bin",
+            "--out",
+            out_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // the cache reloads to the exact generated graph
+    let g = windgp::experiments::ExpCtx::new(3, 4).graph("rn-s");
+    let g2 = windgp::graph::io::read_binary(&out_path).unwrap();
+    assert_eq!(g.edges, g2.edges);
+    assert_eq!(g.num_vertices(), g2.num_vertices());
+    // and the partition path sniffs + loads the binary file end-to-end
+    let out = bin()
+        .args([
+            "partition",
+            "--graph",
+            out_path.to_str().unwrap(),
+            "--algo",
+            "ne",
+            "--shrink",
+            "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("TC"));
+}
+
+#[test]
+fn gen_unknown_format_fails_cleanly() {
+    let dir = std::env::temp_dir().join("windgp_cli_gen_bad_format");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = bin()
+        .args([
+            "gen",
+            "--graph",
+            "rn-s",
+            "--shrink",
+            "4",
+            "--format",
+            "xml",
+            "--out",
+            dir.join("x.xml").to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown format"));
 }
 
 #[test]

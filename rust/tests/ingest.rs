@@ -1,0 +1,269 @@
+//! Parallel-ingest equivalence + IO round-trip/corruption suite.
+//!
+//! Pins the ISSUE-3 contracts:
+//!   I1  parallel parse+build produces a byte-identical `Graph`
+//!       (edges/offsets/neighbors/incident) to the sequential path at
+//!       1, 4, and 8 workers
+//!   I2  text round trips preserve `num_vertices()` — including trailing
+//!       isolated vertices — via the `# ... vertices` header
+//!   I3  gapped id spaces remap densely, and the mapping reproduces the
+//!       original edges exactly
+//!   I4  corrupt/truncated binary caches are rejected with a clear error
+//!       before any allocation (no OOM, no silent mis-read)
+
+use windgp::graph::ingest::{self, IngestOptions, Remap};
+use windgp::graph::{gen, io, rmat, Graph, GraphBuilder};
+use windgp::util::SplitMix64;
+
+fn graphs_identical(a: &Graph, b: &Graph) {
+    assert_eq!(a.edges, b.edges, "edges differ");
+    assert_eq!(a.offsets, b.offsets, "offsets differ");
+    assert_eq!(a.neighbors, b.neighbors, "neighbors differ");
+    assert_eq!(a.incident, b.incident, "incident differ");
+}
+
+fn test_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("windgp_ingest_test_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn i1_parallel_ingest_identical_to_sequential_at_1_4_8_workers() {
+    let g = rmat::generate(&rmat::RmatParams::graph500(11, 8), 9);
+    let dir = test_dir("equiv");
+    let p = dir.join("g.txt");
+    io::write_edge_list(&g, &p).unwrap();
+    let seq = io::read_edge_list(&p).unwrap();
+    graphs_identical(&g, &seq);
+    for workers in [1usize, 4, 8] {
+        let ing = ingest::read_edge_list_parallel(
+            &p,
+            IngestOptions { workers, remap: Remap::Never },
+        )
+        .unwrap();
+        assert!(ing.vertex_ids.is_none());
+        graphs_identical(&seq, &ing.graph);
+    }
+}
+
+#[test]
+fn i1_build_parallel_identical_to_graphbuilder() {
+    let mut rng = SplitMix64::new(3);
+    for case in 0..4usize {
+        let n = 50 + case * 97;
+        let m = 40 + case * 500;
+        let mut raw = Vec::with_capacity(m);
+        for _ in 0..m {
+            // includes self-loops and duplicates in both orientations
+            raw.push((rng.next_usize(n) as u32, rng.next_usize(n) as u32));
+        }
+        let mut b = GraphBuilder::with_capacity(raw.len());
+        for &(u, v) in &raw {
+            b.add_edge(u, v);
+        }
+        let seq = b.build(7);
+        for workers in [1usize, 4, 8] {
+            let par = ingest::build_parallel(raw.clone(), 7, workers);
+            graphs_identical(&seq, &par);
+        }
+    }
+}
+
+#[test]
+fn i2_text_roundtrip_preserves_trailing_isolated_vertices() {
+    let mut b = GraphBuilder::new();
+    b.add_edge(0, 1);
+    b.add_edge(1, 2);
+    let g = b.build(10); // vertices 3..9 isolated, beyond any edge endpoint
+    assert_eq!(g.num_vertices(), 10);
+    let dir = test_dir("isolated");
+    let p = dir.join("iso.txt");
+    io::write_edge_list(&g, &p).unwrap();
+    let seq = io::read_edge_list(&p).unwrap();
+    assert_eq!(seq.num_vertices(), 10, "sequential read lost isolated vertices");
+    assert_eq!(seq.edges, g.edges);
+    let par = ingest::read_edge_list_parallel(&p, IngestOptions::default()).unwrap();
+    assert_eq!(par.graph.num_vertices(), 10, "parallel read lost isolated vertices");
+    graphs_identical(&seq, &par.graph);
+}
+
+#[test]
+fn i2_headerless_text_still_reads() {
+    let dir = test_dir("headerless");
+    let p = dir.join("plain.txt");
+    std::fs::write(&p, "0 1\n1 2\n").unwrap();
+    let seq = io::read_edge_list(&p).unwrap();
+    assert_eq!(seq.num_vertices(), 3);
+    let par = ingest::read_edge_list_parallel(&p, IngestOptions::default()).unwrap();
+    graphs_identical(&seq, &par.graph);
+}
+
+#[test]
+fn i3_gapped_ids_remap_and_map_back_exactly() {
+    // ids up to ~2^31: remap must keep CSR arrays at distinct-count size
+    let dir = test_dir("gapped");
+    let p = dir.join("gapped.txt");
+    std::fs::write(&p, "# gapped ids\n5 2147483000\n7 5\n2147483000 7\n").unwrap();
+    let ing = ingest::read_edge_list_parallel(
+        &p,
+        IngestOptions { workers: 2, remap: Remap::Always },
+    )
+    .unwrap();
+    let ids = ing.vertex_ids.expect("gapped input must report a mapping");
+    assert_eq!(ids, vec![5, 7, 2_147_483_000]);
+    assert_eq!(ing.graph.num_vertices(), 3);
+    assert_eq!(ing.graph.edges, vec![(0, 1), (0, 2), (1, 2)]);
+    ing.graph.validate().unwrap();
+    // Auto policy also fires for this id space
+    let auto = ingest::read_edge_list_parallel(
+        &p,
+        IngestOptions { workers: 0, remap: Remap::Auto },
+    )
+    .unwrap();
+    assert!(auto.vertex_ids.is_some());
+}
+
+#[test]
+fn i3_random_gapped_roundtrips_across_worker_counts() {
+    let mut rng = SplitMix64::new(77);
+    let dir = test_dir("random_gapped");
+    for case in 0..6usize {
+        // gappy-but-buildable id space so the sequential reference is cheap
+        let idspace = 1u64 << (10 + 2 * (case % 3));
+        let m = 30 + case * 57;
+        let mut text = String::from("# random gapped graph\n");
+        for _ in 0..m {
+            let u = rng.next_u64() % idspace;
+            let v = rng.next_u64() % idspace;
+            text.push_str(&format!("{u} {v}\n"));
+        }
+        let p = dir.join(format!("case{case}.txt"));
+        std::fs::write(&p, &text).unwrap();
+        let seq = io::read_edge_list(&p).unwrap();
+        for workers in [1usize, 4, 8] {
+            let par = ingest::read_edge_list_parallel(
+                &p,
+                IngestOptions { workers, remap: Remap::Never },
+            )
+            .unwrap();
+            graphs_identical(&seq, &par.graph);
+        }
+        // dense remap: mapping back must reproduce the original edge list
+        let rem = ingest::read_edge_list_parallel(
+            &p,
+            IngestOptions { workers: 4, remap: Remap::Always },
+        )
+        .unwrap();
+        match rem.vertex_ids {
+            Some(ids) => {
+                let back: Vec<(u32, u32)> = rem
+                    .graph
+                    .edges
+                    .iter()
+                    .map(|&(u, v)| (ids[u as usize], ids[v as usize]))
+                    .collect();
+                assert_eq!(back, seq.edges, "case {case}: remap must be order-preserving");
+            }
+            None => assert_eq!(rem.graph.edges, seq.edges, "case {case}"),
+        }
+    }
+}
+
+#[test]
+fn i4_v1_header_with_absurd_edge_count_is_rejected_not_oomed() {
+    let dir = test_dir("corrupt_v1");
+    let p = dir.join("huge_m.bin");
+    let mut bytes = Vec::new();
+    bytes.extend(0x5747_4201u32.to_le_bytes()); // v1 magic
+    bytes.extend(100u64.to_le_bytes()); // n
+    bytes.extend((u64::MAX / 16).to_le_bytes()); // m: absurd
+    std::fs::write(&p, &bytes).unwrap();
+    let err = io::read_binary(&p).unwrap_err().to_string();
+    assert!(
+        err.contains("corrupt") || err.contains("truncated"),
+        "unhelpful error: {err}"
+    );
+}
+
+#[test]
+fn i4_v1_interior_corruption_is_rejected() {
+    // right length, but one edge endpoint flipped far beyond the header n:
+    // must error instead of sizing the CSR by max_id+1
+    let mut b = GraphBuilder::new();
+    b.add_edge(0, 1);
+    b.add_edge(1, 2);
+    let g = b.build(0);
+    let dir = test_dir("corrupt_v1_interior");
+    let p = dir.join("flip_v1.bin");
+    io::write_binary_v1(&g, &p).unwrap();
+    let mut data = std::fs::read(&p).unwrap();
+    // first edge pair starts right after the 20-byte header; poison the
+    // high byte of u
+    data[23] = 0xFF;
+    std::fs::write(&p, &data).unwrap();
+    let err = io::read_binary(&p).unwrap_err().to_string();
+    assert!(err.contains("corrupt"), "{err}");
+}
+
+#[test]
+fn i4_truncated_v2_cache_is_rejected() {
+    let g = gen::erdos_renyi(50, 200, 4);
+    let dir = test_dir("corrupt_v2");
+    let p = dir.join("trunc.bin");
+    io::write_binary(&g, &p).unwrap();
+    let data = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &data[..data.len() - 5]).unwrap();
+    let err = io::read_binary(&p).unwrap_err().to_string();
+    assert!(err.contains("corrupt") || err.contains("truncated"), "{err}");
+    // header-only file (everything after n/m missing)
+    std::fs::write(&p, &data[..20]).unwrap();
+    assert!(io::read_binary(&p).is_err());
+    // bad magic
+    std::fs::write(&p, b"not a graph at all").unwrap();
+    let err = io::read_binary(&p).unwrap_err().to_string();
+    assert!(err.contains("bad magic"), "{err}");
+}
+
+#[test]
+fn i4_interior_corruption_in_v2_is_rejected() {
+    // triangle: n=3, m=3 -> neighbors region starts at 4+8+8+4*8 = 52
+    let mut b = GraphBuilder::new();
+    b.add_edge(0, 1);
+    b.add_edge(1, 2);
+    b.add_edge(0, 2);
+    let g = b.build(0);
+    let dir = test_dir("corrupt_v2_interior");
+    let p = dir.join("flip.bin");
+    io::write_binary(&g, &p).unwrap();
+    let mut data = std::fs::read(&p).unwrap();
+    data[55] = 0xFF; // high byte of neighbors[0] -> id far out of range
+    std::fs::write(&p, &data).unwrap();
+    let err = io::read_binary(&p).unwrap_err().to_string();
+    assert!(err.contains("corrupt"), "{err}");
+}
+
+#[test]
+fn i4_absurd_vertex_count_is_rejected() {
+    let dir = test_dir("corrupt_n");
+    let p = dir.join("huge_n.bin");
+    let mut bytes = Vec::new();
+    bytes.extend(0x5747_4202u32.to_le_bytes()); // v2 magic
+    bytes.extend(u64::MAX.to_le_bytes()); // n beyond the u32 id space
+    bytes.extend(0u64.to_le_bytes()); // m
+    std::fs::write(&p, &bytes).unwrap();
+    let err = io::read_binary(&p).unwrap_err().to_string();
+    assert!(err.contains("corrupt"), "{err}");
+}
+
+#[test]
+fn binary_v2_roundtrip_via_gen_graph() {
+    // end-to-end: RMAT graph -> v2 cache -> reload -> byte-identical
+    let g = rmat::generate(&rmat::RmatParams::mild(10, 6), 13);
+    let dir = test_dir("v2_roundtrip");
+    let p = dir.join("g.bin");
+    io::write_binary(&g, &p).unwrap();
+    let g2 = io::read_binary(&p).unwrap();
+    graphs_identical(&g, &g2);
+    g2.validate().unwrap();
+}
