@@ -7,8 +7,33 @@
 //! WindGP ≈ NE (paper: 11% slower); HDRF fastest of the quality methods;
 //! METIS slowest.
 
-use windgp::experiments::{common, ExpCtx};
+use windgp::graph::Graph;
+use windgp::machines::Cluster;
+use windgp::partition::Partitioner;
 use windgp::util::bench::bench;
+
+use windgp::experiments::{common, ExpCtx};
+
+/// Bench one partitioner with a drift guard: every sample runs on fresh
+/// internal state (each `partition` call builds its own `Expander` /
+/// tracker — same bug class as the tracker bench fixed in PR 2, where
+/// replaying on a persistent instance measured ever-drifting state). The
+/// two-sample stability assertion pins that statelessness: if a
+/// partitioner ever leaks state across calls, sample 2 diverges and this
+/// fails before any timing is reported.
+fn bench_partitioner(label: &str, a: &dyn Partitioner, g: &Graph, cluster: &Cluster) {
+    let first = a.partition(g, cluster, 1);
+    let second = a.partition(g, cluster, 1);
+    assert!(first.is_complete());
+    assert_eq!(
+        first.assignment, second.assignment,
+        "{label}: samples are not independent (state drifts across calls)"
+    );
+    bench(label, 3, || {
+        let ep = a.partition(g, cluster, 1);
+        assert!(ep.is_complete());
+    });
+}
 
 fn main() {
     let shrink: u32 = std::env::var("BENCH_SHRINK")
@@ -21,10 +46,7 @@ fn main() {
         let g = ctx.graph(name);
         let cluster = ctx.cluster_for(name, &g);
         for a in common::traditional_partitioners() {
-            bench(&format!("{name}/{}", a.name()), 3, || {
-                let ep = a.partition(&g, &cluster, 1);
-                assert!(ep.is_complete());
-            });
+            bench_partitioner(&format!("{name}/{}", a.name()), a.as_ref(), &g, &cluster);
         }
     }
     println!("\n== Table 18: heterogeneous methods on large stand-ins ==");
@@ -32,10 +54,7 @@ fn main() {
         let g = ctx.graph(name);
         let cluster = ctx.nine_machine_for(name, &g);
         for a in common::hetero_partitioners() {
-            bench(&format!("{name}/{}", a.name()), 3, || {
-                let ep = a.partition(&g, &cluster, 1);
-                assert!(ep.is_complete());
-            });
+            bench_partitioner(&format!("{name}/{}", a.name()), a.as_ref(), &g, &cluster);
         }
     }
 }

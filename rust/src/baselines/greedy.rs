@@ -17,9 +17,16 @@ use super::fallback_place;
 pub struct PowerGraphGreedy;
 
 impl PowerGraphGreedy {
-    fn least_loaded(t: &CostTracker, e: u32, cands: &[PartId]) -> Option<PartId> {
+    /// Least-loaded feasible machine among `cands`; generic over the
+    /// candidate source so callers can stream ids straight off the
+    /// tracker's inline replica storage without building a `Vec`.
+    fn least_loaded<I: IntoIterator<Item = PartId>>(
+        t: &CostTracker,
+        e: u32,
+        cands: I,
+    ) -> Option<PartId> {
         let mut best: Option<(PartId, u64)> = None;
-        for &i in cands {
+        for i in cands {
             let newv = t.new_endpoints(e, i);
             if !t.edge_fits(i as usize, newv) {
                 continue;
@@ -30,6 +37,11 @@ impl PowerGraphGreedy {
             }
         }
         best.map(|(i, _)| i)
+    }
+
+    /// Ids of the partitions holding `v`, in sorted order, allocation-free.
+    fn holders<'t>(t: &'t CostTracker<'_>, v: u32) -> impl Iterator<Item = PartId> + 't {
+        t.replica_entries(v).iter().map(|&(q, _)| q)
     }
 }
 
@@ -42,30 +54,31 @@ impl Partitioner for PowerGraphGreedy {
         let p = cluster.len();
         let ep = EdgePartition::unassigned(g, p);
         let mut t = CostTracker::new(g, cluster, &ep);
-        let all: Vec<PartId> = (0..p as PartId).collect();
+        // reusable scratch: the only candidate set that needs materializing
+        // (an intersection); su/sv stream straight off the replica storage
+        let mut both: Vec<PartId> = Vec::new();
         for e in 0..g.num_edges() as u32 {
             let (u, v) = g.edge(e);
-            let su = t.parts_of(u);
-            let sv = t.parts_of(v);
-            let both: Vec<PartId> = su.iter().copied().filter(|x| sv.contains(x)).collect();
+            both.clear();
+            t.common_parts(u, v, &mut both);
+            let nu = t.replica_count(u);
+            let nv = t.replica_count(v);
             let target = if !both.is_empty() {
-                Self::least_loaded(&t, e, &both)
-            } else if !su.is_empty() && !sv.is_empty() {
+                Self::least_loaded(&t, e, both.iter().copied())
+            } else if nu > 0 && nv > 0 {
                 // tie-break by remaining degree: replicate the endpoint with
                 // more unplaced edges (PowerGraph's heuristic)
-                let du = g.degree(u);
-                let dv = g.degree(v);
-                let pref = if du >= dv { &sv } else { &su };
-                Self::least_loaded(&t, e, pref)
-            } else if !su.is_empty() {
-                Self::least_loaded(&t, e, &su)
-            } else if !sv.is_empty() {
-                Self::least_loaded(&t, e, &sv)
+                let pref = if g.degree(u) >= g.degree(v) { v } else { u };
+                Self::least_loaded(&t, e, Self::holders(&t, pref))
+            } else if nu > 0 {
+                Self::least_loaded(&t, e, Self::holders(&t, u))
+            } else if nv > 0 {
+                Self::least_loaded(&t, e, Self::holders(&t, v))
             } else {
-                Self::least_loaded(&t, e, &all)
+                Self::least_loaded(&t, e, 0..p as PartId)
             };
             let target = target
-                .or_else(|| Self::least_loaded(&t, e, &all))
+                .or_else(|| Self::least_loaded(&t, e, 0..p as PartId))
                 .unwrap_or_else(|| fallback_place(&t, e));
             t.add_edge(e, target);
         }

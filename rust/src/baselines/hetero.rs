@@ -99,11 +99,10 @@ impl Partitioner for GrapHLike {
                 let mut dcom = 0.0;
                 for w in [u, v] {
                     if !t.has_vertex(w, i) {
-                        let holders = t.parts_of(w);
                         let ci = cluster.machines[i as usize].c_com;
-                        for &j in &holders {
+                        t.for_each_part(w, |j| {
                             dcom += ci + cluster.machines[j as usize].c_com;
-                        }
+                        });
                     }
                 }
                 // mild edge-balance tiebreak (GrapH balances traffic, not

@@ -11,8 +11,10 @@ pub mod ingest;
 pub mod io;
 pub mod mesh;
 pub mod rmat;
+pub mod working;
 
 pub use csr::{Graph, GraphBuilder};
+pub use working::{CompactPolicy, WorkingGraph};
 
 /// Vertex id type. u32 keeps CSR arrays compact for the multi-hundred-M-edge
 /// stand-ins.

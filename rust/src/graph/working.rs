@@ -1,0 +1,354 @@
+//! Working-graph compaction: mutable CSR views proportional to *remaining*
+//! work.
+//!
+//! WindGP's §3.3 expansion and §3.4 SLS re-partition are defined over the
+//! *working graph* — the subgraph of edges not yet assigned to any
+//! partition. Scanning the static CSR for every adjacency walk re-visits
+//! assigned slots over and over: a hub vertex on a power-law graph sits on
+//! the boundary of up to `p` partitions and is re-scanned at *full* degree
+//! each time, even when almost all of its edges are long claimed.
+//!
+//! [`WorkingGraph`] owns mutable copies of the CSR `neighbors`/`incident`
+//! arrays plus a per-vertex *live-prefix* split:
+//!
+//!   - slots `[start(v) .. start(v) + live_len(v))` form vertex `v`'s live
+//!     window; every still-unassigned incident edge of `v` lives there (the
+//!     window may also hold assigned slots that were claimed since the last
+//!     compaction — scans still skip them via the caller's `assigned` bits);
+//!   - `dead(v)` counts those assigned-but-not-yet-compacted slots;
+//!   - when `dead(v)` crosses the policy threshold (default: half the live
+//!     window), the window is **stably compacted** — unassigned entries are
+//!     shifted down *in their original relative order* and `live_len`
+//!     shrinks.
+//!
+//! Stability is the load-bearing property: adjacency walks over the live
+//! window visit exactly the same unassigned slots in exactly the same order
+//! as a full static-CSR scan that skips assigned entries, so the expansion
+//! engine produces **byte-identical** partitions at any [`CompactPolicy`]
+//! (pinned by `rust/tests/differential.rs`). With the halving policy each
+//! compaction at least halves the window it touches, so total compaction
+//! work is a geometric series bounded by O(|E|) over the whole partitioning
+//! run — and every scan thereafter is O(remaining degree).
+
+use super::{EId, Graph, VId};
+
+/// When to compact a vertex's live window.
+///
+/// All policies yield byte-identical partitions (compaction only drops
+/// slots the scans already skip); they differ purely in constant-factor
+/// cost. `Never` degenerates to the original full-static-CSR scanning and
+/// serves as the differential-test reference; `Always` compacts a window as
+/// soon as it holds a single dead slot (maximum compaction churn).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CompactPolicy {
+    /// Never compact: scans always walk the original window (the
+    /// pre-compaction slow path, kept as the differential reference).
+    Never,
+    /// Compact a window as soon as it holds any dead slot ("compact every
+    /// step") — maximal compaction work, minimal scan work.
+    Always,
+    /// Compact when dead slots reach half the live window — amortized
+    /// O(|E|) total compaction work (each pass halves the window).
+    #[default]
+    Halving,
+}
+
+/// Mutable working-graph view over a [`Graph`]'s CSR (see module docs).
+///
+/// The caller owns the `assigned` edge bitmap and passes it into
+/// [`WorkingGraph::compact_if_due`]; the working graph itself only tracks
+/// window geometry (`live_len`) and staleness (`dead`). Edges must only
+/// ever move unassigned → assigned during the lifetime of one
+/// `WorkingGraph` (the expansion engine is monotone; SLS resume paths
+/// build a fresh one via [`WorkingGraph::from_assigned`]).
+#[derive(Clone, Debug)]
+pub struct WorkingGraph {
+    /// live-window start per vertex (copied from the source CSR offsets)
+    starts: Vec<usize>,
+    /// mutable copy of the CSR column indices
+    neighbors: Vec<VId>,
+    /// mutable copy of the canonical edge id per adjacency slot
+    incident: Vec<EId>,
+    /// live-window length per vertex
+    live_len: Vec<u32>,
+    /// assigned-but-not-compacted slots inside the live window
+    dead: Vec<u32>,
+    policy: CompactPolicy,
+    /// telemetry: number of window compactions performed
+    compactions: u64,
+    /// telemetry: total slots scanned by compaction passes
+    compacted_slots: u64,
+}
+
+impl WorkingGraph {
+    /// Full working graph (no edges assigned yet): straight CSR copy.
+    pub fn new(g: &Graph, policy: CompactPolicy) -> Self {
+        let n = g.num_vertices();
+        let mut starts = Vec::with_capacity(n);
+        let mut live_len = Vec::with_capacity(n);
+        for v in 0..n {
+            starts.push(g.offsets[v] as usize);
+            live_len.push((g.offsets[v + 1] - g.offsets[v]) as u32);
+        }
+        Self {
+            starts,
+            neighbors: g.neighbors.clone(),
+            incident: g.incident.clone(),
+            live_len,
+            dead: vec![0; n],
+            policy,
+            compactions: 0,
+            compacted_slots: 0,
+        }
+    }
+
+    /// Working graph resumed from partial assignment state (SLS
+    /// re-partition): already-assigned slots are compacted away up front,
+    /// so `live_len(v)` starts out equal to v's remaining degree.
+    pub fn from_assigned(g: &Graph, assigned: &[bool], policy: CompactPolicy) -> Self {
+        debug_assert_eq!(assigned.len(), g.num_edges());
+        let n = g.num_vertices();
+        let mut starts = Vec::with_capacity(n);
+        let mut live_len = vec![0u32; n];
+        let mut neighbors = vec![0 as VId; g.neighbors.len()];
+        let mut incident = vec![0 as EId; g.incident.len()];
+        for v in 0..n {
+            let start = g.offsets[v] as usize;
+            let end = g.offsets[v + 1] as usize;
+            starts.push(start);
+            let mut w = start;
+            for idx in start..end {
+                let e = g.incident[idx];
+                if !assigned[e as usize] {
+                    neighbors[w] = g.neighbors[idx];
+                    incident[w] = e;
+                    w += 1;
+                }
+            }
+            live_len[v] = (w - start) as u32;
+        }
+        Self {
+            starts,
+            neighbors,
+            incident,
+            live_len,
+            dead: vec![0; n],
+            policy,
+            compactions: 0,
+            compacted_slots: 0,
+        }
+    }
+
+    /// Bounds of `v`'s live window, for indexed scans via
+    /// [`Self::neighbor_at`] / [`Self::incident_at`].
+    #[inline]
+    pub fn live_range(&self, v: VId) -> (usize, usize) {
+        let start = self.starts[v as usize];
+        (start, start + self.live_len[v as usize] as usize)
+    }
+
+    /// Current live-window length of `v` (remaining degree + dead slots).
+    #[inline]
+    pub fn live_len(&self, v: VId) -> u32 {
+        self.live_len[v as usize]
+    }
+
+    /// Exact remaining (unassigned-edge) degree of `v`.
+    #[inline]
+    pub fn remaining_degree(&self, v: VId) -> u32 {
+        self.live_len[v as usize] - self.dead[v as usize]
+    }
+
+    #[inline]
+    pub fn neighbor_at(&self, idx: usize) -> VId {
+        self.neighbors[idx]
+    }
+
+    #[inline]
+    pub fn incident_at(&self, idx: usize) -> EId {
+        self.incident[idx]
+    }
+
+    /// Record that one incident edge of `v` was just assigned (one live
+    /// slot of `v` went dead). Never compacts — callers invoke
+    /// [`Self::compact_if_due`] at scan boundaries, where no iteration
+    /// over `v`'s window is in flight.
+    #[inline]
+    pub fn note_assigned(&mut self, v: VId) {
+        self.dead[v as usize] += 1;
+        debug_assert!(self.dead[v as usize] <= self.live_len[v as usize]);
+    }
+
+    /// True when the policy says `v`'s window should be compacted now.
+    #[inline]
+    fn due(&self, v: VId) -> bool {
+        let dead = self.dead[v as usize];
+        match self.policy {
+            CompactPolicy::Never => false,
+            CompactPolicy::Always => dead > 0,
+            CompactPolicy::Halving => dead > 0 && 2 * dead >= self.live_len[v as usize],
+        }
+    }
+
+    /// Compact `v`'s live window if the policy threshold is crossed.
+    /// Must only be called when no scan of `v`'s window is in flight.
+    #[inline]
+    pub fn compact_if_due(&mut self, v: VId, assigned: &[bool]) {
+        if self.due(v) {
+            self.compact(v, assigned);
+        }
+    }
+
+    /// Stably compact `v`'s live window: keep unassigned slots in their
+    /// original relative order, drop assigned ones, shrink the window.
+    fn compact(&mut self, v: VId, assigned: &[bool]) {
+        let start = self.starts[v as usize];
+        let end = start + self.live_len[v as usize] as usize;
+        let mut w = start;
+        for r in start..end {
+            let e = self.incident[r];
+            if !assigned[e as usize] {
+                if w != r {
+                    self.neighbors[w] = self.neighbors[r];
+                    self.incident[w] = self.incident[r];
+                }
+                w += 1;
+            }
+        }
+        self.compacted_slots += (end - start) as u64;
+        self.compactions += 1;
+        self.live_len[v as usize] = (w - start) as u32;
+        self.dead[v as usize] = 0;
+    }
+
+    /// Telemetry: number of per-vertex compaction passes so far.
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    /// Telemetry: total slots walked by compaction passes (bounds the
+    /// amortized-O(|E|) claim in tests).
+    pub fn compacted_slots(&self) -> u64 {
+        self.compacted_slots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    /// Collect the unassigned adjacency sequence of `v` the way the
+    /// expansion engine scans it: live window, skipping assigned slots.
+    fn scan(wg: &WorkingGraph, v: VId, assigned: &[bool]) -> Vec<(VId, EId)> {
+        let (start, end) = wg.live_range(v);
+        (start..end)
+            .filter(|&i| !assigned[wg.incident_at(i) as usize])
+            .map(|i| (wg.neighbor_at(i), wg.incident_at(i)))
+            .collect()
+    }
+
+    /// Reference: full static-CSR scan skipping assigned slots.
+    fn scan_static(g: &Graph, v: VId, assigned: &[bool]) -> Vec<(VId, EId)> {
+        g.neighbors(v)
+            .iter()
+            .zip(g.incident_edges(v))
+            .filter(|&(_, &e)| !assigned[e as usize])
+            .map(|(&nb, &e)| (nb, e))
+            .collect()
+    }
+
+    #[test]
+    fn compaction_preserves_scan_order_under_random_assignment() {
+        let g = gen::erdos_renyi(60, 240, 5);
+        let mut rng = crate::util::SplitMix64::new(17);
+        for policy in [CompactPolicy::Never, CompactPolicy::Always, CompactPolicy::Halving] {
+            let mut wg = WorkingGraph::new(&g, policy);
+            let mut assigned = vec![false; g.num_edges()];
+            for _ in 0..g.num_edges() {
+                let e = rng.next_usize(g.num_edges()) as EId;
+                if assigned[e as usize] {
+                    continue;
+                }
+                assigned[e as usize] = true;
+                let (u, v) = g.edge(e);
+                wg.note_assigned(u);
+                wg.note_assigned(v);
+                // compact at "scan boundaries" and check every vertex still
+                // scans identically to the static reference
+                for w in [u, v] {
+                    wg.compact_if_due(w, &assigned);
+                }
+                for w in 0..g.num_vertices() as VId {
+                    assert_eq!(
+                        scan(&wg, w, &assigned),
+                        scan_static(&g, w, &assigned),
+                        "policy {policy:?}: scan diverged at vertex {w}"
+                    );
+                    assert_eq!(
+                        wg.remaining_degree(w) as usize,
+                        scan_static(&g, w, &assigned).len(),
+                        "policy {policy:?}: remaining degree wrong at {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_assigned_starts_fully_compacted() {
+        let g = gen::erdos_renyi(40, 160, 9);
+        let mut assigned = vec![false; g.num_edges()];
+        for e in 0..g.num_edges() {
+            assigned[e] = e % 3 == 0;
+        }
+        let wg = WorkingGraph::from_assigned(&g, &assigned, CompactPolicy::Halving);
+        for v in 0..g.num_vertices() as VId {
+            assert_eq!(wg.live_len(v), wg.remaining_degree(v), "no dead slots at start");
+            assert_eq!(scan(&wg, v, &assigned), scan_static(&g, v, &assigned));
+        }
+    }
+
+    #[test]
+    fn never_policy_never_compacts() {
+        let g = gen::clique(6);
+        let mut wg = WorkingGraph::new(&g, CompactPolicy::Never);
+        let mut assigned = vec![false; g.num_edges()];
+        for e in 0..g.num_edges() as EId {
+            assigned[e as usize] = true;
+            let (u, v) = g.edge(e);
+            wg.note_assigned(u);
+            wg.note_assigned(v);
+            wg.compact_if_due(u, &assigned);
+            wg.compact_if_due(v, &assigned);
+        }
+        assert_eq!(wg.compactions(), 0);
+        // windows keep their original full length
+        for v in 0..g.num_vertices() as VId {
+            assert_eq!(wg.live_len(v) as usize, g.degree(v));
+            assert_eq!(wg.remaining_degree(v), 0);
+        }
+    }
+
+    #[test]
+    fn halving_compaction_work_is_linear_in_edges() {
+        // assign every edge one by one with halving compaction at every
+        // boundary: total compaction slot traffic must stay O(|E|)
+        // (geometric series — each pass at least halves its window)
+        let g = gen::erdos_renyi(200, 2000, 3);
+        let mut wg = WorkingGraph::new(&g, CompactPolicy::Halving);
+        let mut assigned = vec![false; g.num_edges()];
+        for e in 0..g.num_edges() as EId {
+            assigned[e as usize] = true;
+            let (u, v) = g.edge(e);
+            wg.note_assigned(u);
+            wg.note_assigned(v);
+            wg.compact_if_due(u, &assigned);
+            wg.compact_if_due(v, &assigned);
+        }
+        let slots = wg.compacted_slots();
+        let budget = 4 * 2 * g.num_edges() as u64; // 4x the CSR size, generous
+        assert!(slots <= budget, "compaction traffic {slots} > budget {budget}");
+        assert!(wg.compactions() > 0, "halving policy must compact at least once");
+    }
+}

@@ -324,6 +324,63 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
         },
     ));
 
+    // --- partition-phase hot path (§3.3/§3.4): expansion over the
+    //     epoch-compacted working graph at p = 8 (vs the uncompacted
+    //     full-CSR reference), the allocation-free SLS destroy/repair
+    //     ladder, and a full SLS run ---
+    {
+        use windgp::graph::CompactPolicy;
+        use windgp::machines::Machine;
+        use windgp::windgp::sls::{SlsParams, SubgraphLocalSearch};
+
+        // memory-unconstrained 8-machine cluster: the bench isolates
+        // adjacency-walk cost, not memory cut-off behavior
+        let cluster8 = Cluster::new(vec![Machine::new(u64::MAX / 8, 1.0, 1.0, 1.0); 8]);
+        let params = ExpandParams { alpha: 0.3, beta: 0.3 };
+        let run_expand = |policy: CompactPolicy| {
+            let mut ex = Expander::new_with_policy(&g, &cluster8, 1, policy);
+            let mut total = 0usize;
+            for i in 0..8u32 {
+                total += ex.expand_partition(i, (m as u64) / 8 + 1, &params).len();
+            }
+            assert!(total > m / 2);
+        };
+        results.push(bench("expand/partition", samples, || {
+            run_expand(CompactPolicy::Halving)
+        }));
+        // the pre-compaction engine (policy Never scans the full static
+        // windows) — the before/after pair for the perf trajectory
+        results.push(bench("expand/partition-uncompacted", samples, || {
+            run_expand(CompactPolicy::Never)
+        }));
+
+        // skewed SLS start (70% of edges on machine 0) so destroy/repair
+        // has real work every round
+        let p8 = 8usize;
+        let mut ep8 = EdgePartition::unassigned(&g, p8);
+        let mut order8: Vec<Vec<u32>> = vec![Vec::new(); p8];
+        for e in 0..m {
+            let part = if e % 10 < 7 { 0 } else { 1 + e % (p8 - 1) };
+            ep8.assignment[e] = part as u32;
+            order8[part].push(e as u32);
+        }
+        let deltas8 = vec![(m / p8 + 1) as u64; p8];
+        let sls0 = SubgraphLocalSearch::new(&g, &cluster8, ep8, order8, deltas8, 2);
+        let slsp = SlsParams { theta: 0.05, gamma: 0.5, ..Default::default() };
+        results.push(bench("sls/destroy-repair", samples, || {
+            // fresh clone per sample: the operators mutate the tracker,
+            // replaying on a drifted instance would skew later samples
+            let mut s = sls0.clone();
+            for _ in 0..5 {
+                s.destroy_repair(&slsp);
+            }
+        }));
+        results.push(bench("sls/full", samples, || {
+            let mut s = sls0.clone();
+            s.run(&SlsParams { t0: 10, theta: 0.05, gamma: 0.5, ..Default::default() });
+        }));
+    }
+
     // --- the headline partitioner ---
     results.push(bench("windgp/full pipeline", samples, || {
         let ep = WindGP::default().partition(&g, &cluster, 1);

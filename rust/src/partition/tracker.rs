@@ -15,6 +15,96 @@ use crate::machines::Cluster;
 
 use super::{CostReport, EdgePartition, Metrics, PartId, UNASSIGNED};
 
+/// A vertex's replica list S(v) as `(partition, partial degree)` pairs
+/// sorted by partition id. Real vertex-cuts keep RF around 1.2–2, so the
+/// overwhelming majority of vertices satisfy |S(v)| ≤ 2: those live
+/// entirely inline — no heap allocation per vertex — and only hub vertices
+/// replicated on 3+ machines spill to a `Vec`. Once spilled, a set stays
+/// spilled (hubs oscillate around the threshold; demoting would thrash).
+#[derive(Clone, Debug)]
+enum ReplicaSet {
+    Inline { len: u8, buf: [(PartId, u32); 2] },
+    Spill(Vec<(PartId, u32)>),
+}
+
+impl Default for ReplicaSet {
+    fn default() -> Self {
+        ReplicaSet::Inline { len: 0, buf: [(0, 0); 2] }
+    }
+}
+
+impl ReplicaSet {
+    #[inline]
+    fn as_slice(&self) -> &[(PartId, u32)] {
+        match self {
+            ReplicaSet::Inline { len, buf } => &buf[..*len as usize],
+            ReplicaSet::Spill(v) => v,
+        }
+    }
+
+    #[inline]
+    fn as_mut_slice(&mut self) -> &mut [(PartId, u32)] {
+        match self {
+            ReplicaSet::Inline { len, buf } => &mut buf[..*len as usize],
+            ReplicaSet::Spill(v) => v,
+        }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        match self {
+            ReplicaSet::Inline { len, .. } => *len as usize,
+            ReplicaSet::Spill(v) => v.len(),
+        }
+    }
+
+    /// Position of `part`, or the insertion point keeping the list sorted.
+    #[inline]
+    fn search(&self, part: PartId) -> Result<usize, usize> {
+        self.as_slice().binary_search_by_key(&part, |&(q, _)| q)
+    }
+
+    fn insert(&mut self, pos: usize, entry: (PartId, u32)) {
+        match self {
+            ReplicaSet::Inline { len, buf } => {
+                let l = *len as usize;
+                debug_assert!(pos <= l);
+                if l < 2 {
+                    // shift the (at most one) displaced entry right
+                    if pos < l {
+                        buf[pos + 1] = buf[pos];
+                    }
+                    buf[pos] = entry;
+                    *len += 1;
+                } else {
+                    // spill: 3+ replicas — a hub vertex
+                    let mut v = Vec::with_capacity(4);
+                    v.extend_from_slice(buf);
+                    v.insert(pos, entry);
+                    *self = ReplicaSet::Spill(v);
+                }
+            }
+            ReplicaSet::Spill(v) => v.insert(pos, entry),
+        }
+    }
+
+    fn remove(&mut self, pos: usize) {
+        match self {
+            ReplicaSet::Inline { len, buf } => {
+                let l = *len as usize;
+                debug_assert!(pos < l);
+                if pos + 1 < l {
+                    buf[pos] = buf[pos + 1];
+                }
+                *len -= 1;
+            }
+            ReplicaSet::Spill(v) => {
+                v.remove(pos);
+            }
+        }
+    }
+}
+
 /// `Clone` gives cheap snapshot/restore (deep-copies the bookkeeping
 /// vectors, shares the graph/cluster borrows) — the bench suite replays
 /// move batches on a fresh clone per sample so measurements never see
@@ -27,7 +117,7 @@ pub struct CostTracker<'a> {
     /// current assignment (same encoding as EdgePartition)
     pub assignment: Vec<PartId>,
     /// per-vertex replica list: (partition, local degree), sorted by part
-    replicas: Vec<Vec<(PartId, u32)>>,
+    replicas: Vec<ReplicaSet>,
     pub v_count: Vec<u64>,
     pub e_count: Vec<u64>,
     t_com: Vec<f64>,
@@ -48,7 +138,7 @@ impl<'a> CostTracker<'a> {
             cluster,
             p,
             assignment: ep.assignment.clone(),
-            replicas: vec![Vec::new(); n],
+            replicas: vec![ReplicaSet::default(); n],
             v_count: vec![0; p],
             e_count: vec![0; p],
             t_com: vec![0.0; p],
@@ -62,8 +152,8 @@ impl<'a> CostTracker<'a> {
             let (u, v) = g.edge(e as EId);
             for w in [u, v] {
                 let s = &mut t.replicas[w as usize];
-                match s.binary_search_by_key(&a, |&(q, _)| q) {
-                    Ok(pos) => s[pos].1 += 1,
+                match s.search(a) {
+                    Ok(pos) => s.as_mut_slice()[pos].1 += 1,
                     Err(pos) => {
                         s.insert(pos, (a, 1));
                         t.v_count[a as usize] += 1;
@@ -100,13 +190,16 @@ impl<'a> CostTracker<'a> {
     /// and to n_{i,j}. `apply` re-adds.
     fn retract_vertex(&mut self, v: u32) {
         let s = std::mem::take(&mut self.replicas[v as usize]);
-        for &(i, _) in &s {
-            self.t_com[i as usize] -= self.com_term(&s, i);
-        }
-        for (ai, &(i, _)) in s.iter().enumerate() {
-            for &(j, _) in &s[ai + 1..] {
-                self.nij[i as usize * self.p + j as usize] -= 1;
-                self.nij[j as usize * self.p + i as usize] -= 1;
+        {
+            let sl = s.as_slice();
+            for &(i, _) in sl {
+                self.t_com[i as usize] -= self.com_term(sl, i);
+            }
+            for (ai, &(i, _)) in sl.iter().enumerate() {
+                for &(j, _) in &sl[ai + 1..] {
+                    self.nij[i as usize * self.p + j as usize] -= 1;
+                    self.nij[j as usize * self.p + i as usize] -= 1;
+                }
             }
         }
         self.replicas[v as usize] = s;
@@ -114,13 +207,16 @@ impl<'a> CostTracker<'a> {
 
     fn apply_vertex(&mut self, v: u32) {
         let s = std::mem::take(&mut self.replicas[v as usize]);
-        for &(i, _) in &s {
-            self.t_com[i as usize] += self.com_term(&s, i);
-        }
-        for (ai, &(i, _)) in s.iter().enumerate() {
-            for &(j, _) in &s[ai + 1..] {
-                self.nij[i as usize * self.p + j as usize] += 1;
-                self.nij[j as usize * self.p + i as usize] += 1;
+        {
+            let sl = s.as_slice();
+            for &(i, _) in sl {
+                self.t_com[i as usize] += self.com_term(sl, i);
+            }
+            for (ai, &(i, _)) in sl.iter().enumerate() {
+                for &(j, _) in &sl[ai + 1..] {
+                    self.nij[i as usize * self.p + j as usize] += 1;
+                    self.nij[j as usize * self.p + i as usize] += 1;
+                }
             }
         }
         self.replicas[v as usize] = s;
@@ -130,17 +226,16 @@ impl<'a> CostTracker<'a> {
         // Fast path: T_com and n_{i,j} depend only on the *membership set*
         // S(v), not the partial degrees — only pay retract/apply when the
         // set actually changes (insert or drop of a partition).
-        let pos = self.replicas[v as usize].binary_search_by_key(&part, |&(p, _)| p);
-        match pos {
+        match self.replicas[v as usize].search(part) {
             Ok(pos) => {
-                let d = (self.replicas[v as usize][pos].1 as i32 + delta) as u32;
+                let d = (self.replicas[v as usize].as_slice()[pos].1 as i32 + delta) as u32;
                 if d == 0 {
                     self.retract_vertex(v);
                     self.replicas[v as usize].remove(pos);
                     self.v_count[part as usize] -= 1;
                     self.apply_vertex(v);
                 } else {
-                    self.replicas[v as usize][pos].1 = d;
+                    self.replicas[v as usize].as_mut_slice()[pos].1 = d;
                 }
             }
             Err(pos) => {
@@ -239,22 +334,132 @@ impl<'a> CostTracker<'a> {
 
     #[inline]
     pub fn has_vertex(&self, v: u32, part: PartId) -> bool {
-        self.replicas[v as usize]
-            .binary_search_by_key(&part, |&(p, _)| p)
-            .is_ok()
+        self.replicas[v as usize].search(part).is_ok()
     }
 
-    /// Partitions containing vertex `v` (S(v)), sorted.
+    /// Partitions containing vertex `v` (S(v)), sorted. Allocates; the hot
+    /// paths use [`Self::replica_entries`] / [`Self::for_each_part`]
+    /// instead.
     pub fn parts_of(&self, v: u32) -> Vec<PartId> {
-        self.replicas[v as usize].iter().map(|&(p, _)| p).collect()
+        self.replicas[v as usize].as_slice().iter().map(|&(p, _)| p).collect()
+    }
+
+    /// Allocation-free view of S(v): `(partition, partial degree)` pairs
+    /// sorted by partition id — the backing storage itself (inline for
+    /// |S(v)| ≤ 2).
+    #[inline]
+    pub fn replica_entries(&self, v: u32) -> &[(PartId, u32)] {
+        self.replicas[v as usize].as_slice()
+    }
+
+    /// |S(v)| without materializing the partition list.
+    #[inline]
+    pub fn replica_count(&self, v: u32) -> usize {
+        self.replicas[v as usize].len()
+    }
+
+    /// Visit every partition of S(v) in sorted order, allocation-free.
+    #[inline]
+    pub fn for_each_part<F: FnMut(PartId)>(&self, v: u32, mut f: F) {
+        for &(p, _) in self.replicas[v as usize].as_slice() {
+            f(p);
+        }
     }
 
     /// deg_i(v): degree of v inside partition i.
     pub fn part_degree(&self, v: u32, part: PartId) -> u32 {
-        self.replicas[v as usize]
-            .binary_search_by_key(&part, |&(p, _)| p)
-            .map(|pos| self.replicas[v as usize][pos].1)
-            .unwrap_or(0)
+        let s = &self.replicas[v as usize];
+        s.search(part).map(|pos| s.as_slice()[pos].1).unwrap_or(0)
+    }
+
+    /// Append S(u) ∩ S(v) — the machines holding *both* endpoints — to
+    /// `out`, in sorted order. One shared implementation (repair ladder,
+    /// leftover sweep, PowerGraph greedy ladder) so the byte-identity
+    /// contracts all ride the same candidate sequence.
+    pub fn common_parts(&self, u: u32, v: u32, out: &mut Vec<PartId>) {
+        let su = self.replica_entries(u);
+        let sv = self.replica_entries(v);
+        let (mut i, mut j) = (0, 0);
+        while i < su.len() && j < sv.len() {
+            match su[i].0.cmp(&sv[j].0) {
+                std::cmp::Ordering::Equal => {
+                    out.push(su[i].0);
+                    i += 1;
+                    j += 1;
+                }
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+            }
+        }
+    }
+
+    /// Append S(u) ∪ S(v) — the machines holding *either* endpoint — to
+    /// `out`, in sorted order (deduplicated two-pointer merge).
+    pub fn union_parts(&self, u: u32, v: u32, out: &mut Vec<PartId>) {
+        let su = self.replica_entries(u);
+        let sv = self.replica_entries(v);
+        let (mut i, mut j) = (0, 0);
+        while i < su.len() && j < sv.len() {
+            match su[i].0.cmp(&sv[j].0) {
+                std::cmp::Ordering::Equal => {
+                    out.push(su[i].0);
+                    i += 1;
+                    j += 1;
+                }
+                std::cmp::Ordering::Less => {
+                    out.push(su[i].0);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(sv[j].0);
+                    j += 1;
+                }
+            }
+        }
+        out.extend(su[i..].iter().map(|&(p, _)| p));
+        out.extend(sv[j..].iter().map(|&(p, _)| p));
+    }
+
+    /// Algorithm 6 comparator: the memory-feasible machine from `cands`
+    /// with the lowest total cost T_i strictly below `thd`; ties break to
+    /// the earliest candidate (for sorted `cands`, the lowest index).
+    /// `None` when no candidate qualifies — the paper's `i = 0` failure
+    /// signal. Shared by the SLS repair ladder and the expansion
+    /// leftover sweep so every greedy placement uses one comparator.
+    pub fn best_feasible_min_t(&self, e: EId, cands: &[PartId], thd: f64) -> Option<PartId> {
+        let mut best: Option<(PartId, f64)> = None;
+        for &i in cands {
+            let newv = self.new_endpoints(e, i);
+            if !self.edge_fits(i as usize, newv) {
+                continue;
+            }
+            let ti = self.t(i as usize);
+            if ti >= thd {
+                continue;
+            }
+            if best.map_or(true, |(_, bt)| ti < bt) {
+                best = Some((i, ti));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// The machine with the greatest memory headroom; ties break to the
+    /// lowest index. This is the deterministic "nothing fits" fallback
+    /// shared by [`Self::best_feasible_min_t`] callers (repair ladder,
+    /// re-partition leftovers, leftover sweep) — documented tie-break so
+    /// placements stay reproducible across refactors.
+    pub fn max_slack_part(&self) -> PartId {
+        let mut best = 0usize;
+        let mut best_slack = self.mem_slack(0);
+        for i in 1..self.p {
+            let s = self.mem_slack(i);
+            if s > best_slack {
+                best = i;
+                best_slack = s;
+            }
+        }
+        best as PartId
     }
 
     #[inline]
@@ -414,5 +619,112 @@ mod tests {
         t.move_edge(0, 0); // move back
         assert!((t.tc() - before).abs() < 1e-9);
         check_consistency(&g, &cluster, &t);
+    }
+
+    #[test]
+    fn replica_set_inline_and_spill() {
+        // exercise the inline small-vector representation directly:
+        // insert in non-sorted order, spill past 2 entries, remove back
+        let mut s = ReplicaSet::default();
+        assert_eq!(s.len(), 0);
+        let pos = s.search(5).unwrap_err();
+        s.insert(pos, (5, 1));
+        let pos = s.search(2).unwrap_err();
+        s.insert(pos, (2, 7)); // inserts before 5, shifting it right
+        assert_eq!(s.as_slice(), &[(2, 7), (5, 1)]);
+        assert!(matches!(s, ReplicaSet::Inline { .. }));
+        let pos = s.search(3).unwrap_err();
+        s.insert(pos, (3, 4)); // third entry spills to the heap
+        assert_eq!(s.as_slice(), &[(2, 7), (3, 4), (5, 1)]);
+        assert!(matches!(s, ReplicaSet::Spill(_)));
+        s.as_mut_slice()[1].1 = 9;
+        assert_eq!(s.search(3), Ok(1));
+        s.remove(1);
+        s.remove(0);
+        assert_eq!(s.as_slice(), &[(5, 1)]);
+    }
+
+    #[test]
+    fn inline_remove_shifts_survivor_left() {
+        let mut s = ReplicaSet::default();
+        s.insert(0, (1, 3));
+        s.insert(1, (4, 2));
+        s.remove(0);
+        assert_eq!(s.as_slice(), &[(4, 2)]);
+        s.remove(0);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn no_alloc_accessors_agree_with_parts_of() {
+        let g = gen::star(6); // center 0 replicated across machines
+        let cluster = Cluster::new(vec![Machine::new(1000, 0.0, 1.0, 1.0); 3]);
+        let ep = EdgePartition::from_assignment(3, vec![0, 0, 1, 1, 2]);
+        let t = CostTracker::new(&g, &cluster, &ep);
+        for v in 0..g.num_vertices() as u32 {
+            let alloc = t.parts_of(v);
+            let slice: Vec<PartId> =
+                t.replica_entries(v).iter().map(|&(p, _)| p).collect();
+            let mut visited = Vec::new();
+            t.for_each_part(v, |p| visited.push(p));
+            assert_eq!(alloc, slice, "replica_entries diverged at {v}");
+            assert_eq!(alloc, visited, "for_each_part diverged at {v}");
+            assert_eq!(alloc.len(), t.replica_count(v));
+        }
+        assert_eq!(t.replica_count(0), 3, "center sits on all three machines");
+    }
+
+    #[test]
+    fn common_and_union_parts_match_set_semantics() {
+        let g = gen::star(6); // center 0, leaves 1..=5, edges sorted by leaf
+        let cluster = Cluster::new(vec![Machine::new(1000, 0.0, 1.0, 1.0); 4]);
+        // center lands on {0,1,2,3}; leaf i owns exactly its edge's machine
+        let ep = EdgePartition::from_assignment(4, vec![0, 1, 2, 3, 2]);
+        let t = CostTracker::new(&g, &cluster, &ep);
+        let collect = |f: &dyn Fn(&mut Vec<PartId>)| {
+            let mut out = Vec::new();
+            f(&mut out);
+            out
+        };
+        // center (S = {0,1,2,3}) vs leaf 2 (S = {1})
+        assert_eq!(collect(&|o| t.common_parts(0, 2, o)), vec![1]);
+        assert_eq!(collect(&|o| t.union_parts(0, 2, o)), vec![0, 1, 2, 3]);
+        // two disjoint leaves: empty intersection, sorted union
+        assert_eq!(collect(&|o| t.common_parts(1, 4, o)), Vec::<PartId>::new());
+        assert_eq!(collect(&|o| t.union_parts(1, 4, o)), vec![0, 3]);
+        // shared machine between leaves 3 and 5 (both on machine 2)
+        assert_eq!(collect(&|o| t.common_parts(3, 5, o)), vec![2]);
+        assert_eq!(collect(&|o| t.union_parts(3, 5, o)), vec![2]);
+    }
+
+    #[test]
+    fn max_slack_part_breaks_ties_to_lowest_index() {
+        let g = gen::path(3);
+        // machines 1 and 2 tie on slack; 0 is strictly tighter
+        let cluster = Cluster::new(vec![
+            Machine::new(5, 0.0, 1.0, 1.0),
+            Machine::new(9, 0.0, 1.0, 1.0),
+            Machine::new(9, 0.0, 1.0, 1.0),
+        ]);
+        let ep = EdgePartition::unassigned(&g, 3);
+        let t = CostTracker::new(&g, &cluster, &ep);
+        assert_eq!(t.max_slack_part(), 1, "tie must resolve to the lowest index");
+    }
+
+    #[test]
+    fn best_feasible_min_t_matches_documented_comparator() {
+        let g = gen::clique(4); // 6 edges
+        let cluster = Cluster::new(vec![
+            Machine::new(1000, 0.0, 2.0, 1.0),
+            Machine::new(1000, 0.0, 1.0, 1.0),
+            Machine::new(0, 0.0, 0.5, 1.0), // infeasible: zero memory
+        ]);
+        let ep = EdgePartition::from_assignment(3, vec![0, 0, 1, UNASSIGNED, UNASSIGNED, UNASSIGNED]);
+        let t = CostTracker::new(&g, &cluster, &ep);
+        let cands: Vec<PartId> = vec![0, 1, 2];
+        // T_0 = 4, T_1 = 1 (+ com terms, symmetric); 2 never fits
+        assert_eq!(t.best_feasible_min_t(3, &cands, f64::INFINITY), Some(1));
+        // threshold below every T_i -> the paper's failure signal
+        assert_eq!(t.best_feasible_min_t(3, &cands, f64::NEG_INFINITY), None);
     }
 }

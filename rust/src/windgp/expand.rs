@@ -14,10 +14,18 @@
 //! With α = β = 0 the priority degenerates to `|N(v)\S|` — exactly NE's
 //! rule [62] — so the NE baseline and the Figure-8 "WindGP*" ablation
 //! reuse this engine.
+//!
+//! Adjacency walks run over a [`WorkingGraph`] — an epoch-compacted
+//! mutable CSR whose per-vertex live windows shrink as edges are claimed
+//! (see `graph::working`). Compaction is stable, so the engine's output is
+//! byte-identical at every [`CompactPolicy`], including `Never` (the
+//! original full-static-CSR scans), as pinned by
+//! `rust/tests/differential.rs`.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use crate::graph::working::{CompactPolicy, WorkingGraph};
 use crate::graph::{EId, Graph, VId};
 use crate::machines::Cluster;
 use crate::partition::{EdgePartition, PartId, UNASSIGNED};
@@ -71,9 +79,16 @@ impl Ord for Entry {
 pub struct Expander<'a> {
     g: &'a Graph,
     cluster: &'a Cluster,
+    /// epoch-compacted working graph: adjacency walks proportional to the
+    /// remaining (unassigned) degree instead of the full static degree
+    wg: WorkingGraph,
     /// globally assigned edges (across all partitions built so far)
     pub assigned: Vec<bool>,
-    /// remaining (unassigned-edge) degree per vertex
+    /// remaining (unassigned-edge) degree per vertex. Deliberately a
+    /// single-load hot-path cache of `wg.remaining_degree(v)` — score()
+    /// reads it on every heap push and fresh_vertex() probes it linearly;
+    /// claim() keeps the two in sync (invariant pinned by the
+    /// rdeg_matches_working_graph_remaining_degree test).
     pub rdeg: Vec<u32>,
     /// global border set B
     pub border: Vec<bool>,
@@ -94,9 +109,18 @@ pub struct Expander<'a> {
 
 impl<'a> Expander<'a> {
     pub fn new(g: &'a Graph, cluster: &'a Cluster, seed: u64) -> Self {
+        Self::new_with_policy(g, cluster, seed, CompactPolicy::default())
+    }
+
+    pub fn new_with_policy(
+        g: &'a Graph,
+        cluster: &'a Cluster,
+        seed: u64,
+        policy: CompactPolicy,
+    ) -> Self {
         let assigned = vec![false; g.num_edges()];
         let border = vec![false; g.num_vertices()];
-        Self::with_state(g, cluster, assigned, border, seed)
+        Self::with_state_policy(g, cluster, assigned, border, seed, policy)
     }
 
     /// Resume from existing assignment state (used by SLS re-partition).
@@ -107,20 +131,34 @@ impl<'a> Expander<'a> {
         border: Vec<bool>,
         seed: u64,
     ) -> Self {
+        Self::with_state_policy(g, cluster, assigned, border, seed, CompactPolicy::default())
+    }
+
+    /// [`Self::with_state`] with an explicit compaction policy. The
+    /// working-graph construction doubles as the `rdeg` rebuild: one
+    /// linear CSR pass drops assigned slots, and each vertex's live window
+    /// length *is* its remaining degree.
+    pub fn with_state_policy(
+        g: &'a Graph,
+        cluster: &'a Cluster,
+        assigned: Vec<bool>,
+        border: Vec<bool>,
+        seed: u64,
+        policy: CompactPolicy,
+    ) -> Self {
         let n = g.num_vertices();
-        let mut rdeg = vec![0u32; n];
-        for u in 0..n as VId {
-            let mut d = 0;
-            for &e in g.incident_edges(u) {
-                if !assigned[e as usize] {
-                    d += 1;
-                }
-            }
-            rdeg[u as usize] = d;
-        }
+        // fresh start (the common case): straight CSR memcpy instead of
+        // the slot-by-slot filtered copy the SLS resume path needs
+        let wg = if assigned.iter().any(|&a| a) {
+            WorkingGraph::from_assigned(g, &assigned, policy)
+        } else {
+            WorkingGraph::new(g, policy)
+        };
+        let rdeg: Vec<u32> = (0..n as VId).map(|v| wg.remaining_degree(v)).collect();
         Self {
             g,
             cluster,
+            wg,
             assigned,
             rdeg,
             border,
@@ -135,6 +173,12 @@ impl<'a> Expander<'a> {
             heap: BinaryHeap::new(),
             boundary_size: 0,
         }
+    }
+
+    /// Read access to the working graph (compaction telemetry for tests
+    /// and benches).
+    pub fn working(&self) -> &WorkingGraph {
+        &self.wg
     }
 
     #[inline]
@@ -157,18 +201,18 @@ impl<'a> Expander<'a> {
         self.touched.push(y);
         self.boundary_size += 1;
         let mut ext = 0u32;
-        // single adjacency pass: count non-S unassigned neighbors of y and
-        // notify in-S neighbors that y moved into S
-        let (start, end) = (
-            self.g.offsets[y as usize] as usize,
-            self.g.offsets[y as usize + 1] as usize,
-        );
+        // single working-graph pass: count non-S unassigned neighbors of y
+        // and notify in-S neighbors that y moved into S. Compacting first
+        // is safe (no scan of y's window is in flight) and keeps this walk
+        // O(remaining degree) instead of O(static degree).
+        self.wg.compact_if_due(y, &self.assigned);
+        let (start, end) = self.wg.live_range(y);
         for idx in start..end {
-            let e = self.g.incident[idx];
+            let e = self.wg.incident_at(idx);
             if self.assigned[e as usize] {
                 continue;
             }
-            let z = self.g.neighbors[idx];
+            let z = self.wg.neighbor_at(idx);
             if self.in_s[z as usize] {
                 if !self.in_core[z as usize] {
                     self.ext[z as usize] -= 1;
@@ -203,31 +247,31 @@ impl<'a> Expander<'a> {
             self.in_core[x as usize] = true;
             self.boundary_size -= 1;
         }
-        let (start, end) = (
-            self.g.offsets[x as usize] as usize,
-            self.g.offsets[x as usize + 1] as usize,
-        );
+        // compaction happens only at scan boundaries: here (before the
+        // outer walk of x) and inside add_to_s (before y's walk). Claims
+        // made mid-scan just flag dead slots; the in-flight windows are
+        // never rewritten under an active iteration.
+        self.wg.compact_if_due(x, &self.assigned);
+        let (start, end) = self.wg.live_range(x);
         for idx in start..end {
-            let e = self.g.incident[idx];
+            let e = self.wg.incident_at(idx);
             if self.assigned[e as usize] {
                 continue;
             }
-            let y = self.g.neighbors[idx];
+            let y = self.wg.neighbor_at(idx);
             if self.in_s[y as usize] {
                 continue;
             }
             self.add_to_s(y, p);
-            // claim all unassigned edges between y and S (includes x̄y)
-            let (ys, ye) = (
-                self.g.offsets[y as usize] as usize,
-                self.g.offsets[y as usize + 1] as usize,
-            );
+            // claim all unassigned edges between y and S (includes x̄y);
+            // re-read y's window bounds — add_to_s may have compacted it
+            let (ys, ye) = self.wg.live_range(y);
             for yidx in ys..ye {
-                let e2 = self.g.incident[yidx];
+                let e2 = self.wg.incident_at(yidx);
                 if self.assigned[e2 as usize] {
                     continue;
                 }
-                let z = self.g.neighbors[yidx];
+                let z = self.wg.neighbor_at(yidx);
                 if !self.in_s[z as usize] {
                     continue;
                 }
@@ -260,6 +304,8 @@ impl<'a> Expander<'a> {
         }
         *mem_used += need;
         self.assigned[e as usize] = true;
+        self.wg.note_assigned(y);
+        self.wg.note_assigned(z);
         e_list.push(e);
         self.rdeg[y as usize] -= 1;
         self.rdeg[z as usize] -= 1;
@@ -397,44 +443,48 @@ impl<'a> Expander<'a> {
     /// Assign any still-unassigned edges (capacity rounding / memory
     /// cut-offs) greedily to machines with slack, preferring endpoint
     /// owners — keeps Definition 3's completeness invariant.
+    ///
+    /// Cost shape: one O(m) scan locates the first unassigned edge (its
+    /// result is hoisted — when the partition is already complete the
+    /// [`CostTracker`] is never built), then each leftover edge probes its
+    /// endpoint-owner partitions (|S(u)| + |S(v)| candidates) before
+    /// falling back to the full O(p) scan. Placement uses the same
+    /// min-T_i comparator as the SLS repair ladder
+    /// ([`CostTracker::best_feasible_min_t`]); the terminal "nothing
+    /// fits" arm is [`CostTracker::max_slack_part`], whose lowest-index
+    /// tie-break keeps the sweep deterministic.
     pub fn sweep_leftovers(&mut self, ep: &mut EdgePartition, order: &mut [Vec<EId>]) {
         use crate::partition::CostTracker;
-        if ep.assignment.iter().all(|&a| a != UNASSIGNED) {
+        let Some(first) = ep.assignment.iter().position(|&a| a == UNASSIGNED) else {
             return;
-        }
+        };
         let mut t = CostTracker::new(self.g, self.cluster, ep);
         let m = self.g.num_edges();
-        for e in 0..m as EId {
+        let all: Vec<PartId> = (0..t.p as PartId).collect();
+        let mut probe: Vec<PartId> = Vec::with_capacity(t.p);
+        for e in first as EId..m as EId {
             if t.assignment[e as usize] != UNASSIGNED {
                 continue;
             }
             let (u, v) = self.g.edge(e);
-            let mut best: Option<(u32, f64, u64)> = None; // (part, t, rank)
-            for i in 0..t.p {
-                let newv = t.new_endpoints(e, i as PartId);
-                if !t.edge_fits(i, newv) {
-                    continue;
-                }
-                // rank: prefer partitions already holding both endpoints,
-                // then one, then none; break ties by lowest current load
-                let holds = (t.has_vertex(u, i as PartId) as u64)
-                    + (t.has_vertex(v, i as PartId) as u64);
-                let rank = 2 - holds;
-                let ti = t.t(i);
-                let better = match best {
-                    None => true,
-                    Some((_, bt, br)) => rank < br || (rank == br && ti < bt),
-                };
-                if better {
-                    best = Some((i as u32, ti, rank));
-                }
+            // rung 1: partitions holding both endpoints (sorted merge of
+            // the two replica lists keeps the lowest-index tie-break)
+            probe.clear();
+            t.common_parts(u, v, &mut probe);
+            let mut part = t.best_feasible_min_t(e, &probe, f64::INFINITY);
+            if part.is_none() {
+                // rung 2: partitions holding at least one endpoint (any
+                // both-holder in here already failed rung 1 on memory)
+                probe.clear();
+                t.union_parts(u, v, &mut probe);
+                part = t.best_feasible_min_t(e, &probe, f64::INFINITY);
             }
-            // fall back to the machine with max slack even if tight
-            let part = best.map(|(i, _, _)| i).unwrap_or_else(|| {
-                (0..t.p)
-                    .max_by_key(|&i| t.mem_slack(i))
-                    .unwrap() as u32
-            });
+            if part.is_none() {
+                // rung 3: anywhere feasible — the original O(p) scan
+                part = t.best_feasible_min_t(e, &all, f64::INFINITY);
+            }
+            // terminal arm: nothing fits anywhere, place on max slack
+            let part = part.unwrap_or_else(|| t.max_slack_part());
             t.add_edge(e, part);
             order[part as usize].push(e);
         }
@@ -648,6 +698,83 @@ mod tests {
         assert!(ep.is_complete());
         let total: usize = order.iter().map(|o| o.len()).sum();
         assert_eq!(total, g.num_edges());
+    }
+
+    #[test]
+    fn compaction_policies_agree_and_halving_actually_compacts() {
+        // the same expansion at Never / Always / Halving must claim the
+        // same edges in the same order (stable compaction), and the
+        // default halving policy must actually fire on a multi-partition
+        // run where earlier claims go stale in later windows
+        let g = crate::graph::rmat::generate(&crate::graph::rmat::RmatParams::graph500(9, 8), 6);
+        let cluster = big_mem_cluster(4);
+        let m = g.num_edges() as u64;
+        let run = |policy: crate::graph::CompactPolicy| {
+            let mut ex = Expander::new_with_policy(&g, &cluster, 3, policy);
+            let mut lists = Vec::new();
+            for i in 0..4u32 {
+                let d = if i == 3 { m } else { m / 4 };
+                lists.push(ex.expand_partition(i, d, &ExpandParams { alpha: 0.3, beta: 0.3 }));
+            }
+            (lists, ex.working().compactions())
+        };
+        use crate::graph::CompactPolicy::{Always, Halving, Never};
+        let (ref_lists, ref_compactions) = run(Never);
+        assert_eq!(ref_compactions, 0);
+        for policy in [Always, Halving] {
+            let (lists, compactions) = run(policy);
+            assert_eq!(lists, ref_lists, "{policy:?} diverged from the uncompacted path");
+            assert!(compactions > 0, "{policy:?} never fired on a 4-partition run");
+        }
+    }
+
+    #[test]
+    fn rdeg_matches_working_graph_remaining_degree() {
+        let g = gen::erdos_renyi(150, 700, 4);
+        let cluster = big_mem_cluster(3);
+        let mut ex = Expander::new(&g, &cluster, 2);
+        for i in 0..3u32 {
+            ex.expand_partition(i, 150, &ExpandParams::ne());
+            for v in 0..g.num_vertices() as VId {
+                assert_eq!(
+                    ex.rdeg[v as usize],
+                    ex.working().remaining_degree(v),
+                    "rdeg and live-window bookkeeping diverged at vertex {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_fallback_breaks_slack_ties_to_lowest_index() {
+        // zero-memory machines: nothing ever fits, so every edge takes the
+        // documented max-slack fallback; ties must resolve to the lowest
+        // index deterministically
+        let g = gen::path(3); // edges (0,1), (1,2)
+        let cluster = Cluster::new(vec![Machine::new(0, 1.0, 1.0, 1.0); 3]);
+        let mut ex = Expander::new(&g, &cluster, 1);
+        let mut ep = EdgePartition::unassigned(&g, 3);
+        let mut order = vec![Vec::new(); 3];
+        ex.sweep_leftovers(&mut ep, &mut order);
+        assert!(ep.is_complete());
+        // edge 0 -> all slacks tie at 0 -> machine 0; edge 1 -> machine 0
+        // is now negative, 1 and 2 tie at 0 -> machine 1
+        assert_eq!(ep.assignment, vec![0, 1]);
+    }
+
+    #[test]
+    fn sweep_skips_tracker_when_already_complete() {
+        // completeness short-circuit: a complete partition passes through
+        // untouched (and order lists stay as-is)
+        let g = gen::erdos_renyi(50, 200, 8);
+        let cluster = big_mem_cluster(2);
+        let mut ex = Expander::new(&g, &cluster, 1);
+        let assignment: Vec<PartId> = (0..g.num_edges()).map(|e| (e % 2) as PartId).collect();
+        let mut ep = EdgePartition::from_assignment(2, assignment.clone());
+        let mut order = vec![Vec::new(); 2];
+        ex.sweep_leftovers(&mut ep, &mut order);
+        assert_eq!(ep.assignment, assignment);
+        assert!(order.iter().all(|o| o.is_empty()));
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod expand;
 pub mod sls;
 pub mod vertex_centric;
 
-use crate::graph::Graph;
+use crate::graph::{CompactPolicy, Graph};
 use crate::machines::Cluster;
 use crate::partition::{EdgePartition, Partitioner};
 
@@ -54,6 +54,10 @@ pub struct WindGPConfig {
     pub t0: usize,
     pub k: usize,
     pub variant: Variant,
+    /// working-graph compaction policy for every expansion in the
+    /// pipeline (performance knob only — output is byte-identical across
+    /// policies, see `graph::working`)
+    pub compact: CompactPolicy,
 }
 
 impl Default for WindGPConfig {
@@ -67,6 +71,7 @@ impl Default for WindGPConfig {
             t0: 30,
             k: 3,
             variant: Variant::Full,
+            compact: CompactPolicy::default(),
         }
     }
 }
@@ -123,7 +128,7 @@ impl Partitioner for WindGP {
             Variant::Naive | Variant::Capacity => ExpandParams::ne(),
             _ => ExpandParams { alpha: cfg.alpha, beta: cfg.beta },
         };
-        let mut ex = Expander::new(g, cluster, seed);
+        let mut ex = Expander::new_with_policy(g, cluster, seed, cfg.compact);
         let mut ep = EdgePartition::unassigned(g, p);
         let mut order: Vec<Vec<u32>> = Vec::with_capacity(p);
         for i in 0..p {
@@ -148,6 +153,7 @@ impl Partitioner for WindGP {
                 alpha: cfg.alpha,
                 beta: cfg.beta,
                 objective: crate::windgp::sls::Objective::MaxTotal,
+                compact: cfg.compact,
             };
             let mut sls = SubgraphLocalSearch::new(g, cluster, ep, order, deltas.clone(), seed);
             sls.run(&slsp);

@@ -16,7 +16,7 @@
 //! The main loop (Algorithm 4) runs `T0` global tries and keeps the best
 //! assignment seen, so SLS never returns something worse than its input.
 
-use crate::graph::{EId, Graph};
+use crate::graph::{CompactPolicy, EId, Graph};
 use crate::machines::Cluster;
 use crate::partition::{CostTracker, EdgePartition, PartId, UNASSIGNED};
 use crate::util::SplitMix64;
@@ -52,14 +52,30 @@ pub struct SlsParams {
     pub beta: f64,
     /// the cost the search minimizes
     pub objective: Objective,
+    /// working-graph compaction policy for re-partition expansions
+    pub compact: CompactPolicy,
 }
 
 impl Default for SlsParams {
     fn default() -> Self {
-        Self { gamma: 0.7, theta: 0.02, n0: 5, t0: 30, k: 3, alpha: 0.3, beta: 0.3, objective: Objective::default() }
+        Self {
+            gamma: 0.7,
+            theta: 0.02,
+            n0: 5,
+            t0: 30,
+            k: 3,
+            alpha: 0.3,
+            beta: 0.3,
+            objective: Objective::default(),
+            compact: CompactPolicy::default(),
+        }
     }
 }
 
+/// `Clone` deep-copies the bookkeeping (tracker, orders, scratch) while
+/// sharing the graph/cluster borrows — the bench suite runs each sample on
+/// a fresh clone so destroy/repair never measures drifted state.
+#[derive(Clone)]
 pub struct SubgraphLocalSearch<'a> {
     g: &'a Graph,
     objective: Objective,
@@ -76,6 +92,14 @@ pub struct SubgraphLocalSearch<'a> {
     /// Algorithm-7 re-partitions executed so far (telemetry + the N0
     /// trigger regression test).
     pub repartitions: usize,
+    /// all partition ids 0..p, built once — the repair ladder's last rungs
+    /// and the re-partition leftover pass share it instead of collecting a
+    /// fresh Vec
+    all_parts: Vec<PartId>,
+    // ---- reusable repair-ladder scratch (no per-edge allocations) ----
+    scratch_removed: Vec<EId>,
+    scratch_both: Vec<PartId>,
+    scratch_either: Vec<PartId>,
 }
 
 impl<'a> SubgraphLocalSearch<'a> {
@@ -91,6 +115,7 @@ impl<'a> SubgraphLocalSearch<'a> {
         let best_tc = tracker.tc();
         let best_feasible = (0..tracker.p).all(|i| tracker.mem_slack(i) >= 0);
         let best_assignment = tracker.assignment.clone();
+        let all_parts: Vec<PartId> = (0..tracker.p as PartId).collect();
         Self {
             g,
             objective: Objective::default(),
@@ -103,6 +128,10 @@ impl<'a> SubgraphLocalSearch<'a> {
             best_tc,
             best_feasible,
             repartitions: 0,
+            all_parts,
+            scratch_removed: Vec::new(),
+            scratch_both: Vec::new(),
+            scratch_either: Vec::new(),
         }
     }
 
@@ -151,22 +180,29 @@ impl<'a> SubgraphLocalSearch<'a> {
     }
 
     /// Algorithm 5. Returns true when TC improved.
+    ///
+    /// The repair ladder is allocation-free per edge: the `both` / `either`
+    /// candidate lists live in reusable scratch buffers, the `all` rung
+    /// uses the precomputed id list, and candidate sets are built straight
+    /// off the tracker's inline replica storage
+    /// ([`CostTracker::replica_entries`]) — no `Vec` is constructed inside
+    /// the per-edge loop.
     pub fn destroy_repair(&mut self, p: &SlsParams) -> bool {
         let before = self.cost();
         let objective = self.objective;
-        let t = &mut self.tracker;
-        let np = t.p;
-        let tmin = (0..np).map(|i| t.t(i)).fold(f64::INFINITY, f64::min);
-        let tmax = (0..np).map(|i| t.t(i)).fold(0.0f64, f64::max);
+        let np = self.tracker.p;
+        let tmin = (0..np).map(|i| self.tracker.t(i)).fold(f64::INFINITY, f64::min);
+        let tmax = (0..np).map(|i| self.tracker.t(i)).fold(0.0f64, f64::max);
         if !(tmax > tmin) {
             return false;
         }
         let thd = tmin + p.gamma * (tmax - tmin);
 
         // destroy: LIFO removal of a θ-fraction from each hot machine
-        let mut removed: Vec<EId> = Vec::new();
+        let mut removed = std::mem::take(&mut self.scratch_removed);
+        removed.clear();
         for i in 0..np {
-            if t.t(i) < thd {
+            if self.tracker.t(i) < thd {
                 continue;
             }
             let quota = ((self.order[i].len() as f64 * p.theta).ceil() as usize).max(1);
@@ -178,75 +214,62 @@ impl<'a> SubgraphLocalSearch<'a> {
                 };
                 // order lists can contain stale ids after re-partition;
                 // skip edges no longer owned by machine i
-                if t.assignment[e as usize] != i as PartId {
+                if self.tracker.assignment[e as usize] != i as PartId {
                     continue;
                 }
-                t.remove_edge(e);
+                self.tracker.remove_edge(e);
                 removed.push(e);
                 taken += 1;
             }
         }
         if removed.is_empty() {
+            self.scratch_removed = removed;
             return false;
         }
 
-        // repair: greedy balanced re-placement (Algorithm 6 ladder).
-        // A rung "fails" (returns None, the paper's i = 0) when no
-        // candidate is both memory-feasible and *below the destroy
-        // threshold* — otherwise LIFO edges, whose endpoints live on the
-        // hot machine, would be handed straight back to it.
+        // repair: greedy balanced re-placement (Algorithm 6 ladder via
+        // CostTracker::best_feasible_min_t). A rung "fails" (returns None,
+        // the paper's i = 0) when no candidate is both memory-feasible and
+        // *below the destroy threshold* — otherwise LIFO edges, whose
+        // endpoints live on the hot machine, would be handed straight back
+        // to it.
         for &e in &removed {
             let (u, v) = self.g.edge(e);
-            let su = t.parts_of(u);
-            let sv = t.parts_of(v);
-            let both: Vec<PartId> = su.iter().copied().filter(|x| sv.contains(x)).collect();
-            let either: Vec<PartId> = {
-                let mut m = su.clone();
-                for &x in &sv {
-                    if !m.contains(&x) {
-                        m.push(x);
+            // candidate rungs, rebuilt in scratch. `both` = S(u) ∩ S(v)
+            // via the shared sorted merge; `either` is S(u) followed by
+            // S(v) \ S(u) — identical candidate order to the historical
+            // Vec-building code, so repair decisions are unchanged
+            self.scratch_both.clear();
+            self.scratch_either.clear();
+            self.tracker.common_parts(u, v, &mut self.scratch_both);
+            {
+                let su = self.tracker.replica_entries(u);
+                let sv = self.tracker.replica_entries(v);
+                self.scratch_either.extend(su.iter().map(|&(q, _)| q));
+                for &(pv, _) in sv {
+                    if su.binary_search_by_key(&pv, |&(q, _)| q).is_err() {
+                        self.scratch_either.push(pv);
                     }
                 }
-                m
-            };
-            let all: Vec<PartId> = (0..np as PartId).collect();
-            let target = Self::balanced_greedy(t, e, &both, thd)
-                .or_else(|| Self::balanced_greedy(t, e, &either, thd))
-                .or_else(|| Self::balanced_greedy(t, e, &all, thd))
-                .or_else(|| Self::balanced_greedy(t, e, &all, f64::INFINITY))
-                .unwrap_or_else(|| {
-                    // nothing fits: put it back on the machine with max slack
-                    (0..np).max_by_key(|&i| t.mem_slack(i)).unwrap() as PartId
-                });
-            t.add_edge(e, target);
+            }
+            let t = &self.tracker;
+            let target = t
+                .best_feasible_min_t(e, &self.scratch_both, thd)
+                .or_else(|| t.best_feasible_min_t(e, &self.scratch_either, thd))
+                .or_else(|| t.best_feasible_min_t(e, &self.all_parts, thd))
+                .or_else(|| t.best_feasible_min_t(e, &self.all_parts, f64::INFINITY))
+                // nothing fits: put it back on the machine with max slack
+                // (lowest index on ties — documented in CostTracker)
+                .unwrap_or_else(|| t.max_slack_part());
+            self.tracker.add_edge(e, target);
             self.order[target as usize].push(e);
         }
+        self.scratch_removed = removed;
         let after = match objective {
-            Objective::MaxTotal => t.tc(),
-            Objective::MapReduce => t.map_reduce_cost(),
+            Objective::MaxTotal => self.tracker.tc(),
+            Objective::MapReduce => self.tracker.map_reduce_cost(),
         };
         after < before - 1e-12
-    }
-
-    /// Algorithm 6: feasible machine from `cands` with the lowest total
-    /// cost T_i strictly below `thd`. None when no candidate qualifies
-    /// (the paper's i = 0 failure signal).
-    fn balanced_greedy(t: &CostTracker, e: EId, cands: &[PartId], thd: f64) -> Option<PartId> {
-        let mut best: Option<(PartId, f64)> = None;
-        for &i in cands {
-            let newv = t.new_endpoints(e, i);
-            if !t.edge_fits(i as usize, newv) {
-                continue;
-            }
-            let ti = t.t(i as usize);
-            if ti >= thd {
-                continue;
-            }
-            if best.map_or(true, |(_, bt)| ti < bt) {
-                best = Some((i, ti));
-            }
-        }
-        best.map(|(i, _)| i)
     }
 
     /// Algorithm 7: free the worst machine + its k−1 strongest replica
@@ -257,8 +280,11 @@ impl<'a> SubgraphLocalSearch<'a> {
             return;
         }
         self.repartitions += 1;
+        // total_cmp: user-supplied c_com/c_node can make a machine's T_i
+        // NaN, and the old partial_cmp().unwrap() panicked on the first
+        // comparison against it (same hardening expand.rs's heap got)
         let worst = (0..np)
-            .max_by(|&a, &b| self.tracker.t(a).partial_cmp(&self.tracker.t(b)).unwrap())
+            .max_by(|&a, &b| self.tracker.t(a).total_cmp(&self.tracker.t(b)))
             .unwrap();
         let mut partners: Vec<usize> = (0..np).filter(|&j| j != worst).collect();
         partners.sort_by_key(|&j| std::cmp::Reverse(self.tracker.nij(worst, j)));
@@ -286,12 +312,13 @@ impl<'a> SubgraphLocalSearch<'a> {
             .collect();
         let mut border = vec![false; self.g.num_vertices()];
         for v in 0..self.g.num_vertices() as u32 {
-            if self.tracker.parts_of(v).len() > 1 {
+            if self.tracker.replica_count(v) > 1 {
                 border[v as usize] = true;
             }
         }
         let seed = self.rng.next_u64();
-        let mut ex = Expander::with_state(self.g, self.cluster, assigned, border, seed);
+        let mut ex =
+            Expander::with_state_policy(self.g, self.cluster, assigned, border, seed, p.compact);
         let params = ExpandParams { alpha: p.alpha, beta: p.beta };
         for &i in &selected {
             let edges = ex.expand_partition(i as PartId, self.deltas[i], &params);
@@ -303,11 +330,10 @@ impl<'a> SubgraphLocalSearch<'a> {
         // leftovers (memory cut-offs during re-expansion) go greedy
         for e in 0..self.g.num_edges() as EId {
             if self.tracker.assignment[e as usize] == UNASSIGNED {
-                let all: Vec<PartId> = (0..np as PartId).collect();
-                let target = Self::balanced_greedy(&self.tracker, e, &all, f64::INFINITY)
-                    .unwrap_or_else(|| {
-                        (0..np).max_by_key(|&i| self.tracker.mem_slack(i)).unwrap() as PartId
-                    });
+                let target = self
+                    .tracker
+                    .best_feasible_min_t(e, &self.all_parts, f64::INFINITY)
+                    .unwrap_or_else(|| self.tracker.max_slack_part());
                 self.tracker.add_edge(e, target);
                 self.order[target as usize].push(e);
             }
@@ -424,6 +450,50 @@ mod tests {
         sls.repartition(&SlsParams::default());
         let ep2 = sls.into_partition();
         assert!(ep2.is_complete());
+    }
+
+    #[test]
+    fn repartition_survives_nan_machine_costs() {
+        // a NaN c_com poisons every T_i; worst-machine selection must not
+        // panic (the old partial_cmp().unwrap() did on the first NaN
+        // comparison) and the search must still return a complete result
+        let g = gen::erdos_renyi(80, 300, 3);
+        let mut machines = vec![Machine::new(1_000_000, 1.0, 2.0, 1.0); 3];
+        machines[1] = Machine::new(1_000_000, 1.0, 2.0, f64::NAN);
+        let c = Cluster::new(machines);
+        let (ep, order) = skewed_start(&g, 3);
+        let deltas = vec![(g.num_edges() / 3 + 1) as u64; 3];
+        let mut sls = SubgraphLocalSearch::new(&g, &c, ep, order, deltas, 5);
+        sls.repartition(&SlsParams::default());
+        assert_eq!(sls.repartitions, 1);
+        let mut sls2 = {
+            let (ep, order) = skewed_start(&g, 3);
+            let deltas = vec![(g.num_edges() / 3 + 1) as u64; 3];
+            SubgraphLocalSearch::new(&g, &c, ep, order, deltas, 5)
+        };
+        sls2.run(&SlsParams { t0: 10, ..Default::default() });
+        assert!(sls.into_partition().is_complete());
+        assert!(sls2.into_partition().is_complete());
+    }
+
+    #[test]
+    fn scratch_reuse_is_sample_stable() {
+        // the repair ladder's reusable scratch buffers must not leak state
+        // between calls: a cloned search replaying the same operator
+        // sequence lands on the identical assignment
+        let g = gen::erdos_renyi(200, 900, 6);
+        let c = cluster(4);
+        let (ep, order) = skewed_start(&g, 4);
+        let deltas = vec![(g.num_edges() / 4 + 1) as u64; 4];
+        let base = SubgraphLocalSearch::new(&g, &c, ep, order, deltas, 8);
+        let params = SlsParams { theta: 0.05, gamma: 0.5, ..Default::default() };
+        let run = |mut s: SubgraphLocalSearch<'_>| {
+            for _ in 0..6 {
+                s.destroy_repair(&params);
+            }
+            s.tracker.assignment.clone()
+        };
+        assert_eq!(run(base.clone()), run(base.clone()));
     }
 
     #[test]

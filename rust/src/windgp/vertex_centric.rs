@@ -55,15 +55,15 @@ pub fn to_vertex_centric(
     for v in verts {
         let deg = g.degree(v) as f64;
         let mut best: Option<(PartId, f64)> = None;
-        for &part in &t.parts_of(v) {
+        t.for_each_part(v, |part| {
             if budget[part as usize] <= 0 {
-                continue;
+                return;
             }
             let frac = t.part_degree(v, part) as f64 / (deg + 1.0);
             if best.map_or(true, |(_, bf)| frac > bf) {
                 best = Some((part, frac));
             }
-        }
+        });
         let k = best.map(|(k, _)| k).unwrap_or_else(|| {
             // isolated vertex or all preferred machines full: most budget
             (0..p).max_by_key(|&i| budget[i]).unwrap() as PartId

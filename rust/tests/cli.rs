@@ -97,7 +97,7 @@ fn bench_emits_valid_json() {
         assert!(r.get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
         assert!(r.get("samples").unwrap().as_usize().unwrap() >= 1);
     }
-    // the ingest pipeline section must be tracked per PR
+    // the ingest and partition-phase sections must be tracked per PR
     let names: Vec<&str> = results
         .iter()
         .map(|r| r.get("name").unwrap().as_str().unwrap())
@@ -107,6 +107,10 @@ fn bench_emits_valid_json() {
         "ingest/build",
         "ingest/build-sequential",
         "ingest/cache-reload",
+        "expand/partition",
+        "expand/partition-uncompacted",
+        "sls/destroy-repair",
+        "sls/full",
     ] {
         assert!(names.contains(&want), "missing bench entry {want} in {names:?}");
     }

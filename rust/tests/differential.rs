@@ -1,0 +1,154 @@
+//! Differential suite for the working-graph compaction subsystem.
+//!
+//! The epoch-compacted engine must be a pure *performance* change:
+//! compaction is stable (unassigned adjacency entries keep their original
+//! relative order), so every [`CompactPolicy`] — including `Never`, which
+//! scans the full static CSR windows exactly like the pre-compaction
+//! engine — must produce **byte-identical** `EdgePartition.assignment`
+//! vectors for fixed seeds. These tests pin that across:
+//!
+//!   - Erdős–Rényi and R-MAT inputs, several seeds each;
+//!   - every compaction threshold (`Never` = the untouched slow path,
+//!     `Always` = compact every step, `Halving` = the default);
+//!   - the expansion-only pipeline (expand + leftover sweep) and the full
+//!     WindGP `Variant::Full` pass (capacities + expansion + SLS with its
+//!     re-partition resume path).
+
+use windgp::graph::{gen, rmat, CompactPolicy, Graph};
+use windgp::machines::{Cluster, Machine};
+use windgp::partition::{EdgePartition, PartId, Partitioner};
+use windgp::windgp::{ExpandParams, Expander, Variant, WindGP, WindGPConfig};
+
+fn test_graphs() -> Vec<(String, Graph)> {
+    let mut graphs = Vec::new();
+    for seed in [1u64, 7, 42] {
+        graphs.push((
+            format!("er-{seed}"),
+            gen::erdos_renyi(400, 2400, seed),
+        ));
+        graphs.push((
+            format!("rmat-{seed}"),
+            rmat::generate(&rmat::RmatParams::graph500(10, 8), seed),
+        ));
+    }
+    graphs
+}
+
+/// Memory-generous p = 8 cluster: the differential contract covers the
+/// expansion/SLS decision sequence, not the "nothing fits" fallback arm
+/// (whose tie-break is pinned separately in the unit suites).
+fn cluster8() -> Cluster {
+    Cluster::new(vec![Machine::new(u64::MAX / 8, 1.0, 1.0, 1.0); 8])
+}
+
+/// Expansion-only pipeline at an explicit policy: p partitions grown to
+/// |E|/p + 1, leftovers swept.
+fn expand_pipeline(g: &Graph, cluster: &Cluster, seed: u64, policy: CompactPolicy) -> Vec<PartId> {
+    let p = cluster.len();
+    let m = g.num_edges() as u64;
+    let mut ex = Expander::new_with_policy(g, cluster, seed, policy);
+    let mut ep = EdgePartition::unassigned(g, p);
+    let mut order = vec![Vec::new(); p];
+    let params = ExpandParams { alpha: 0.3, beta: 0.3 };
+    for i in 0..p {
+        let edges = ex.expand_partition(i as u32, m / p as u64 + 1, &params);
+        for &e in &edges {
+            ep.assignment[e as usize] = i as u32;
+        }
+        order[i] = edges;
+    }
+    ex.sweep_leftovers(&mut ep, &mut order);
+    assert!(ep.is_complete(), "expansion pipeline left edges unassigned");
+    ep.assignment
+}
+
+#[test]
+fn expander_output_byte_identical_across_policies() {
+    let cluster = cluster8();
+    for (name, g) in test_graphs() {
+        for seed in [3u64, 11] {
+            let reference = expand_pipeline(&g, &cluster, seed, CompactPolicy::Never);
+            for policy in [CompactPolicy::Always, CompactPolicy::Halving] {
+                let got = expand_pipeline(&g, &cluster, seed, policy);
+                assert_eq!(
+                    got, reference,
+                    "{name} seed {seed}: {policy:?} diverged from the uncompacted engine"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn full_windgp_byte_identical_across_policies() {
+    // the full Variant::Full pass routes the policy through expansion AND
+    // the SLS re-partition resume path (Expander::with_state_policy)
+    for (name, g) in test_graphs() {
+        let cluster = Cluster::heterogeneous_small(3, 5, g.num_edges() as f64 / 2.0e6);
+        for seed in [5u64, 23] {
+            let run = |policy: CompactPolicy| {
+                let cfg = WindGPConfig {
+                    variant: Variant::Full,
+                    compact: policy,
+                    ..Default::default()
+                };
+                let ep = WindGP::new(cfg).partition(&g, &cluster, seed);
+                assert!(ep.is_complete(), "{name} seed {seed}: incomplete at {policy:?}");
+                ep.assignment
+            };
+            let reference = run(CompactPolicy::Never);
+            for policy in [CompactPolicy::Always, CompactPolicy::Halving] {
+                assert_eq!(
+                    run(policy),
+                    reference,
+                    "{name} seed {seed}: full WindGP diverged at {policy:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn resumed_expander_byte_identical_across_policies() {
+    // with_state_policy in isolation: pre-assign a deterministic subset,
+    // resume expansion, compare the claimed-edge sequences slot for slot
+    let g = rmat::generate(&rmat::RmatParams::graph500(10, 8), 9);
+    let cluster = cluster8();
+    let m = g.num_edges();
+    let assigned: Vec<bool> = (0..m).map(|e| e % 3 == 0).collect();
+    let border = vec![false; g.num_vertices()];
+    let run = |policy: CompactPolicy| {
+        let mut ex = Expander::with_state_policy(
+            &g,
+            &cluster,
+            assigned.clone(),
+            border.clone(),
+            13,
+            policy,
+        );
+        let params = ExpandParams { alpha: 0.3, beta: 0.3 };
+        (0..8u32)
+            .map(|i| ex.expand_partition(i, (m as u64) / 8 + 1, &params))
+            .collect::<Vec<_>>()
+    };
+    let reference = run(CompactPolicy::Never);
+    for policy in [CompactPolicy::Always, CompactPolicy::Halving] {
+        assert_eq!(run(policy), reference, "resume path diverged at {policy:?}");
+    }
+}
+
+#[test]
+fn default_policy_is_halving_and_matches_explicit() {
+    // WindGP::default() must route through the same engine configuration
+    // as an explicit Halving config (guards against the default silently
+    // drifting away from the benched configuration)
+    let g = gen::erdos_renyi(300, 1500, 4);
+    let cluster = Cluster::heterogeneous_small(2, 4, 0.01);
+    let implicit = WindGP::default().partition(&g, &cluster, 2);
+    let explicit = WindGP::new(WindGPConfig {
+        compact: CompactPolicy::Halving,
+        ..Default::default()
+    })
+    .partition(&g, &cluster, 2);
+    assert_eq!(implicit.assignment, explicit.assignment);
+}

@@ -11,6 +11,9 @@
 //!       arbitrary move sequences
 //!   P5  TC(WindGP) never exceeds TC(random hash) on any tested instance
 //!   P6  replica-pair matrix symmetry + RF/com identities
+//!   P7  a CostTracker replaying a full WindGP Variant::Full output
+//!       edge-by-edge agrees with the bulk constructor and the
+//!       from-scratch Metrics (incl. the n_{i,j} table)
 
 use windgp::baselines::{Dbh, Ebv, Hdrf, NeighborExpansion, PowerGraphGreedy, RandomHash};
 use windgp::graph::gen;
@@ -179,6 +182,55 @@ fn p5_windgp_never_loses_to_hash() {
         let wind = m.report(&WindGP::default().partition(&g, &cluster, case)).tc;
         let hash = m.report(&RandomHash.partition(&g, &cluster, case)).tc;
         assert!(wind <= hash * 1.05, "case {case}: windgp {wind} hash {hash}");
+    }
+}
+
+#[test]
+fn p7_tracker_consistent_through_full_windgp_pass() {
+    use windgp::windgp::Variant;
+    let mut rng = SplitMix64::new(707);
+    for case in 0..5 {
+        let g = random_graph(&mut rng);
+        let cluster = random_cluster(&mut rng, &g, true);
+        let p = cluster.len();
+        let ep = WindGP::variant(Variant::Full).partition(&g, &cluster, case);
+        assert!(ep.is_complete(), "case {case}: Full pass incomplete");
+        // replay the final assignment through the incremental tracker and
+        // cross-check against the bulk constructor + from-scratch metrics
+        let mut t = CostTracker::new(&g, &cluster, &EdgePartition::unassigned(&g, p));
+        for (e, &a) in ep.assignment.iter().enumerate() {
+            t.add_edge(e as u32, a);
+        }
+        let bulk = CostTracker::new(&g, &cluster, &ep);
+        let r = Metrics::new(&g, &cluster).report(&ep);
+        for i in 0..p {
+            assert_eq!(t.v_count[i], r.v_count[i], "case {case}: v_count[{i}]");
+            assert_eq!(t.e_count[i], bulk.e_count[i], "case {case}: e_count[{i}]");
+            assert!(
+                (t.t_cal(i) - r.t_cal[i]).abs() < 1e-6,
+                "case {case}: t_cal[{i}] {} vs {}",
+                t.t_cal(i),
+                r.t_cal[i]
+            );
+            assert!(
+                (t.t_com(i) - r.t_com[i]).abs() < 1e-6,
+                "case {case}: t_com[{i}] {} vs {}",
+                t.t_com(i),
+                r.t_com[i]
+            );
+            for j in 0..p {
+                assert_eq!(t.nij(i, j), bulk.nij(i, j), "case {case}: nij[{i}][{j}]");
+            }
+        }
+        assert!((t.tc() - r.tc).abs() < 1e-6, "case {case}: tc");
+        // per-vertex replica views agree between replayed and bulk trackers
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(
+                t.replica_entries(v),
+                bulk.replica_entries(v),
+                "case {case}: replica set diverged at vertex {v}"
+            );
+        }
     }
 }
 
