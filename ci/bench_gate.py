@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate.
+
+Compares a fresh BENCH_hotpath.json against the committed
+BENCH_baseline.json and fails (exit 1) when any *asserted* entry regresses
+more than the tolerance (default 1.5x on min_ns — min is the most
+scheduling-noise-resistant statistic the bench emits). Always prints a
+per-entry delta table. Also enforces that every asserted entry exists in
+the current run, replacing the old inline presence check.
+
+Baseline lifecycle: entries missing from the baseline are reported as
+"new" and do not fail the gate (the committed baseline starts empty and
+is refreshed from real main-branch runs via --refresh, uploaded as the
+BENCH_baseline artifact; maintainers periodically commit that artifact
+back).
+
+Usage:
+    bench_gate.py check  BENCH_hotpath.json BENCH_baseline.json [--max-ratio 1.5]
+    bench_gate.py refresh BENCH_hotpath.json BENCH_baseline.json
+"""
+
+import json
+import sys
+
+# Every hot-path entry the gate watches. Keep in sync with `windgp bench`
+# (cmd_bench in rust/src/main.rs); adding a bench there should usually add
+# a line here so regressions are caught.
+ASSERTED = [
+    "ingest/parse",
+    "ingest/build",
+    "ingest/cache-reload",
+    "expand/partition",
+    "expand/partition-uncompacted",
+    "expand/partition-parallel",
+    "expand/partition-parallel-w1",
+    "sls/destroy-repair",
+    "sls/full",
+]
+
+
+def load_entries(path):
+    with open(path) as f:
+        data = json.load(f)
+    entries = {r["name"]: r for r in data.get("results", [])}
+    return data, entries
+
+
+def cmd_check(hotpath, baseline_path, max_ratio):
+    data, current = load_entries(hotpath)
+    schema = data.get("schema")
+    if schema != "windgp-bench-hotpath-v1":
+        print(f"FAIL: unexpected schema {schema!r}")
+        return 1
+
+    try:
+        _, base = load_entries(baseline_path)
+    except FileNotFoundError:
+        print(f"note: no baseline at {baseline_path}; presence checks only")
+        base = {}
+
+    failures = []
+    rows = []
+    for name in ASSERTED:
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"missing bench entry: {name}")
+            rows.append((name, "-", "-", "MISSING"))
+            continue
+        ref = base.get(name)
+        if ref is None or not ref.get("min_ns"):
+            rows.append((name, fmt_ns(cur["min_ns"]), "-", "new (no baseline)"))
+            continue
+        ratio = cur["min_ns"] / ref["min_ns"]
+        status = "ok" if ratio <= max_ratio else f"REGRESSED >{max_ratio}x"
+        if ratio > max_ratio:
+            failures.append(f"{name}: {ratio:.2f}x vs baseline (limit {max_ratio}x)")
+        rows.append((name, fmt_ns(cur["min_ns"]), fmt_ns(ref["min_ns"]), f"{ratio:.2f}x {status}"))
+
+    w = max(len(r[0]) for r in rows) + 2
+    print(f"{'entry'.ljust(w)}{'current':>12}{'baseline':>12}  delta")
+    for name, cur_s, ref_s, delta in rows:
+        print(f"{name.ljust(w)}{cur_s:>12}{ref_s:>12}  {delta}")
+
+    if failures:
+        print("\nFAIL:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nbench gate OK")
+    return 0
+
+
+def fmt_ns(ns):
+    if ns >= 1e9:
+        return f"{ns / 1e9:.2f}s"
+    if ns >= 1e6:
+        return f"{ns / 1e6:.1f}ms"
+    if ns >= 1e3:
+        return f"{ns / 1e3:.1f}us"
+    return f"{ns:.0f}ns"
+
+
+def cmd_refresh(hotpath, baseline_path):
+    data, entries = load_entries(hotpath)
+    missing = [n for n in ASSERTED if n not in entries]
+    if missing:
+        print(f"FAIL: refusing to refresh baseline; run is missing {missing}")
+        return 1
+    with open(baseline_path, "w") as f:
+        json.dump(
+            {
+                "schema": "windgp-bench-baseline-v1",
+                "source": "windgp bench (refreshed from a main-branch CI run)",
+                "graph": data.get("graph"),
+                "machines": data.get("machines"),
+                "results": [entries[n] for n in ASSERTED],
+            },
+            f,
+            indent=2,
+        )
+        f.write("\n")
+    print(f"refreshed {baseline_path} from {hotpath} ({len(ASSERTED)} entries)")
+    return 0
+
+
+def main(argv):
+    if len(argv) < 4 or argv[1] not in ("check", "refresh"):
+        print(__doc__)
+        return 2
+    if argv[1] == "refresh":
+        return cmd_refresh(argv[2], argv[3])
+    max_ratio = 1.5
+    if "--max-ratio" in argv:
+        max_ratio = float(argv[argv.index("--max-ratio") + 1])
+    return cmd_check(argv[2], argv[3], max_ratio)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

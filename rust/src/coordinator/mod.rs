@@ -14,7 +14,8 @@
 pub mod pool;
 
 pub use pool::{
-    chunk_ranges, effective_workers, merge_sorted_dedup, parallel_map, parallel_map_workers,
+    chunk_ranges, effective_workers, in_pool_worker, merge_sorted_dedup, parallel_map,
+    parallel_map_mut, parallel_map_workers,
 };
 
 use std::time::Instant;

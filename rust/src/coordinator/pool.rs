@@ -37,6 +37,59 @@ pub fn effective_workers(n: usize) -> usize {
     configured_workers(n)
 }
 
+/// True when the calling thread is itself a pool worker. Stateful
+/// round-based callers (the parallel expansion engine) use this to size
+/// their speculation width to 1 instead of queueing nested fan-outs that
+/// would only run serially anyway.
+pub fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|c| c.get())
+}
+
+/// Scoped round helper: run `f` over every slot of `slots` concurrently,
+/// in place, and return the results in slot order.
+///
+/// This is the synchronization primitive behind round-based protocols
+/// (propose → barrier → arbitrate → commit): each round maps once over a
+/// small set of *stateful* slots that must stay owned by the caller
+/// between rounds, so unlike [`parallel_map`] the items are borrowed
+/// (`&mut`) rather than consumed. One scoped thread is spawned per slot —
+/// callers size the slice to their worker budget (the expansion engine
+/// uses `min(p, effective_workers(p))` slots). The scope join is the
+/// round's epoch barrier: when this returns, every proposal is complete
+/// and the caller may mutate shared state safely.
+///
+/// Deterministic contract: output order equals slot order, and `f` sees
+/// each slot exactly once — results never depend on thread scheduling.
+/// Panics propagate verbatim after all threads join. Inside a pool worker
+/// (nested call) the slots run sequentially on the calling thread.
+pub fn parallel_map_mut<T, R, F>(slots: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    if slots.len() <= 1 || IN_POOL_WORKER.with(|c| c.get()) {
+        return slots.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = slots
+            .iter_mut()
+            .enumerate()
+            .map(|(i, t)| {
+                s.spawn(move || {
+                    IN_POOL_WORKER.with(|c| c.set(true));
+                    f(i, t)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|payload| std::panic::resume_unwind(payload)))
+            .collect()
+    })
+}
+
 /// Worker count for `n` jobs: `WINDGP_WORKERS` if set, else the machine's
 /// available parallelism, in both cases clamped to `[1, n]`.
 fn configured_workers(n: usize) -> usize {
@@ -342,6 +395,44 @@ mod tests {
             .or_else(|| payload.downcast_ref::<String>().cloned())
             .unwrap_or_default();
         assert!(msg.contains("boom-17"), "payload masked: {msg:?}");
+    }
+
+    #[test]
+    fn map_mut_mutates_in_place_and_preserves_order() {
+        let mut slots: Vec<u64> = (0..7).collect();
+        let out = parallel_map_mut(&mut slots, |i, s| {
+            *s += 100;
+            *s * 10 + i as u64
+        });
+        assert_eq!(slots, (100..107).collect::<Vec<_>>());
+        assert_eq!(out, (0..7).map(|i| (i + 100) * 10 + i).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn map_mut_nested_runs_sequentially() {
+        // inside a pool worker the round helper must not spawn again, and
+        // the result must match the sequential answer
+        let out = parallel_map_workers((0..4u64).collect(), 4, |x| {
+            let mut inner = vec![x; 3];
+            let r = parallel_map_mut(&mut inner, |i, s| *s * 10 + i as u64);
+            r.iter().sum::<u64>()
+        });
+        let expect: Vec<u64> = (0..4u64).map(|x| (0..3).map(|i| x * 10 + i).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn map_mut_panic_propagates() {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut slots = vec![0u32; 4];
+            parallel_map_mut(&mut slots, |i, _s| {
+                if i == 2 {
+                    panic!("slot-2 dies");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err());
     }
 
     #[test]

@@ -57,10 +57,13 @@ pub enum CompactPolicy {
 ///
 /// The caller owns the `assigned` edge bitmap and passes it into
 /// [`WorkingGraph::compact_if_due`]; the working graph itself only tracks
-/// window geometry (`live_len`) and staleness (`dead`). Edges must only
-/// ever move unassigned → assigned during the lifetime of one
-/// `WorkingGraph` (the expansion engine is monotone; SLS resume paths
-/// build a fresh one via [`WorkingGraph::from_assigned`]).
+/// window geometry (`live_len`) and staleness (`dead`). Edge assignment is
+/// monotone (unassigned → assigned) *except* for speculative claims, which
+/// may be rolled back via [`WorkingGraph::unnote_assigned`] — but every
+/// note/unnote pair must complete before any compaction of the affected
+/// vertices (the round-based engine defers compaction to
+/// [`WorkingGraph::commit_epoch`], where only permanent claims remain; SLS
+/// resume paths build a fresh view via [`WorkingGraph::from_assigned`]).
 #[derive(Clone, Debug)]
 pub struct WorkingGraph {
     /// live-window start per vertex (copied from the source CSR offsets)
@@ -172,11 +175,38 @@ impl WorkingGraph {
     /// Record that one incident edge of `v` was just assigned (one live
     /// slot of `v` went dead). Never compacts — callers invoke
     /// [`Self::compact_if_due`] at scan boundaries, where no iteration
-    /// over `v`'s window is in flight.
+    /// over `v`'s window is in flight. Claims may come from *any* cluster
+    /// growing concurrently (the round-based engine funnels every
+    /// committed claimer through here between rounds), which is why the
+    /// counter is a plain per-vertex tally rather than per-claimer state.
     #[inline]
     pub fn note_assigned(&mut self, v: VId) {
         self.dead[v as usize] += 1;
         debug_assert!(self.dead[v as usize] <= self.live_len[v as usize]);
+    }
+
+    /// Undo one [`Self::note_assigned`] on `v` — the rollback half of a
+    /// *speculative* claim. Only sound while no compaction has run on `v`
+    /// since the matching `note_assigned` (compaction physically drops the
+    /// dead slot); the round-based expansion engine guarantees this by
+    /// never compacting during a proposal — compaction is deferred to the
+    /// epoch boundary ([`Self::commit_epoch`]) where only *committed*
+    /// (permanent) claims are present.
+    #[inline]
+    pub fn unnote_assigned(&mut self, v: VId) {
+        debug_assert!(self.dead[v as usize] > 0, "unnote without a matching note");
+        self.dead[v as usize] -= 1;
+    }
+
+    /// Epoch-boundary compaction after a committed claim batch: compact
+    /// every due window among `touched` vertices. Called between rounds of
+    /// the parallel expansion engine, where no scan is in flight and every
+    /// dead slot corresponds to a permanently-assigned edge, so compaction
+    /// stays stable exactly as in the sequential engine.
+    pub fn commit_epoch(&mut self, touched: &[VId], assigned: &[bool]) {
+        for &v in touched {
+            self.compact_if_due(v, assigned);
+        }
     }
 
     /// True when the policy says `v`'s window should be compacted now.
@@ -327,6 +357,60 @@ mod tests {
         for v in 0..g.num_vertices() as VId {
             assert_eq!(wg.live_len(v) as usize, g.degree(v));
             assert_eq!(wg.remaining_degree(v), 0);
+        }
+    }
+
+    #[test]
+    fn unnote_rolls_back_speculative_claims_exactly() {
+        // speculative claim batches (note without compaction) must be
+        // perfectly undone by unnote: remaining degrees and subsequent
+        // scans are indistinguishable from a graph that never claimed
+        let g = gen::erdos_renyi(50, 200, 7);
+        let mut wg = WorkingGraph::new(&g, CompactPolicy::Halving);
+        let mut assigned = vec![false; g.num_edges()];
+        let reference = WorkingGraph::new(&g, CompactPolicy::Halving);
+        // speculate: claim a third of the edges, no compaction
+        let spec: Vec<EId> = (0..g.num_edges() as EId).filter(|e| e % 3 == 0).collect();
+        for &e in &spec {
+            assigned[e as usize] = true;
+            let (u, v) = g.edge(e);
+            wg.note_assigned(u);
+            wg.note_assigned(v);
+        }
+        // roll back in reverse
+        for &e in spec.iter().rev() {
+            assigned[e as usize] = false;
+            let (u, v) = g.edge(e);
+            wg.unnote_assigned(v);
+            wg.unnote_assigned(u);
+        }
+        for v in 0..g.num_vertices() as VId {
+            assert_eq!(wg.remaining_degree(v), reference.remaining_degree(v));
+            assert_eq!(scan(&wg, v, &assigned), scan_static(&g, v, &assigned));
+        }
+        assert_eq!(wg.compactions(), 0, "speculation must not compact");
+    }
+
+    #[test]
+    fn commit_epoch_compacts_only_due_windows_and_stays_stable() {
+        let g = gen::erdos_renyi(80, 400, 3);
+        let mut wg = WorkingGraph::new(&g, CompactPolicy::Halving);
+        let mut assigned = vec![false; g.num_edges()];
+        // commit a batch touching a few vertices heavily
+        let mut touched: Vec<VId> = Vec::new();
+        for e in (0..g.num_edges() as EId).filter(|e| e % 2 == 0) {
+            assigned[e as usize] = true;
+            let (u, v) = g.edge(e);
+            wg.note_assigned(u);
+            wg.note_assigned(v);
+            touched.push(u);
+            touched.push(v);
+        }
+        wg.commit_epoch(&touched, &assigned);
+        assert!(wg.compactions() > 0, "half-dead windows must compact at the epoch");
+        for v in 0..g.num_vertices() as VId {
+            assert_eq!(scan(&wg, v, &assigned), scan_static(&g, v, &assigned));
+            assert_eq!(wg.remaining_degree(v) as usize, scan_static(&g, v, &assigned).len());
         }
     }
 

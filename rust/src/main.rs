@@ -81,8 +81,10 @@ fn print_help() {
          COMMANDS:\n\
            experiment --id <id|all> [--seeds N] [--shrink K] [--out DIR]\n\
                       regenerate a paper table/figure (see DESIGN.md §5)\n\
-           partition  --graph NAME --algo NAME [--seed N] [--cluster FILE]\n\
+           partition  --graph NAME --algo NAME [--seed N] [--cluster FILE] [--workers N]\n\
                       partition a dataset and print the quality report\n\
+                      (--workers: round-based parallel expansion, 0 = auto;\n\
+                       byte-identical output at any worker count)\n\
            simulate   --graph NAME --algo NAME --workload pagerank|sssp|bfs|triangle|wcc\n\
                       [--pjrt] [--iters N]  run a distributed workload\n\
            bench      [--shrink N] [--samples N] [--out FILE]\n\
@@ -151,8 +153,32 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
     let ctx = ctx_from(flags)?;
     let (g, cluster) = graph_and_cluster(flags, &ctx)?;
     let algo_name = flags.get("algo").ok_or_else(|| anyhow!("--algo required"))?;
-    let algo = common::partitioner_by_name(algo_name)
-        .ok_or_else(|| anyhow!("unknown algorithm '{algo_name}' (see 'list')"))?;
+    // --workers N switches the WindGP family onto the round-based parallel
+    // expansion engine with N speculation slots (0 = auto). Output is
+    // byte-identical to the sequential engine — only wall-clock changes.
+    let algo = match flags.get("workers") {
+        Some(w) => {
+            use windgp::windgp::{ParallelMode, Variant, WindGP, WindGPConfig};
+            let workers: usize = w.parse().map_err(|_| anyhow!("--workers expects a number"))?;
+            // same case-insensitive name handling as partitioner_by_name
+            let variant = match algo_name.to_lowercase().as_str() {
+                "windgp" => Variant::Full,
+                "windgp-" => Variant::Naive,
+                "windgp*" => Variant::Capacity,
+                "windgp+" => Variant::BestFirst,
+                other => bail!("--workers applies to the windgp family, not '{other}'"),
+            };
+            let cfg = WindGPConfig {
+                variant,
+                parallel: ParallelMode::RoundBased,
+                workers,
+                ..Default::default()
+            };
+            Box::new(WindGP::new(cfg)) as Box<dyn windgp::partition::Partitioner + Sync + Send>
+        }
+        None => common::partitioner_by_name(algo_name)
+            .ok_or_else(|| anyhow!("unknown algorithm '{algo_name}' (see 'list')"))?,
+    };
     let seed: u64 = flags.get("seed").map_or(Ok(1), |s| s.parse())?;
     let t0 = std::time::Instant::now();
     let ep = algo.partition(&g, &cluster, seed);
@@ -353,6 +379,29 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
         results.push(bench("expand/partition-uncompacted", samples, || {
             run_expand(CompactPolicy::Never)
         }));
+        // round-based parallel expansion vs the sequential engine above:
+        // same graph, same deltas, byte-identical output — the entry pair
+        // the CI bench gate watches. The -w1 control runs the identical
+        // round protocol on one speculation slot, isolating protocol
+        // overhead from actual parallel speedup.
+        use windgp::windgp::expand::{expand_clusters, ParallelMode};
+        let parts8: Vec<u32> = (0..8).collect();
+        let deltas8: Vec<u64> = vec![(m as u64) / 8 + 1; 8];
+        let run_parallel = |workers: usize| {
+            let mut ex = Expander::new_with_policy(&g, &cluster8, 1, CompactPolicy::Halving);
+            let lists = expand_clusters(
+                &mut ex,
+                &parts8,
+                &deltas8,
+                &params,
+                ParallelMode::RoundBased,
+                workers,
+            );
+            let total: usize = lists.iter().map(|l| l.len()).sum();
+            assert!(total > m / 2);
+        };
+        results.push(bench("expand/partition-parallel", samples, || run_parallel(0)));
+        results.push(bench("expand/partition-parallel-w1", samples, || run_parallel(1)));
 
         // skewed SLS start (70% of edges on machine 0) so destroy/repair
         // has real work every round

@@ -258,6 +258,41 @@ impl<'a> CostTracker<'a> {
         self.bump_vertex(v, part, 1);
     }
 
+    /// Batched [`Self::add_edge`]: assign every edge of `edges` (all
+    /// currently unassigned) to `part`, paying one membership update per
+    /// *distinct* endpoint instead of one per incident edge. The SLS
+    /// re-partition resume path commits whole expansion batches through
+    /// this — for a hub vertex gaining k incident edges the per-edge path
+    /// re-walks its replica set k times where one walk suffices. The
+    /// final state is identical to the equivalent `add_edge` loop (counts
+    /// and replica sets exactly; the T_com floats accumulate in sorted
+    /// vertex order, within the epsilon the consistency suite pins).
+    pub fn add_edges(&mut self, part: PartId, edges: &[EId]) {
+        if edges.is_empty() {
+            return;
+        }
+        let mut endpoints: Vec<u32> = Vec::with_capacity(edges.len() * 2);
+        for &e in edges {
+            debug_assert_eq!(self.assignment[e as usize], UNASSIGNED);
+            self.assignment[e as usize] = part;
+            let (u, v) = self.g.edge(e);
+            endpoints.push(u);
+            endpoints.push(v);
+        }
+        self.e_count[part as usize] += edges.len() as u64;
+        endpoints.sort_unstable();
+        let mut i = 0;
+        while i < endpoints.len() {
+            let v = endpoints[i];
+            let mut j = i + 1;
+            while j < endpoints.len() && endpoints[j] == v {
+                j += 1;
+            }
+            self.bump_vertex(v, part, (j - i) as i32);
+            i = j;
+        }
+    }
+
     /// Unassign an edge from its current partition.
     pub fn remove_edge(&mut self, e: EId) -> PartId {
         let part = self.assignment[e as usize];
@@ -603,6 +638,52 @@ mod tests {
         let fresh = CostTracker::new(&g, &cluster, &ep);
         assert_eq!(t0.tc().to_bits(), fresh.tc().to_bits());
         check_consistency(&g, &cluster, &t0);
+    }
+
+    #[test]
+    fn add_edges_batch_matches_per_edge_adds() {
+        let g = gen::erdos_renyi(70, 280, 13);
+        let cluster = Cluster::new(vec![
+            Machine::new(1_000_000, 1.0, 2.0, 1.0),
+            Machine::new(500_000, 2.0, 3.0, 2.0),
+            Machine::new(250_000, 0.5, 1.0, 4.0),
+        ]);
+        let mut rng = SplitMix64::new(31);
+        // partial start; batch-add the rest per partition
+        let mut ep = EdgePartition::unassigned(&g, 3);
+        let mut batches: Vec<Vec<EId>> = vec![Vec::new(); 3];
+        for e in 0..g.num_edges() {
+            if rng.next_f64() < 0.4 {
+                ep.assignment[e] = rng.next_usize(3) as PartId;
+            } else {
+                batches[rng.next_usize(3)].push(e as EId);
+            }
+        }
+        let mut batched = CostTracker::new(&g, &cluster, &ep);
+        let mut per_edge = batched.clone();
+        for (part, batch) in batches.iter().enumerate() {
+            batched.add_edges(part as PartId, batch);
+            for &e in batch {
+                per_edge.add_edge(e, part as PartId);
+            }
+        }
+        assert_eq!(batched.assignment, per_edge.assignment);
+        assert_eq!(batched.v_count, per_edge.v_count);
+        assert_eq!(batched.e_count, per_edge.e_count);
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(batched.replica_entries(v), per_edge.replica_entries(v), "S({v})");
+        }
+        for i in 0..3 {
+            assert!((batched.t_com(i) - per_edge.t_com(i)).abs() < 1e-9, "t_com[{i}]");
+            for j in 0..3 {
+                assert_eq!(batched.nij(i, j), per_edge.nij(i, j));
+            }
+        }
+        check_consistency(&g, &cluster, &batched);
+        // empty batch is a no-op
+        let before = batched.tc();
+        batched.add_edges(0, &[]);
+        assert_eq!(batched.tc().to_bits(), before.to_bits());
     }
 
     #[test]

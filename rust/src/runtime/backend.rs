@@ -16,7 +16,7 @@ use anyhow::{anyhow, Result};
 use crate::simulator::ell::{EllBackend, EllBlock, PureBackend};
 use crate::simulator::LocalGraph;
 
-use super::PjrtEngine;
+use super::{xla, PjrtEngine};
 
 struct Operands {
     cols: xla::PjRtBuffer,

@@ -14,6 +14,9 @@
 //! device buffers once per plan and reused every superstep (see §Perf).
 
 pub mod backend;
+/// Compile-surface stub standing in for the real `xla` crate (offline
+/// builds); replace with the vendored crate to execute on PJRT.
+pub mod xla;
 
 pub use backend::PjrtBackend;
 

@@ -21,15 +21,64 @@
 //! byte-identical at every [`CompactPolicy`], including `Never` (the
 //! original full-static-CSR scans), as pinned by
 //! `rust/tests/differential.rs`.
+//!
+//! # Parallel round-based expansion
+//!
+//! [`expand_clusters`] grows all machine clusters concurrently using
+//! round-based edge claiming while staying **byte-identical to the
+//! sequential engine at any worker count** (`WINDGP_WORKERS` ∈ {1, 2, 8}
+//! is pinned by the differential suite). The protocol:
+//!
+//! 1. **Propose.** Each in-flight cluster speculatively runs its full
+//!    best-first expansion (up to its capacity-scaled `delta`) against an
+//!    immutable snapshot — the committed working graph at the start of
+//!    the round. Proposals record the *claimed edges* and a conservative
+//!    *read set*: every vertex whose remaining degree, border bit, or
+//!    adjacency window the run observed. Claims made while proposing are
+//!    rolled back before the round barrier, and compaction is deferred so
+//!    rollback can never lose a window slot.
+//! 2. **Arbitrate.** A single deterministic pass walks proposals in
+//!    machine-index order and commits the contiguous valid prefix: the
+//!    lowest in-flight machine always wins; a higher machine wins only if
+//!    its read set is disjoint from the endpoints written by every lower
+//!    commit of the round. Losers discard their proposal and re-propose
+//!    next round against the new snapshot.
+//! 3. **Commit.** Winning claims are applied to the shared
+//!    [`WorkingGraph`] behind the round's epoch barrier
+//!    ([`WorkingGraph::commit_epoch`]), so compaction stays stable and no
+//!    scan is ever invalidated mid-flight.
+//!
+//! Determinism comes from the arbitration order, not thread scheduling: a
+//! valid proposal observed nothing any lower commit changed, so its trace
+//! equals the trace the sequential engine would have produced — by
+//! induction the committed sequence is exactly the sequential output. The
+//! per-partition RNG and cursor are derived from `(seed, part)` alone so
+//! a proposal is a pure function of the committed snapshot.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use crate::coordinator::pool;
 use crate::graph::working::{CompactPolicy, WorkingGraph};
 use crate::graph::{EId, Graph, VId};
 use crate::machines::Cluster;
 use crate::partition::{EdgePartition, PartId, UNASSIGNED};
 use crate::util::SplitMix64;
+
+/// How [`expand_clusters`] schedules the per-machine expansions.
+///
+/// Both modes produce **byte-identical** partitions (pinned by
+/// `rust/tests/differential.rs`); they differ only in wall-clock.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// Grow one cluster at a time on the calling thread — the historical
+    /// engine, kept as the differential baseline.
+    #[default]
+    Sequential,
+    /// Grow all clusters concurrently with round-based claiming and
+    /// deterministic lowest-index-wins arbitration (see module docs).
+    RoundBased,
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct ExpandParams {
@@ -45,6 +94,7 @@ impl ExpandParams {
 }
 
 /// Lazy heap entry; min-heap by score, vertex id tie-break (determinism).
+#[derive(Clone)]
 struct Entry {
     score: f64,
     v: VId,
@@ -76,6 +126,26 @@ impl Ord for Entry {
     }
 }
 
+/// One speculative round-based proposal: the claims one cluster would
+/// make against the snapshot it ran on, plus the conservative read set
+/// arbitration needs to decide whether those claims survive lower-index
+/// commits (see module docs).
+#[derive(Clone, Debug)]
+pub struct Proposal {
+    pub part: PartId,
+    /// claimed edge ids in insertion (LIFO-able) order
+    pub edges: Vec<EId>,
+    /// conservative observed-vertex set: rdeg/border/window reads
+    pub reads: Vec<VId>,
+    /// border additions the commit must apply (B ← B ∪ (S \ C))
+    pub border_add: Vec<VId>,
+}
+
+/// `Clone` deep-copies the whole engine state (working graph included)
+/// while sharing the graph/cluster borrows — the round-based engine keeps
+/// one clone per speculation slot and rebases it by replaying committed
+/// proposals, so slots stay bit-identical to the committed master.
+#[derive(Clone)]
 pub struct Expander<'a> {
     g: &'a Graph,
     cluster: &'a Cluster,
@@ -92,7 +162,12 @@ pub struct Expander<'a> {
     pub rdeg: Vec<u32>,
     /// global border set B
     pub border: Vec<bool>,
-    rng: SplitMix64,
+    /// base seed; each partition derives an independent stream from
+    /// `(seed, part)` so expansions are pure functions of the committed
+    /// graph state — the property round-based speculation relies on
+    seed: u64,
+    /// per-partition RNG, re-derived at every `expand_partition` entry
+    part_rng: SplitMix64,
     cursor: usize,
     // ---- per-partition scratch ----
     in_s: Vec<bool>,
@@ -105,6 +180,16 @@ pub struct Expander<'a> {
     touched: Vec<VId>,
     heap: BinaryHeap<Entry>,
     boundary_size: usize,
+    // ---- speculation state (round-based engine) ----
+    /// true while running a proposal: claims are tentative (rolled back
+    /// before returning) and compaction is deferred to the epoch boundary
+    speculative: bool,
+    /// record the conservative read set during a proposal
+    record_reads: bool,
+    observed: Vec<VId>,
+    observed_mark: Vec<bool>,
+    /// border additions of the current partition, applied on commit
+    border_pending: Vec<VId>,
 }
 
 impl<'a> Expander<'a> {
@@ -162,7 +247,8 @@ impl<'a> Expander<'a> {
             assigned,
             rdeg,
             border,
-            rng: SplitMix64::new(seed ^ 0x4558_5044),
+            seed,
+            part_rng: SplitMix64::new(seed),
             cursor: 0,
             in_s: vec![false; n],
             in_core: vec![false; n],
@@ -172,6 +258,41 @@ impl<'a> Expander<'a> {
             touched: Vec::new(),
             heap: BinaryHeap::new(),
             boundary_size: 0,
+            speculative: false,
+            record_reads: false,
+            observed: Vec::new(),
+            observed_mark: vec![false; n],
+            border_pending: Vec::new(),
+        }
+    }
+
+    /// Independent per-partition RNG stream: expansions must be pure
+    /// functions of `(committed graph state, seed, part)` so a round-based
+    /// proposal replays exactly what the sequential engine would do —
+    /// a stream shared across partitions would couple partition i's picks
+    /// to how many random draws partitions < i consumed.
+    fn rng_for(seed: u64, part: PartId) -> SplitMix64 {
+        let stream = (part as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        SplitMix64::new((seed ^ 0x4558_5044).wrapping_add(stream))
+    }
+
+    /// Record `v` in the proposal's conservative read set.
+    #[inline]
+    fn observe(&mut self, v: VId) {
+        if self.record_reads && !self.observed_mark[v as usize] {
+            self.observed_mark[v as usize] = true;
+            self.observed.push(v);
+        }
+    }
+
+    /// Compact at a scan boundary — except while proposing, where
+    /// compaction would bake speculative (possibly rolled-back) claims
+    /// into the window geometry; the round engine compacts at the epoch
+    /// boundary instead ([`WorkingGraph::commit_epoch`]).
+    #[inline]
+    fn maybe_compact(&mut self, v: VId) {
+        if !self.speculative {
+            self.wg.compact_if_due(v, &self.assigned);
         }
     }
 
@@ -197,6 +318,7 @@ impl<'a> Expander<'a> {
     /// Add `y` to S: compute ext[y], decrement ext of in-S neighbors.
     fn add_to_s(&mut self, y: VId, p: &ExpandParams) {
         debug_assert!(!self.in_s[y as usize]);
+        self.observe(y);
         self.in_s[y as usize] = true;
         self.touched.push(y);
         self.boundary_size += 1;
@@ -205,7 +327,7 @@ impl<'a> Expander<'a> {
         // and notify in-S neighbors that y moved into S. Compacting first
         // is safe (no scan of y's window is in flight) and keeps this walk
         // O(remaining degree) instead of O(static degree).
-        self.wg.compact_if_due(y, &self.assigned);
+        self.maybe_compact(y);
         let (start, end) = self.wg.live_range(y);
         for idx in start..end {
             let e = self.wg.incident_at(idx);
@@ -240,6 +362,7 @@ impl<'a> Expander<'a> {
         mem_used: &mut u64,
         p: &ExpandParams,
     ) -> bool {
+        self.observe(x);
         if !self.in_s[x as usize] {
             self.add_to_s(x, p);
         }
@@ -251,7 +374,7 @@ impl<'a> Expander<'a> {
         // outer walk of x) and inside add_to_s (before y's walk). Claims
         // made mid-scan just flag dead slots; the in-flight windows are
         // never rewritten under an active iteration.
-        self.wg.compact_if_due(x, &self.assigned);
+        self.maybe_compact(x);
         let (start, end) = self.wg.live_range(x);
         for idx in start..end {
             let e = self.wg.incident_at(idx);
@@ -343,14 +466,21 @@ impl<'a> Expander<'a> {
             }
         }
         // min remaining degree within a bounded window; ties broken by the
-        // seeded rng — this is the diversification the SLS re-partition
-        // operator (Algorithm 7) relies on to escape local optima
+        // per-partition rng — this is the diversification the SLS
+        // re-partition operator (Algorithm 7) relies on to escape optima.
+        // Every *eligible* vertex the scan reads joins the proposal read
+        // set: its rdeg value steered the pick, so a lower-index commit
+        // touching it must invalidate the proposal. Ineligible reads are
+        // safe to omit — commits only ever decrease rdeg (never resurrect
+        // eligibility) and in_core is partition-private.
+        self.observe(start as VId);
         let mut cands: Vec<VId> = vec![start as VId];
         let mut best_d = self.rdeg[start];
         let mut seen = 0;
         let mut i = start + 1;
         while i < n && seen < 63 {
             if eligible(self, i) {
+                self.observe(i as VId);
                 seen += 1;
                 let d = self.rdeg[i];
                 if d < best_d {
@@ -363,17 +493,39 @@ impl<'a> Expander<'a> {
             }
             i += 1;
         }
-        Some(cands[self.rng.next_usize(cands.len())])
+        Some(cands[self.part_rng.next_usize(cands.len())])
     }
 
     /// Algorithm 2: grow partition `part` up to `delta` edges. Returns the
     /// claimed edge ids in insertion (LIFO-able) order.
-    pub fn expand_partition(&mut self, _part: PartId, delta: u64, p: &ExpandParams) -> Vec<EId> {
-        let mut e_list: Vec<EId> = Vec::with_capacity(delta as usize);
+    pub fn expand_partition(&mut self, part: PartId, delta: u64, p: &ExpandParams) -> Vec<EId> {
+        debug_assert!(!self.speculative);
+        let e_list = self.grow_partition(part, delta, p);
+        // B ← B ∪ (S \ C), deferred through border_pending so the commit
+        // path of the round-based engine can apply the same additions
+        for &v in &self.border_pending {
+            self.border[v as usize] = true;
+        }
+        self.border_pending.clear();
+        e_list
+    }
+
+    /// The shared Algorithm-2 core: grows `part`, leaves the computed
+    /// border additions in `border_pending` (applied by the caller), and
+    /// resets the per-partition scratch. In speculative mode the claims
+    /// stay in `assigned`/`rdeg`/working-graph state until the caller
+    /// rolls them back ([`Self::propose_partition`]).
+    fn grow_partition(&mut self, part: PartId, delta: u64, p: &ExpandParams) -> Vec<EId> {
+        let cap = delta.min(self.g.num_edges() as u64) as usize;
+        let mut e_list: Vec<EId> = Vec::with_capacity(cap);
         if delta == 0 {
             return e_list;
         }
-        let part_idx = _part as usize;
+        // per-partition determinism: rng and cursor derive from
+        // (seed, part) + graph state only, never from earlier partitions
+        self.part_rng = Self::rng_for(self.seed, part);
+        self.cursor = 0;
+        let part_idx = part as usize;
         let mem = self.cluster.machines[part_idx].mem;
         let mut mem_used = 0u64;
         loop {
@@ -405,11 +557,13 @@ impl<'a> Expander<'a> {
                 break;
             }
         }
-        // B ← B ∪ (S \ C)
+        // B ← B ∪ (S \ C): computed here, applied by the caller (directly
+        // for sequential expansion, on commit for round-based proposals)
+        debug_assert!(self.border_pending.is_empty());
         for &v in &self.touched {
             if self.in_s[v as usize] && !self.in_core[v as usize] && self.claimed_cur[v as usize] > 0
             {
-                self.border[v as usize] = true;
+                self.border_pending.push(v);
             }
         }
         // reset per-partition scratch
@@ -424,6 +578,73 @@ impl<'a> Expander<'a> {
         self.heap.clear();
         self.boundary_size = 0;
         e_list
+    }
+
+    /// Speculatively run one Algorithm-2 expansion against the current
+    /// (committed) state and return it as a [`Proposal`] — the claims are
+    /// rolled back before returning, so the engine state is unchanged.
+    /// `record_reads` enables read-set tracking (the lowest in-flight
+    /// cluster commits unconditionally and can skip the bookkeeping).
+    pub fn propose_partition(
+        &mut self,
+        part: PartId,
+        delta: u64,
+        p: &ExpandParams,
+        record_reads: bool,
+    ) -> Proposal {
+        debug_assert!(!self.speculative);
+        self.speculative = true;
+        self.record_reads = record_reads;
+        let edges = self.grow_partition(part, delta, p);
+        let border_add = std::mem::take(&mut self.border_pending);
+        let reads = std::mem::take(&mut self.observed);
+        for &v in &reads {
+            self.observed_mark[v as usize] = false;
+        }
+        // roll back the speculative claims (reverse order); compaction was
+        // deferred, so every window slot is still physically present
+        for &e in edges.iter().rev() {
+            debug_assert!(self.assigned[e as usize]);
+            self.assigned[e as usize] = false;
+            let (u, v) = self.g.edge(e);
+            self.rdeg[u as usize] += 1;
+            self.rdeg[v as usize] += 1;
+            self.wg.unnote_assigned(u);
+            self.wg.unnote_assigned(v);
+        }
+        self.record_reads = false;
+        self.speculative = false;
+        Proposal { part, edges, reads, border_add }
+    }
+
+    /// Commit a winning proposal: apply its claims and border additions to
+    /// this engine's state, then run the epoch-boundary compaction. Called
+    /// between rounds (never during a proposal), so no scan is in flight.
+    pub fn apply_proposal(&mut self, prop: &Proposal) {
+        debug_assert!(!self.speculative);
+        for &e in &prop.edges {
+            debug_assert!(!self.assigned[e as usize], "commit of an already-claimed edge");
+            self.assigned[e as usize] = true;
+            let (u, v) = self.g.edge(e);
+            self.rdeg[u as usize] -= 1;
+            self.rdeg[v as usize] -= 1;
+            self.wg.note_assigned(u);
+            self.wg.note_assigned(v);
+        }
+        for &v in &prop.border_add {
+            self.border[v as usize] = true;
+        }
+        // epoch-boundary compaction: one due-check per distinct endpoint
+        // (the dead tallies above are already final for the whole batch)
+        let mut touched: Vec<VId> = Vec::with_capacity(prop.edges.len() * 2);
+        for &e in &prop.edges {
+            let (u, v) = self.g.edge(e);
+            touched.push(u);
+            touched.push(v);
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        self.wg.commit_epoch(&touched, &self.assigned);
     }
 
     fn pop_best(&mut self, _p: &ExpandParams) -> Option<VId> {
@@ -490,6 +711,106 @@ impl<'a> Expander<'a> {
         }
         *ep = t.to_partition();
     }
+}
+
+/// Grow the clusters `parts` (each to its `deltas` budget) and return the
+/// per-cluster claimed-edge lists, aligned with `parts`.
+///
+/// `ParallelMode::Sequential` runs the historical one-cluster-at-a-time
+/// loop. `ParallelMode::RoundBased` runs the speculative round protocol
+/// from the module docs on `workers` speculation slots (`0` = auto:
+/// `WINDGP_WORKERS` / available cores). Both modes — and every worker
+/// count — produce byte-identical results (differential suite).
+pub fn expand_clusters(
+    ex: &mut Expander<'_>,
+    parts: &[PartId],
+    deltas: &[u64],
+    params: &ExpandParams,
+    mode: ParallelMode,
+    workers: usize,
+) -> Vec<Vec<EId>> {
+    debug_assert_eq!(parts.len(), deltas.len());
+    if mode == ParallelMode::Sequential {
+        return parts
+            .iter()
+            .zip(deltas)
+            .map(|(&part, &delta)| ex.expand_partition(part, delta, params))
+            .collect();
+    }
+    // Speculation width: one slot per worker, capped by the cluster count.
+    // Inside a pool worker nested threads would only serialize, so the
+    // width drops to 1 — the output is invariant either way (every commit
+    // equals the sequential run of that cluster on the committed prefix).
+    let auto = if workers == 0 { pool::effective_workers(parts.len()) } else { workers };
+    let width = if pool::in_pool_worker() { 1 } else { auto.max(1).min(parts.len()) };
+    let mut results: Vec<Vec<EId>> = vec![Vec::new(); parts.len()];
+    if width <= 1 {
+        // degenerate protocol: one slot proposing against the committed
+        // state and committing immediately — no clone, no read tracking
+        for (k, (&part, &delta)) in parts.iter().zip(deltas).enumerate() {
+            let prop = ex.propose_partition(part, delta, params, false);
+            ex.apply_proposal(&prop);
+            results[k] = prop.edges;
+        }
+        return results;
+    }
+    let mut slots: Vec<Expander> = (0..width).map(|_| ex.clone()).collect();
+    let mut write_mark = vec![false; ex.g.num_vertices()];
+    let mut next = 0usize; // index into `parts` of the next cluster to commit
+    // proposals committed last round, still to be replayed onto the slots
+    // (the replay rides inside the parallel propose phase so the serial
+    // coordinator work per round stays O(committed edges), not O(width·m))
+    let mut pending: Vec<Proposal> = Vec::new();
+    while next < parts.len() {
+        let inflight = (parts.len() - next).min(slots.len());
+        slots.truncate(inflight.max(1));
+        // propose: each slot first rebases onto the committed state by
+        // replaying last round's winners (same order everywhere), then
+        // speculates cluster parts[next + j] against that snapshot
+        let rebase = std::mem::take(&mut pending);
+        let rebase_ref = &rebase;
+        let proposals: Vec<Proposal> = pool::parallel_map_mut(&mut slots[..inflight], |j, slot| {
+            for prop in rebase_ref {
+                slot.apply_proposal(prop);
+            }
+            slot.propose_partition(parts[next + j], deltas[next + j], params, j > 0)
+        });
+        // arbitrate: commit the contiguous valid prefix in machine-index
+        // order — the lowest in-flight cluster always wins; a higher one
+        // survives only if it observed nothing a lower commit wrote
+        let mut committed = 0usize;
+        let mut write_list: Vec<VId> = Vec::new();
+        for (j, prop) in proposals.iter().enumerate() {
+            let valid = j == 0 || prop.reads.iter().all(|&v| !write_mark[v as usize]);
+            if !valid {
+                break;
+            }
+            for &e in &prop.edges {
+                let (u, v) = ex.g.edge(e);
+                for w in [u, v] {
+                    if !write_mark[w as usize] {
+                        write_mark[w as usize] = true;
+                        write_list.push(w);
+                    }
+                }
+            }
+            committed += 1;
+        }
+        for &v in &write_list {
+            write_mark[v as usize] = false;
+        }
+        // commit behind the epoch barrier: the master applies the winners
+        // now; the slots replay the identical sequence at the start of the
+        // next propose phase, so every copy reaches the same committed
+        // state. Losers simply re-propose next round.
+        for prop in proposals.into_iter().take(committed) {
+            ex.apply_proposal(&prop);
+            results[next] = prop.edges.clone();
+            pending.push(prop);
+            next += 1;
+        }
+    }
+    results
 }
 
 #[cfg(test)]
@@ -775,6 +1096,91 @@ mod tests {
         ex.sweep_leftovers(&mut ep, &mut order);
         assert_eq!(ep.assignment, assignment);
         assert!(order.iter().all(|o| o.is_empty()));
+    }
+
+    #[test]
+    fn propose_rolls_back_to_pristine_state() {
+        let g = gen::erdos_renyi(150, 700, 6);
+        let cluster = big_mem_cluster(4);
+        let mut ex = Expander::new(&g, &cluster, 5);
+        let baseline_rdeg = ex.rdeg.clone();
+        let params = ExpandParams { alpha: 0.3, beta: 0.3 };
+        let prop = ex.propose_partition(0, 200, &params, true);
+        assert!(!prop.edges.is_empty());
+        assert!(!prop.reads.is_empty(), "read tracking must record the trace");
+        // state fully restored: assignment, degrees, working-graph windows
+        assert!(ex.assigned.iter().all(|&a| !a));
+        assert_eq!(ex.rdeg, baseline_rdeg);
+        for v in 0..g.num_vertices() as VId {
+            assert_eq!(ex.working().remaining_degree(v), baseline_rdeg[v as usize]);
+        }
+        assert!(ex.border.iter().all(|&b| !b), "borders must not leak from a proposal");
+        // every claimed endpoint is part of the read set (claims are reads)
+        for &e in &prop.edges {
+            let (u, v) = g.edge(e);
+            assert!(prop.reads.contains(&u) && prop.reads.contains(&v));
+        }
+    }
+
+    #[test]
+    fn propose_then_apply_equals_expand_partition() {
+        let g = crate::graph::rmat::generate(&crate::graph::rmat::RmatParams::graph500(9, 8), 2);
+        let cluster = big_mem_cluster(4);
+        let m = g.num_edges() as u64;
+        let params = ExpandParams { alpha: 0.3, beta: 0.3 };
+        let mut seq = Expander::new(&g, &cluster, 9);
+        let mut rb = Expander::new(&g, &cluster, 9);
+        for i in 0..4u32 {
+            let want = seq.expand_partition(i, m / 4 + 1, &params);
+            let prop = rb.propose_partition(i, m / 4 + 1, &params, true);
+            rb.apply_proposal(&prop);
+            assert_eq!(prop.edges, want, "partition {i} diverged");
+            assert_eq!(rb.assigned, seq.assigned, "assigned bits diverged after {i}");
+            assert_eq!(rb.border, seq.border, "border set diverged after {i}");
+            assert_eq!(rb.rdeg, seq.rdeg, "rdeg diverged after {i}");
+        }
+    }
+
+    #[test]
+    fn expand_clusters_round_based_matches_sequential_all_widths() {
+        let g = crate::graph::rmat::generate(&crate::graph::rmat::RmatParams::graph500(9, 8), 8);
+        let cluster = big_mem_cluster(8);
+        let m = g.num_edges() as u64;
+        let parts: Vec<PartId> = (0..8).collect();
+        let deltas = vec![m / 8 + 1; 8];
+        let params = ExpandParams { alpha: 0.3, beta: 0.3 };
+        let run = |mode: ParallelMode, workers: usize| {
+            let mut ex = Expander::new(&g, &cluster, 4);
+            let lists = expand_clusters(&mut ex, &parts, &deltas, &params, mode, workers);
+            (lists, ex.assigned.clone(), ex.border.clone())
+        };
+        let reference = run(ParallelMode::Sequential, 0);
+        for workers in [1usize, 2, 3, 8] {
+            let got = run(ParallelMode::RoundBased, workers);
+            assert_eq!(got, reference, "round-based diverged at workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn expand_clusters_handles_subset_of_machines() {
+        // the SLS re-partition path grows a *subset* of machine ids with
+        // their own deltas; both modes must agree on it too
+        let g = gen::erdos_renyi(300, 1800, 12);
+        let cluster = big_mem_cluster(8);
+        let m = g.num_edges();
+        let assigned: Vec<bool> = (0..m).map(|e| e % 3 == 0).collect();
+        let border = vec![false; g.num_vertices()];
+        let parts: Vec<PartId> = vec![1, 4, 6];
+        let deltas = vec![(m / 4) as u64; 3];
+        let params = ExpandParams { alpha: 0.3, beta: 0.3 };
+        let run = |mode: ParallelMode, workers: usize| {
+            let mut ex = Expander::with_state(&g, &cluster, assigned.clone(), border.clone(), 7);
+            expand_clusters(&mut ex, &parts, &deltas, &params, mode, workers)
+        };
+        let reference = run(ParallelMode::Sequential, 0);
+        for workers in [1usize, 2, 8] {
+            assert_eq!(run(ParallelMode::RoundBased, workers), reference, "workers {workers}");
+        }
     }
 
     #[test]

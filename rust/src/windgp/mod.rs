@@ -21,7 +21,7 @@ use crate::machines::Cluster;
 use crate::partition::{EdgePartition, Partitioner};
 
 pub use capacity::{capacities, exact_capacities_bruteforce};
-pub use expand::{ExpandParams, Expander};
+pub use expand::{expand_clusters, ExpandParams, Expander, ParallelMode};
 pub use sls::{SlsParams, SubgraphLocalSearch};
 
 /// Figure-8 ablation variants.
@@ -58,6 +58,15 @@ pub struct WindGPConfig {
     /// pipeline (performance knob only — output is byte-identical across
     /// policies, see `graph::working`)
     pub compact: CompactPolicy,
+    /// expansion scheduling for every expansion in the pipeline (initial
+    /// growth AND the SLS re-partition resume path). Performance knob
+    /// only: `RoundBased` output is byte-identical to `Sequential` at any
+    /// worker count (see `windgp::expand` module docs + the differential
+    /// suite).
+    pub parallel: ParallelMode,
+    /// speculation slots for `ParallelMode::RoundBased`; 0 = auto
+    /// (`WINDGP_WORKERS` override, else available cores)
+    pub workers: usize,
 }
 
 impl Default for WindGPConfig {
@@ -72,6 +81,8 @@ impl Default for WindGPConfig {
             k: 3,
             variant: Variant::Full,
             compact: CompactPolicy::default(),
+            parallel: ParallelMode::default(),
+            workers: 0,
         }
     }
 }
@@ -130,13 +141,13 @@ impl Partitioner for WindGP {
         };
         let mut ex = Expander::new_with_policy(g, cluster, seed, cfg.compact);
         let mut ep = EdgePartition::unassigned(g, p);
-        let mut order: Vec<Vec<u32>> = Vec::with_capacity(p);
-        for i in 0..p {
-            let edges = ex.expand_partition(i as u32, deltas[i], &params);
-            for &e in &edges {
+        let parts: Vec<u32> = (0..p as u32).collect();
+        let mut order =
+            expand_clusters(&mut ex, &parts, &deltas, &params, cfg.parallel, cfg.workers);
+        for (i, edges) in order.iter().enumerate() {
+            for &e in edges {
                 ep.assignment[e as usize] = i as u32;
             }
-            order.push(edges);
         }
         // Any edges still unassigned (capacity rounding, memory cut-offs):
         // sweep them into machines with slack, preferring endpoint owners.
@@ -154,6 +165,8 @@ impl Partitioner for WindGP {
                 beta: cfg.beta,
                 objective: crate::windgp::sls::Objective::MaxTotal,
                 compact: cfg.compact,
+                parallel: cfg.parallel,
+                workers: cfg.workers,
             };
             let mut sls = SubgraphLocalSearch::new(g, cluster, ep, order, deltas.clone(), seed);
             sls.run(&slsp);

@@ -21,7 +21,7 @@ use crate::machines::Cluster;
 use crate::partition::{CostTracker, EdgePartition, PartId, UNASSIGNED};
 use crate::util::SplitMix64;
 
-use super::expand::{ExpandParams, Expander};
+use super::expand::{expand_clusters, ExpandParams, Expander, ParallelMode};
 
 /// Which cost the post-processing minimizes (§4: Map-Reduce engines such
 /// as GraphX/Giraph barrier all computation before any communication, so
@@ -54,6 +54,12 @@ pub struct SlsParams {
     pub objective: Objective,
     /// working-graph compaction policy for re-partition expansions
     pub compact: CompactPolicy,
+    /// expansion scheduling for the Algorithm-7 re-partition resume path
+    /// (byte-identical across modes and worker counts — see
+    /// `windgp::expand`)
+    pub parallel: ParallelMode,
+    /// speculation slots for `ParallelMode::RoundBased`; 0 = auto
+    pub workers: usize,
 }
 
 impl Default for SlsParams {
@@ -68,6 +74,8 @@ impl Default for SlsParams {
             beta: 0.3,
             objective: Objective::default(),
             compact: CompactPolicy::default(),
+            parallel: ParallelMode::default(),
+            workers: 0,
         }
     }
 }
@@ -320,11 +328,16 @@ impl<'a> SubgraphLocalSearch<'a> {
         let mut ex =
             Expander::with_state_policy(self.g, self.cluster, assigned, border, seed, p.compact);
         let params = ExpandParams { alpha: p.alpha, beta: p.beta };
-        for &i in &selected {
-            let edges = ex.expand_partition(i as PartId, self.deltas[i], &params);
-            for &e in &edges {
-                self.tracker.add_edge(e, i as PartId);
-            }
+        // the freed machines re-expand through the same engine as the
+        // initial growth — round-based when configured, with the same
+        // byte-identity guarantee; tracker updates take the batched path
+        // (one membership update per distinct endpoint) in both modes
+        let sel_parts: Vec<PartId> = selected.iter().map(|&i| i as PartId).collect();
+        let sel_deltas: Vec<u64> = selected.iter().map(|&i| self.deltas[i]).collect();
+        let lists =
+            expand_clusters(&mut ex, &sel_parts, &sel_deltas, &params, p.parallel, p.workers);
+        for (&i, edges) in selected.iter().zip(lists) {
+            self.tracker.add_edges(i as PartId, &edges);
             self.order[i] = edges;
         }
         // leftovers (memory cut-offs during re-expansion) go greedy

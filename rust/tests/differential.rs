@@ -1,23 +1,31 @@
-//! Differential suite for the working-graph compaction subsystem.
+//! Differential suite for the working-graph compaction subsystem and the
+//! round-based parallel expansion engine.
 //!
-//! The epoch-compacted engine must be a pure *performance* change:
-//! compaction is stable (unassigned adjacency entries keep their original
-//! relative order), so every [`CompactPolicy`] — including `Never`, which
-//! scans the full static CSR windows exactly like the pre-compaction
-//! engine — must produce **byte-identical** `EdgePartition.assignment`
-//! vectors for fixed seeds. These tests pin that across:
+//! Both subsystems must be pure *performance* changes:
 //!
-//!   - Erdős–Rényi and R-MAT inputs, several seeds each;
-//!   - every compaction threshold (`Never` = the untouched slow path,
-//!     `Always` = compact every step, `Halving` = the default);
-//!   - the expansion-only pipeline (expand + leftover sweep) and the full
-//!     WindGP `Variant::Full` pass (capacities + expansion + SLS with its
-//!     re-partition resume path).
+//!   - compaction is stable (unassigned adjacency entries keep their
+//!     original relative order), so every [`CompactPolicy`] — including
+//!     `Never`, which scans the full static CSR windows exactly like the
+//!     pre-compaction engine — must produce **byte-identical**
+//!     `EdgePartition.assignment` vectors for fixed seeds;
+//!   - round-based parallel expansion commits clusters in machine-index
+//!     order with read/write-set arbitration, so `ParallelMode::RoundBased`
+//!     must be **byte-identical to `Sequential` and invariant across
+//!     `WINDGP_WORKERS` ∈ {1, 2, 8}** — determinism comes from the
+//!     arbitration order, never from thread scheduling.
+//!
+//! Pinned across Erdős–Rényi and R-MAT inputs (several seeds each), the
+//! expansion-only pipeline (expand + leftover sweep), the SLS-resume path
+//! (`Expander::with_state*` on a partially-assigned graph), and the full
+//! WindGP `Variant::Full` pass (capacities + expansion + SLS with its
+//! re-partition resume).
 
 use windgp::graph::{gen, rmat, CompactPolicy, Graph};
 use windgp::machines::{Cluster, Machine};
 use windgp::partition::{EdgePartition, PartId, Partitioner};
-use windgp::windgp::{ExpandParams, Expander, Variant, WindGP, WindGPConfig};
+use windgp::windgp::{
+    expand_clusters, ExpandParams, Expander, ParallelMode, Variant, WindGP, WindGPConfig,
+};
 
 fn test_graphs() -> Vec<(String, Graph)> {
     let mut graphs = Vec::new();
@@ -41,25 +49,36 @@ fn cluster8() -> Cluster {
     Cluster::new(vec![Machine::new(u64::MAX / 8, 1.0, 1.0, 1.0); 8])
 }
 
-/// Expansion-only pipeline at an explicit policy: p partitions grown to
-/// |E|/p + 1, leftovers swept.
-fn expand_pipeline(g: &Graph, cluster: &Cluster, seed: u64, policy: CompactPolicy) -> Vec<PartId> {
+/// Expansion-only pipeline at an explicit policy + scheduling mode:
+/// p partitions grown to |E|/p + 1, leftovers swept.
+fn expand_pipeline_mode(
+    g: &Graph,
+    cluster: &Cluster,
+    seed: u64,
+    policy: CompactPolicy,
+    mode: ParallelMode,
+    workers: usize,
+) -> Vec<PartId> {
     let p = cluster.len();
     let m = g.num_edges() as u64;
     let mut ex = Expander::new_with_policy(g, cluster, seed, policy);
     let mut ep = EdgePartition::unassigned(g, p);
-    let mut order = vec![Vec::new(); p];
+    let parts: Vec<PartId> = (0..p as PartId).collect();
+    let deltas = vec![m / p as u64 + 1; p];
     let params = ExpandParams { alpha: 0.3, beta: 0.3 };
-    for i in 0..p {
-        let edges = ex.expand_partition(i as u32, m / p as u64 + 1, &params);
-        for &e in &edges {
+    let mut order = expand_clusters(&mut ex, &parts, &deltas, &params, mode, workers);
+    for (i, edges) in order.iter().enumerate() {
+        for &e in edges {
             ep.assignment[e as usize] = i as u32;
         }
-        order[i] = edges;
     }
     ex.sweep_leftovers(&mut ep, &mut order);
     assert!(ep.is_complete(), "expansion pipeline left edges unassigned");
     ep.assignment
+}
+
+fn expand_pipeline(g: &Graph, cluster: &Cluster, seed: u64, policy: CompactPolicy) -> Vec<PartId> {
+    expand_pipeline_mode(g, cluster, seed, policy, ParallelMode::Sequential, 0)
 }
 
 #[test]
@@ -135,6 +154,112 @@ fn resumed_expander_byte_identical_across_policies() {
     for policy in [CompactPolicy::Always, CompactPolicy::Halving] {
         assert_eq!(run(policy), reference, "resume path diverged at {policy:?}");
     }
+}
+
+#[test]
+fn round_based_expansion_byte_identical_to_sequential_across_worker_counts() {
+    // the tentpole contract: RoundBased == Sequential, bit for bit, at
+    // every speculation width — ER + R-MAT × seeds, expansion + sweep
+    let cluster = cluster8();
+    for (name, g) in test_graphs() {
+        for seed in [3u64, 11] {
+            let reference = expand_pipeline(&g, &cluster, seed, CompactPolicy::Halving);
+            for workers in [1usize, 2, 8] {
+                let got = expand_pipeline_mode(
+                    &g,
+                    &cluster,
+                    seed,
+                    CompactPolicy::Halving,
+                    ParallelMode::RoundBased,
+                    workers,
+                );
+                assert_eq!(
+                    got, reference,
+                    "{name} seed {seed}: round-based diverged at {workers} workers"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn round_based_resume_path_byte_identical_to_sequential() {
+    // SLS-resume shape in isolation: a partially-assigned working graph
+    // (Expander::with_state) re-expanding a subset of machine ids
+    let g = rmat::generate(&rmat::RmatParams::graph500(10, 8), 5);
+    let cluster = cluster8();
+    let m = g.num_edges();
+    let assigned: Vec<bool> = (0..m).map(|e| e % 4 == 0).collect();
+    let mut border = vec![false; g.num_vertices()];
+    for v in 0..g.num_vertices() {
+        border[v] = v % 7 == 0; // some pre-existing borders influence β
+    }
+    let parts: Vec<PartId> = vec![0, 3, 5, 7];
+    let deltas = vec![(m / 5) as u64; 4];
+    let params = ExpandParams { alpha: 0.3, beta: 0.3 };
+    let run = |mode: ParallelMode, workers: usize| {
+        let mut ex = Expander::with_state(&g, &cluster, assigned.clone(), border.clone(), 17);
+        let lists = expand_clusters(&mut ex, &parts, &deltas, &params, mode, workers);
+        (lists, ex.border.clone())
+    };
+    let reference = run(ParallelMode::Sequential, 0);
+    for workers in [1usize, 2, 8] {
+        assert_eq!(
+            run(ParallelMode::RoundBased, workers),
+            reference,
+            "resume path diverged at {workers} workers"
+        );
+    }
+}
+
+#[test]
+fn full_windgp_round_based_byte_identical_to_sequential() {
+    // Variant::Full routes ParallelMode through the initial expansion AND
+    // the SLS re-partition resume (SlsParams.parallel); the whole pipeline
+    // must agree bit-for-bit at every worker count
+    for (name, g) in test_graphs() {
+        let cluster = Cluster::heterogeneous_small(3, 5, g.num_edges() as f64 / 2.0e6);
+        for seed in [5u64, 23] {
+            let run = |mode: ParallelMode, workers: usize| {
+                let cfg = WindGPConfig {
+                    variant: Variant::Full,
+                    parallel: mode,
+                    workers,
+                    ..Default::default()
+                };
+                let ep = WindGP::new(cfg).partition(&g, &cluster, seed);
+                assert!(ep.is_complete(), "{name} seed {seed}: incomplete at {mode:?}");
+                ep.assignment
+            };
+            let reference = run(ParallelMode::Sequential, 0);
+            for workers in [1usize, 2, 8] {
+                assert_eq!(
+                    run(ParallelMode::RoundBased, workers),
+                    reference,
+                    "{name} seed {seed}: full WindGP diverged at {workers} workers"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn round_based_respects_windgp_workers_env_auto_width() {
+    // workers = 0 resolves through WINDGP_WORKERS; the output must be
+    // invariant regardless of what the env resolves to (the CI matrix
+    // runs the whole suite under WINDGP_WORKERS=1 and =4)
+    let g = gen::erdos_renyi(400, 2400, 9);
+    let cluster = cluster8();
+    let auto = expand_pipeline_mode(
+        &g,
+        &cluster,
+        2,
+        CompactPolicy::Halving,
+        ParallelMode::RoundBased,
+        0,
+    );
+    let sequential = expand_pipeline(&g, &cluster, 2, CompactPolicy::Halving);
+    assert_eq!(auto, sequential, "auto-width round-based diverged from sequential");
 }
 
 #[test]
