@@ -34,6 +34,8 @@ ASSERTED = [
     "expand/partition-parallel",
     "expand/partition-parallel-w1",
     "sls/destroy-repair",
+    "sls/destroy-repair-parallel",
+    "sls/destroy-repair-parallel-w1",
     "sls/full",
 ]
 

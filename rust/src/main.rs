@@ -424,6 +424,30 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
                 s.destroy_repair(&slsp);
             }
         }));
+        // round-based parallel repair vs the sequential loop above: same
+        // instance, byte-identical output — the entry pair the CI bench
+        // gate watches for the SLS phase. The -w1 control runs the
+        // degenerate protocol (propose/rollback/replay on the committed
+        // tracker, no clones), isolating protocol overhead from speedup.
+        let run_parallel_sls = |workers: usize| {
+            let slsp = SlsParams {
+                theta: 0.05,
+                gamma: 0.5,
+                parallel: ParallelMode::RoundBased,
+                workers,
+                ..Default::default()
+            };
+            let mut s = sls0.clone();
+            for _ in 0..5 {
+                s.destroy_repair(&slsp);
+            }
+        };
+        results.push(bench("sls/destroy-repair-parallel", samples, || {
+            run_parallel_sls(0)
+        }));
+        results.push(bench("sls/destroy-repair-parallel-w1", samples, || {
+            run_parallel_sls(1)
+        }));
         results.push(bench("sls/full", samples, || {
             let mut s = sls0.clone();
             s.run(&SlsParams { t0: 10, theta: 0.05, gamma: 0.5, ..Default::default() });

@@ -12,7 +12,7 @@ pub mod metrics;
 pub mod tracker;
 
 pub use metrics::{CostReport, Metrics};
-pub use tracker::CostTracker;
+pub use tracker::{CostTracker, RepairArbiter, RepairProposal, RepairScratch};
 
 use crate::graph::{EId, Graph};
 use crate::machines::Cluster;

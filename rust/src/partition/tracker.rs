@@ -461,6 +461,13 @@ impl<'a> CostTracker<'a> {
     /// `None` when no candidate qualifies — the paper's `i = 0` failure
     /// signal. Shared by the SLS repair ladder and the expansion
     /// leftover sweep so every greedy placement uses one comparator.
+    ///
+    /// NaN-consistent: eligibility is `ti < thd`, which a NaN T_i never
+    /// satisfies — a machine with meaningless cost is skipped at every
+    /// rung (the old `ti >= thd` skip let NaN through, where it could
+    /// capture `best` and then never be displaced, handing destroyed
+    /// edges straight back to the broken machine). NaN machines remain
+    /// reachable only through the [`Self::max_slack_part`] fallback.
     pub fn best_feasible_min_t(&self, e: EId, cands: &[PartId], thd: f64) -> Option<PartId> {
         let mut best: Option<(PartId, f64)> = None;
         for &i in cands {
@@ -469,7 +476,7 @@ impl<'a> CostTracker<'a> {
                 continue;
             }
             let ti = self.t(i as usize);
-            if ti >= thd {
+            if ti.is_nan() || ti >= thd {
                 continue;
             }
             if best.map_or(true, |(_, bt)| ti < bt) {
@@ -497,6 +504,185 @@ impl<'a> CostTracker<'a> {
         best as PartId
     }
 
+    /// The Algorithm-6 repair ladder for one unassigned edge `e`: machines
+    /// holding *both* endpoints, then *either*, then anywhere below `thd`,
+    /// then anywhere feasible, then the max-slack fallback. The `either`
+    /// rung is S(u) followed by S(v) \ S(u) — the historical candidate
+    /// order the byte-identity contracts pin. Returns `(target, bottomed)`
+    /// where `bottomed` is true when the decision fell past the endpoint
+    /// rungs and consulted **every** machine (rungs 3+ or the fallback) —
+    /// the parallel repair protocol needs that distinction for its read
+    /// sets. Shared by the sequential SLS repair loop and
+    /// [`Self::propose_repair`] so both ride one decision procedure.
+    pub fn repair_target(
+        &self,
+        e: EId,
+        thd: f64,
+        all_parts: &[PartId],
+        both: &mut Vec<PartId>,
+        either: &mut Vec<PartId>,
+    ) -> (PartId, bool) {
+        let (u, v) = self.g.edge(e);
+        both.clear();
+        either.clear();
+        self.common_parts(u, v, both);
+        {
+            let su = self.replica_entries(u);
+            let sv = self.replica_entries(v);
+            either.extend(su.iter().map(|&(q, _)| q));
+            for &(pv, _) in sv {
+                if su.binary_search_by_key(&pv, |&(q, _)| q).is_err() {
+                    either.push(pv);
+                }
+            }
+        }
+        if let Some(t) = self.best_feasible_min_t(e, both, thd) {
+            return (t, false);
+        }
+        if let Some(t) = self.best_feasible_min_t(e, either, thd) {
+            return (t, false);
+        }
+        let t = self
+            .best_feasible_min_t(e, all_parts, thd)
+            .or_else(|| self.best_feasible_min_t(e, all_parts, f64::INFINITY))
+            .unwrap_or_else(|| self.max_slack_part());
+        (t, true)
+    }
+
+    /// Speculatively repair a batch of currently-unassigned edges against
+    /// this tracker's state and roll back, returning the decisions plus the
+    /// conservative read/write sets the round-based SLS protocol arbitrates
+    /// with (see `windgp::sls`). Decisions within the batch see earlier
+    /// in-batch repairs, exactly like the sequential loop over the same
+    /// slice. On return the tracker is **bit-identical** to its state at
+    /// entry: integer aggregates and `t_com` are restored from wholesale
+    /// snapshots (IEEE `a + x - x` need not equal `a`, so float deltas are
+    /// never "subtracted back"), and replica sets from per-touch
+    /// pre-images. Snapshot cost is O(p²) for the `n_{i,j}` matrix —
+    /// negligible at the machine counts the paper targets.
+    ///
+    /// `record_reads = false` skips read-set bookkeeping (the round's
+    /// lowest in-flight batch commits unconditionally); write sets are
+    /// always recorded because later batches arbitrate against them.
+    pub fn propose_repair(
+        &mut self,
+        edges: &[EId],
+        thd: f64,
+        all_parts: &[PartId],
+        record_reads: bool,
+        s: &mut RepairScratch,
+    ) -> RepairProposal {
+        let n = self.g.num_vertices();
+        if s.vmark.len() < n {
+            s.vmark.resize(n, false);
+        }
+        if s.mmark_r.len() < self.p {
+            s.mmark_r.resize(self.p, false);
+            s.mmark_w.resize(self.p, false);
+        }
+        s.saved_t_com.clear();
+        s.saved_t_com.extend_from_slice(&self.t_com);
+        s.saved_v_count.clear();
+        s.saved_v_count.extend_from_slice(&self.v_count);
+        s.saved_e_count.clear();
+        s.saved_e_count.extend_from_slice(&self.e_count);
+        s.saved_nij.clear();
+        s.saved_nij.extend_from_slice(&self.nij);
+        debug_assert!(s.undo_replicas.is_empty());
+
+        let mut prop = RepairProposal {
+            targets: Vec::with_capacity(edges.len()),
+            reads_v: Vec::new(),
+            reads_m: Vec::new(),
+            reads_all_m: false,
+            writes_m: Vec::new(),
+        };
+        for &e in edges {
+            debug_assert_eq!(self.assignment[e as usize], UNASSIGNED);
+            let (u, v) = self.g.edge(e);
+            if record_reads {
+                for w in [u, v] {
+                    if !s.vmark[w as usize] {
+                        s.vmark[w as usize] = true;
+                        prop.reads_v.push(w);
+                    }
+                }
+            }
+            let (target, bottomed) = {
+                let (both, either) = (&mut s.both, &mut s.either);
+                self.repair_target(e, thd, all_parts, both, either)
+            };
+            if record_reads {
+                if bottomed {
+                    prop.reads_all_m = true;
+                } else {
+                    // every machine whose T_i / slack the ladder could have
+                    // probed: the union rung (a superset of the both rung)
+                    for &q in s.either.iter() {
+                        if !s.mmark_r[q as usize] {
+                            s.mmark_r[q as usize] = true;
+                            prop.reads_m.push(q);
+                        }
+                    }
+                }
+            }
+            // pre-images before the apply; duplicates are fine because the
+            // rollback restores in reverse (earliest snapshot wins)
+            s.undo_replicas.push((u, self.replicas[u as usize].clone()));
+            s.undo_replicas.push((v, self.replicas[v as usize].clone()));
+            self.add_edge(e, target);
+            // a commit writes the target's counts plus the T_com of every
+            // machine now sharing an endpoint (conservative: membership
+            // growth perturbs the whole replica set's com terms)
+            if !s.mmark_w[target as usize] {
+                s.mmark_w[target as usize] = true;
+                prop.writes_m.push(target);
+            }
+            for w in [u, v] {
+                for &(q, _) in self.replicas[w as usize].as_slice() {
+                    if !s.mmark_w[q as usize] {
+                        s.mmark_w[q as usize] = true;
+                        prop.writes_m.push(q);
+                    }
+                }
+            }
+            prop.targets.push((e, target));
+        }
+
+        // clear the dedup marks
+        for &w in &prop.reads_v {
+            s.vmark[w as usize] = false;
+        }
+        for &q in &prop.reads_m {
+            s.mmark_r[q as usize] = false;
+        }
+        for &q in &prop.writes_m {
+            s.mmark_w[q as usize] = false;
+        }
+        // exact rollback: assignment slots, replica pre-images (reverse),
+        // machine aggregates wholesale
+        for &(e, _) in prop.targets.iter().rev() {
+            self.assignment[e as usize] = UNASSIGNED;
+        }
+        for (v, set) in s.undo_replicas.drain(..).rev() {
+            self.replicas[v as usize] = set;
+        }
+        self.t_com.copy_from_slice(&s.saved_t_com);
+        self.v_count.copy_from_slice(&s.saved_v_count);
+        self.e_count.copy_from_slice(&s.saved_e_count);
+        self.nij.copy_from_slice(&s.saved_nij);
+        prop
+    }
+
+    /// Replay a committed repair batch: per-edge [`Self::add_edge`] in
+    /// batch order, so the float accumulation is bit-identical to the
+    /// sequential repair loop placing the same edges.
+    pub fn apply_repairs(&mut self, targets: &[(EId, PartId)]) {
+        for &(e, part) in targets {
+            self.add_edge(e, part);
+        }
+    }
+
     #[inline]
     pub fn nij(&self, i: usize, j: usize) -> u64 {
         self.nij[i * self.p + j]
@@ -510,6 +696,117 @@ impl<'a> CostTracker<'a> {
     /// From-scratch report (for validation / final output).
     pub fn report(&self) -> CostReport {
         Metrics::new(self.g, self.cluster).report(&self.to_partition())
+    }
+}
+
+/// Decisions plus conflict sets from one speculative
+/// [`CostTracker::propose_repair`] batch — what the round-based SLS
+/// protocol (`windgp::sls`) arbitrates and replays.
+#[derive(Clone, Debug, Default)]
+pub struct RepairProposal {
+    /// `(edge, machine)` placements in batch order.
+    pub targets: Vec<(EId, PartId)>,
+    /// Vertices whose replica sets the decisions depended on (the batch
+    /// edges' endpoints, deduplicated).
+    pub reads_v: Vec<u32>,
+    /// Machines whose `T_i` / memory slack the endpoint rungs probed.
+    pub reads_m: Vec<PartId>,
+    /// True when some ladder decision fell past the endpoint rungs and
+    /// consulted every machine (the `all`-candidates rungs or the
+    /// max-slack fallback) — arbitration treats this as reading all p.
+    pub reads_all_m: bool,
+    /// Machines whose aggregates the batch mutates: each target plus every
+    /// machine sharing one of its endpoints post-placement (membership
+    /// growth perturbs the whole replica set's T_com terms).
+    pub writes_m: Vec<PartId>,
+}
+
+/// Reusable buffers for [`CostTracker::propose_repair`]: candidate-rung
+/// scratch, dedup marks, the replica pre-image log and the wholesale
+/// aggregate snapshots backing the bit-exact rollback. `Default` is the
+/// only constructor; buffers size themselves lazily on first use.
+#[derive(Clone, Default)]
+pub struct RepairScratch {
+    both: Vec<PartId>,
+    either: Vec<PartId>,
+    vmark: Vec<bool>,
+    mmark_r: Vec<bool>,
+    mmark_w: Vec<bool>,
+    undo_replicas: Vec<(u32, ReplicaSet)>,
+    saved_t_com: Vec<f64>,
+    saved_v_count: Vec<u64>,
+    saved_e_count: Vec<u64>,
+    saved_nij: Vec<u64>,
+}
+
+/// Read/write-set arbitration for the round-based SLS repair protocol:
+/// tracks the vertices and machines written by batches committed earlier
+/// in the current round, so a later batch's proposal is valid iff its
+/// recorded reads are disjoint from them — a valid proposal observed
+/// nothing a lower-index commit changed, hence its speculative decisions
+/// replay the exact sequential trace.
+pub struct RepairArbiter {
+    vmark: Vec<bool>,
+    mmark: Vec<bool>,
+    any_m: bool,
+    dirty_v: Vec<u32>,
+    dirty_m: Vec<PartId>,
+}
+
+impl RepairArbiter {
+    pub fn new(num_vertices: usize, p: usize) -> Self {
+        Self {
+            vmark: vec![false; num_vertices],
+            mmark: vec![false; p],
+            any_m: false,
+            dirty_v: Vec::new(),
+            dirty_m: Vec::new(),
+        }
+    }
+
+    /// Forget the previous round's commits.
+    pub fn begin_round(&mut self) {
+        for &v in &self.dirty_v {
+            self.vmark[v as usize] = false;
+        }
+        for &q in &self.dirty_m {
+            self.mmark[q as usize] = false;
+        }
+        self.dirty_v.clear();
+        self.dirty_m.clear();
+        self.any_m = false;
+    }
+
+    /// Would `prop`'s recorded reads observe anything a batch committed
+    /// earlier this round wrote?
+    pub fn conflicts(&self, prop: &RepairProposal) -> bool {
+        if prop.reads_all_m && self.any_m {
+            return true;
+        }
+        prop.reads_v.iter().any(|&v| self.vmark[v as usize])
+            || prop.reads_m.iter().any(|&q| self.mmark[q as usize])
+    }
+
+    /// Fold a committed batch's writes into the round's conflict sets:
+    /// its written machines plus its edges' endpoint vertices (whose
+    /// replica sets the placements grow).
+    pub fn note_commit(&mut self, g: &Graph, prop: &RepairProposal) {
+        for &(e, _) in &prop.targets {
+            let (u, v) = g.edge(e);
+            for w in [u, v] {
+                if !self.vmark[w as usize] {
+                    self.vmark[w as usize] = true;
+                    self.dirty_v.push(w);
+                }
+            }
+        }
+        for &q in &prop.writes_m {
+            if !self.mmark[q as usize] {
+                self.mmark[q as usize] = true;
+                self.dirty_m.push(q);
+            }
+        }
+        self.any_m = self.any_m || !prop.writes_m.is_empty();
     }
 }
 
@@ -807,5 +1104,128 @@ mod tests {
         assert_eq!(t.best_feasible_min_t(3, &cands, f64::INFINITY), Some(1));
         // threshold below every T_i -> the paper's failure signal
         assert_eq!(t.best_feasible_min_t(3, &cands, f64::NEG_INFINITY), None);
+    }
+
+    #[test]
+    fn best_feasible_min_t_skips_nan_cost_machines() {
+        // a NaN T_i must never qualify at any threshold — the old
+        // `ti >= thd` skip let NaN through, where it captured `best` and
+        // could never be displaced (nothing compares < NaN)
+        let g = gen::clique(4);
+        let cluster = Cluster::new(vec![
+            Machine::new(1000, f64::NAN, 2.0, 1.0), // NaN T_0 once loaded
+            Machine::new(1000, 0.0, 1.0, 1.0),
+        ]);
+        let ep = EdgePartition::from_assignment(
+            2,
+            vec![0, 0, 1, UNASSIGNED, UNASSIGNED, UNASSIGNED],
+        );
+        let t = CostTracker::new(&g, &cluster, &ep);
+        assert!(t.t(0).is_nan());
+        let cands: Vec<PartId> = vec![0, 1];
+        assert_eq!(t.best_feasible_min_t(3, &cands, f64::INFINITY), Some(1));
+        assert_eq!(t.best_feasible_min_t(3, &[0], f64::INFINITY), None);
+    }
+
+    #[test]
+    fn propose_repair_rolls_back_bit_exact_and_matches_sequential_ladder() {
+        // the round-based SLS protocol's two contracts: (1) a speculative
+        // propose leaves the tracker bit-identical to its entry state;
+        // (2) propose + apply reproduces, bit for bit, the sequential
+        // repair_target/add_edge loop over the same batch
+        let g = gen::erdos_renyi(80, 300, 9);
+        let cluster = Cluster::new(vec![
+            Machine::new(1_000_000, 1.0, 2.0, 1.0),
+            Machine::new(500_000, 2.0, 3.0, 2.0),
+            Machine::new(250_000, 0.5, 1.0, 4.0),
+            Machine::new(1_000_000, 1.0, 1.0, 1.0),
+        ]);
+        let mut ep = EdgePartition::unassigned(&g, 4);
+        let mut rng = SplitMix64::new(5);
+        for e in 0..g.num_edges() {
+            ep.assignment[e] = rng.next_usize(4) as PartId;
+        }
+        let mut t = CostTracker::new(&g, &cluster, &ep);
+        let removed: Vec<EId> =
+            (0..g.num_edges() as EId).filter(|e| e % 5 == 0).collect();
+        for &e in &removed {
+            t.remove_edge(e);
+        }
+        let all_parts: Vec<PartId> = (0..4).collect();
+        // a threshold below the hottest machine so some rungs fail and
+        // the ladder exercises both the endpoint and the all-parts arms
+        let thd = (0..4).map(|i| t.t(i)).fold(f64::NEG_INFINITY, f64::max) * 0.9;
+
+        let pre_assign = t.assignment.clone();
+        let pre_bits: Vec<u64> = (0..4).map(|i| t.t_com(i).to_bits()).collect();
+        let pre_v = t.v_count.clone();
+        let pre_e = t.e_count.clone();
+        let mut s = RepairScratch::default();
+        let prop = t.propose_repair(&removed, thd, &all_parts, true, &mut s);
+        assert_eq!(t.assignment, pre_assign, "rollback must restore assignment");
+        assert_eq!(
+            (0..4).map(|i| t.t_com(i).to_bits()).collect::<Vec<_>>(),
+            pre_bits,
+            "rollback must restore T_com bit-for-bit"
+        );
+        assert_eq!(t.v_count, pre_v);
+        assert_eq!(t.e_count, pre_e);
+        check_consistency(&g, &cluster, &t);
+
+        // sequential reference over the same batch
+        let mut seq = t.clone();
+        let (mut both, mut either) = (Vec::new(), Vec::new());
+        let mut seq_targets: Vec<(EId, PartId)> = Vec::new();
+        for &e in &removed {
+            let (tgt, _) = seq.repair_target(e, thd, &all_parts, &mut both, &mut either);
+            seq.add_edge(e, tgt);
+            seq_targets.push((e, tgt));
+        }
+        assert_eq!(prop.targets, seq_targets, "speculative decisions diverged");
+        t.apply_repairs(&prop.targets);
+        assert_eq!(t.assignment, seq.assignment);
+        for i in 0..4 {
+            assert_eq!(
+                t.t_com(i).to_bits(),
+                seq.t_com(i).to_bits(),
+                "apply_repairs must replay the exact float accumulation"
+            );
+        }
+        check_consistency(&g, &cluster, &t);
+
+        // the recorded conflict sets cover the decision inputs
+        for &(e, tgt) in &prop.targets {
+            let (u, v) = g.edge(e);
+            assert!(prop.reads_v.contains(&u) && prop.reads_v.contains(&v));
+            assert!(prop.writes_m.contains(&tgt));
+        }
+    }
+
+    #[test]
+    fn repair_arbiter_flags_read_write_overlap() {
+        let g = gen::erdos_renyi(20, 40, 2);
+        let mut arb = RepairArbiter::new(g.num_vertices(), 3);
+        let committed = RepairProposal {
+            targets: vec![(0, 1)],
+            writes_m: vec![1],
+            ..Default::default()
+        };
+        arb.begin_round();
+        arb.note_commit(&g, &committed);
+        let (u, v) = g.edge(0);
+        let far = (0..20u32).find(|&x| x != u && x != v).unwrap();
+        let machine_read = RepairProposal { reads_m: vec![1], ..Default::default() };
+        assert!(arb.conflicts(&machine_read), "written machine must conflict");
+        let vertex_read = RepairProposal { reads_v: vec![u], ..Default::default() };
+        assert!(arb.conflicts(&vertex_read), "written endpoint must conflict");
+        let all_probe = RepairProposal { reads_all_m: true, ..Default::default() };
+        assert!(arb.conflicts(&all_probe), "all-machine probe conflicts with any write");
+        let disjoint =
+            RepairProposal { reads_m: vec![2], reads_v: vec![far], ..Default::default() };
+        assert!(!arb.conflicts(&disjoint), "disjoint reads must pass");
+        arb.begin_round();
+        assert!(!arb.conflicts(&machine_read));
+        assert!(!arb.conflicts(&vertex_read));
+        assert!(!arb.conflicts(&all_probe));
     }
 }

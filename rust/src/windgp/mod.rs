@@ -58,11 +58,12 @@ pub struct WindGPConfig {
     /// pipeline (performance knob only — output is byte-identical across
     /// policies, see `graph::working`)
     pub compact: CompactPolicy,
-    /// expansion scheduling for every expansion in the pipeline (initial
-    /// growth AND the SLS re-partition resume path). Performance knob
-    /// only: `RoundBased` output is byte-identical to `Sequential` at any
-    /// worker count (see `windgp::expand` module docs + the differential
-    /// suite).
+    /// scheduling for every parallelizable stage in the pipeline: initial
+    /// expansion growth, the SLS destroy/repair refinement, and the SLS
+    /// re-partition resume path. Performance knob only: `RoundBased`
+    /// output is byte-identical to `Sequential` at any worker count (see
+    /// the `windgp::expand` / `windgp::sls` module docs + the
+    /// differential suite).
     pub parallel: ParallelMode,
     /// speculation slots for `ParallelMode::RoundBased`; 0 = auto
     /// (`WINDGP_WORKERS` override, else available cores)

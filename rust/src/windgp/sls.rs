@@ -15,10 +15,19 @@
 //!
 //! The main loop (Algorithm 4) runs `T0` global tries and keeps the best
 //! assignment seen, so SLS never returns something worse than its input.
+//!
+//! Under [`ParallelMode::RoundBased`] the repair phase runs the same
+//! speculative-propose / deterministic-arbitrate / epoch-commit protocol
+//! as the expansion engine (see [`SubgraphLocalSearch::repair_round_based`]
+//! and `CostTracker::propose_repair`) — a pure performance knob whose
+//! output is byte-identical to `Sequential` at any worker count.
 
+use crate::coordinator::pool;
 use crate::graph::{CompactPolicy, EId, Graph};
 use crate::machines::Cluster;
-use crate::partition::{CostTracker, EdgePartition, PartId, UNASSIGNED};
+use crate::partition::{
+    CostTracker, EdgePartition, PartId, RepairArbiter, RepairProposal, RepairScratch, UNASSIGNED,
+};
 use crate::util::SplitMix64;
 
 use super::expand::{expand_clusters, ExpandParams, Expander, ParallelMode};
@@ -54,9 +63,10 @@ pub struct SlsParams {
     pub objective: Objective,
     /// working-graph compaction policy for re-partition expansions
     pub compact: CompactPolicy,
-    /// expansion scheduling for the Algorithm-7 re-partition resume path
-    /// (byte-identical across modes and worker counts — see
-    /// `windgp::expand`)
+    /// scheduling for the destroy/repair repair phase AND the Algorithm-7
+    /// re-partition resume path. Performance knob only: `RoundBased`
+    /// output is byte-identical to `Sequential` at any worker count (see
+    /// `windgp::expand` and `SubgraphLocalSearch::repair_round_based`)
     pub parallel: ParallelMode,
     /// speculation slots for `ParallelMode::RoundBased`; 0 = auto
     pub workers: usize,
@@ -100,6 +110,10 @@ pub struct SubgraphLocalSearch<'a> {
     /// Algorithm-7 re-partitions executed so far (telemetry + the N0
     /// trigger regression test).
     pub repartitions: usize,
+    /// Edges removed by the most recent destroy phase (telemetry + the
+    /// θ-quota regression test — the quota must track the tracker's real
+    /// per-machine edge counts, not the order lists' lengths).
+    pub last_destroyed: usize,
     /// all partition ids 0..p, built once — the repair ladder's last rungs
     /// and the re-partition leftover pass share it instead of collecting a
     /// fresh Vec
@@ -108,6 +122,7 @@ pub struct SubgraphLocalSearch<'a> {
     scratch_removed: Vec<EId>,
     scratch_both: Vec<PartId>,
     scratch_either: Vec<PartId>,
+    scratch_repair: RepairScratch,
 }
 
 impl<'a> SubgraphLocalSearch<'a> {
@@ -136,10 +151,12 @@ impl<'a> SubgraphLocalSearch<'a> {
             best_tc,
             best_feasible,
             repartitions: 0,
+            last_destroyed: 0,
             all_parts,
             scratch_removed: Vec::new(),
             scratch_both: Vec::new(),
             scratch_either: Vec::new(),
+            scratch_repair: RepairScratch::default(),
         }
     }
 
@@ -177,9 +194,14 @@ impl<'a> SubgraphLocalSearch<'a> {
     fn snapshot_if_best(&mut self) {
         let tc = self.cost();
         let feasible = (0..self.tracker.p).all(|i| self.tracker.mem_slack(i) >= 0);
-        // feasibility dominates; among equally-feasible states, lower TC wins
+        // feasibility dominates; among equally-feasible states, lower TC
+        // wins. NaN-safe: `tc < NaN` is false for every candidate, so a
+        // NaN incumbent (transiently NaN objective, e.g. user-supplied NaN
+        // machine costs during re-baseline) would lock acceptance shut
+        // forever — any non-NaN candidate must beat it.
+        let tc_improves = tc < self.best_tc || (self.best_tc.is_nan() && !tc.is_nan());
         let better = (feasible && !self.best_feasible)
-            || (feasible == self.best_feasible && tc < self.best_tc);
+            || (feasible == self.best_feasible && tc_improves);
         if better {
             self.best_tc = tc;
             self.best_feasible = feasible;
@@ -199,21 +221,56 @@ impl<'a> SubgraphLocalSearch<'a> {
         let before = self.cost();
         let objective = self.objective;
         let np = self.tracker.p;
-        let tmin = (0..np).map(|i| self.tracker.t(i)).fold(f64::INFINITY, f64::min);
-        let tmax = (0..np).map(|i| self.tracker.t(i)).fold(0.0f64, f64::max);
-        if !(tmax > tmin) {
+        self.last_destroyed = 0;
+        // NaN-aware spread. The old folds used IEEE min/max (which
+        // silently drop NaN operands) and seeded tmax with 0.0 (which
+        // clips all-negative cost profiles): a machine whose T_i went NaN
+        // (user-supplied NaN c_node/c_com) vanished from the threshold
+        // computation, yet still flowed through the `t(i) < thd` destroy
+        // predicate — destroyed or skipped depending on how the other
+        // machines happened to spread. Fold via total_cmp over the
+        // non-NaN values and treat NaN machines as unconditionally hot:
+        // their edges are consistently destroyed and repaired toward
+        // machines with meaningful costs.
+        let mut tmin = f64::INFINITY;
+        let mut tmax = f64::NEG_INFINITY;
+        let mut any_nan = false;
+        for i in 0..np {
+            let ti = self.tracker.t(i);
+            if ti.is_nan() {
+                any_nan = true;
+                continue;
+            }
+            if ti.total_cmp(&tmin).is_lt() {
+                tmin = ti;
+            }
+            if ti.total_cmp(&tmax).is_gt() {
+                tmax = ti;
+            }
+        }
+        let spread = tmax > tmin; // false also covers the all-NaN case (−∞ > ∞)
+        if !(spread || any_nan) {
             return false;
         }
-        let thd = tmin + p.gamma * (tmax - tmin);
+        // no finite spread but NaN machines exist: thd = ∞ keeps every
+        // finite machine cold while the NaN machines still get destroyed
+        let thd = if spread { tmin + p.gamma * (tmax - tmin) } else { f64::INFINITY };
 
-        // destroy: LIFO removal of a θ-fraction from each hot machine
+        // destroy: LIFO removal of a θ-fraction from each hot machine.
+        // The quota is a fraction of the tracker's *real* edge count —
+        // `order[i].len()` over-counts whenever the list carries stale ids
+        // (entries for edges re-partitioning or earlier destroys handed to
+        // another machine), which would inflate the quota beyond a
+        // θ-fraction of what machine i actually owns.
         let mut removed = std::mem::take(&mut self.scratch_removed);
         removed.clear();
         for i in 0..np {
-            if self.tracker.t(i) < thd {
+            let ti = self.tracker.t(i);
+            let hot = ti.is_nan() || ti >= thd;
+            if !hot {
                 continue;
             }
-            let quota = ((self.order[i].len() as f64 * p.theta).ceil() as usize).max(1);
+            let quota = ((self.tracker.e_count[i] as f64 * p.theta).ceil() as usize).max(1);
             let mut taken = 0;
             while taken < quota {
                 let e = match self.order[i].pop() {
@@ -230,47 +287,22 @@ impl<'a> SubgraphLocalSearch<'a> {
                 taken += 1;
             }
         }
+        self.last_destroyed = removed.len();
         if removed.is_empty() {
             self.scratch_removed = removed;
             return false;
         }
 
-        // repair: greedy balanced re-placement (Algorithm 6 ladder via
-        // CostTracker::best_feasible_min_t). A rung "fails" (returns None,
-        // the paper's i = 0) when no candidate is both memory-feasible and
+        // repair: greedy balanced re-placement (the Algorithm-6 ladder,
+        // CostTracker::repair_target). A rung "fails" (returns None, the
+        // paper's i = 0) when no candidate is both memory-feasible and
         // *below the destroy threshold* — otherwise LIFO edges, whose
         // endpoints live on the hot machine, would be handed straight back
-        // to it.
-        for &e in &removed {
-            let (u, v) = self.g.edge(e);
-            // candidate rungs, rebuilt in scratch. `both` = S(u) ∩ S(v)
-            // via the shared sorted merge; `either` is S(u) followed by
-            // S(v) \ S(u) — identical candidate order to the historical
-            // Vec-building code, so repair decisions are unchanged
-            self.scratch_both.clear();
-            self.scratch_either.clear();
-            self.tracker.common_parts(u, v, &mut self.scratch_both);
-            {
-                let su = self.tracker.replica_entries(u);
-                let sv = self.tracker.replica_entries(v);
-                self.scratch_either.extend(su.iter().map(|&(q, _)| q));
-                for &(pv, _) in sv {
-                    if su.binary_search_by_key(&pv, |&(q, _)| q).is_err() {
-                        self.scratch_either.push(pv);
-                    }
-                }
-            }
-            let t = &self.tracker;
-            let target = t
-                .best_feasible_min_t(e, &self.scratch_both, thd)
-                .or_else(|| t.best_feasible_min_t(e, &self.scratch_either, thd))
-                .or_else(|| t.best_feasible_min_t(e, &self.all_parts, thd))
-                .or_else(|| t.best_feasible_min_t(e, &self.all_parts, f64::INFINITY))
-                // nothing fits: put it back on the machine with max slack
-                // (lowest index on ties — documented in CostTracker)
-                .unwrap_or_else(|| t.max_slack_part());
-            self.tracker.add_edge(e, target);
-            self.order[target as usize].push(e);
+        // to it. `RoundBased` runs the speculative round protocol over the
+        // same decision procedure — byte-identical output at any width.
+        match p.parallel {
+            ParallelMode::Sequential => self.repair_sequential(&removed, thd),
+            ParallelMode::RoundBased => self.repair_round_based(&removed, thd, p.workers),
         }
         self.scratch_removed = removed;
         let after = match objective {
@@ -278,6 +310,104 @@ impl<'a> SubgraphLocalSearch<'a> {
             Objective::MapReduce => self.tracker.map_reduce_cost(),
         };
         after < before - 1e-12
+    }
+
+    /// The sequential Algorithm-6 repair loop: one ladder decision + one
+    /// placement per removed edge, allocation-free (candidate rungs live
+    /// in reusable scratch).
+    fn repair_sequential(&mut self, removed: &[EId], thd: f64) {
+        let mut both = std::mem::take(&mut self.scratch_both);
+        let mut either = std::mem::take(&mut self.scratch_either);
+        for &e in removed {
+            let (target, _) =
+                self.tracker.repair_target(e, thd, &self.all_parts, &mut both, &mut either);
+            self.tracker.add_edge(e, target);
+            self.order[target as usize].push(e);
+        }
+        self.scratch_both = both;
+        self.scratch_either = either;
+    }
+
+    /// Round-based parallel repair: the speculative-propose /
+    /// deterministic-arbitrate / epoch-commit protocol from the expansion
+    /// engine, applied to the removed-edge list.
+    ///
+    /// The list is split into contiguous chunks; each round, workers
+    /// propose repair targets for the next `width` chunks against clones
+    /// of the committed tracker ([`CostTracker::propose_repair`] records
+    /// conservative read/write sets and rolls back bit-exactly), then the
+    /// arbiter commits the longest prefix of chunks whose reads are
+    /// disjoint from lower-chunk writes — the first in-flight chunk always
+    /// commits, so every round makes progress. Committed targets replay
+    /// onto the master tracker as per-edge `add_edge` calls in chunk
+    /// order, which is the exact float-accumulation sequence the
+    /// sequential loop would have performed: output is **byte-identical**
+    /// to [`Self::repair_sequential`] at any worker count, and chunk
+    /// geometry is a wall-clock knob only.
+    fn repair_round_based(&mut self, removed: &[EId], thd: f64, workers: usize) {
+        let auto =
+            if workers == 0 { pool::effective_workers(removed.len()) } else { workers };
+        let width = if pool::in_pool_worker() { 1 } else { auto.max(1) };
+        let chunk = (removed.len() / (width * 4)).max(16);
+        if width <= 1 || removed.len() <= chunk {
+            // degenerate protocol (also the workers=1 bench control):
+            // propose against the committed state and commit immediately —
+            // no clones, no read tracking, but the same propose / rollback
+            // / replay cycle the speculative slots pay
+            let mut scratch = std::mem::take(&mut self.scratch_repair);
+            let prop =
+                self.tracker.propose_repair(removed, thd, &self.all_parts, false, &mut scratch);
+            for &(e, t) in &prop.targets {
+                self.tracker.add_edge(e, t);
+                self.order[t as usize].push(e);
+            }
+            self.scratch_repair = scratch;
+            return;
+        }
+        let chunks: Vec<&[EId]> = removed.chunks(chunk).collect();
+        let width = width.min(chunks.len());
+        // one clone per slot per call; rounds rebase the clones by
+        // replaying committed targets instead of re-cloning
+        let mut slots: Vec<(CostTracker<'a>, RepairScratch)> =
+            (0..width).map(|_| (self.tracker.clone(), RepairScratch::default())).collect();
+        let mut arb = RepairArbiter::new(self.g.num_vertices(), self.tracker.p);
+        let mut pending: Vec<RepairProposal> = Vec::new();
+        let mut next = 0usize;
+        while next < chunks.len() {
+            let inflight = (chunks.len() - next).min(slots.len());
+            slots.truncate(inflight);
+            let rebase = std::mem::take(&mut pending);
+            let rebase_ref = &rebase;
+            let chunks_ref = &chunks;
+            let all_parts = &self.all_parts;
+            let base = next;
+            let proposals: Vec<RepairProposal> =
+                pool::parallel_map_mut(&mut slots, |j, (tracker, scratch)| {
+                    for prop in rebase_ref {
+                        tracker.apply_repairs(&prop.targets);
+                    }
+                    // the lowest in-flight chunk commits unconditionally,
+                    // so its reads are never consulted (j > 0 records)
+                    tracker.propose_repair(chunks_ref[base + j], thd, all_parts, j > 0, scratch)
+                });
+            arb.begin_round();
+            let mut committed = 0usize;
+            for (j, prop) in proposals.iter().enumerate() {
+                if j > 0 && arb.conflicts(prop) {
+                    break;
+                }
+                arb.note_commit(self.g, prop);
+                committed += 1;
+            }
+            for prop in proposals.into_iter().take(committed) {
+                for &(e, t) in &prop.targets {
+                    self.tracker.add_edge(e, t);
+                    self.order[t as usize].push(e);
+                }
+                pending.push(prop);
+                next += 1;
+            }
+        }
     }
 
     /// Algorithm 7: free the worst machine + its k−1 strongest replica
@@ -526,6 +656,178 @@ mod tests {
         let r = Metrics::new(&g, &c).report(&ep2);
         assert!(ep2.is_complete());
         assert!(r.all_feasible());
+    }
+
+    #[test]
+    fn nan_cost_machine_is_destroyed_consistently() {
+        // A NaN c_node poisons exactly one machine's T_i (c_node never
+        // enters the shared T_com terms). With *no finite spread* among
+        // the remaining machines, the old IEEE folds dropped the NaN,
+        // found tmax == tmin and bailed out — the NaN machine silently
+        // kept its edges forever, while any finite spread elsewhere made
+        // the same machine unconditionally hot. NaN machines must be
+        // treated as hot consistently: destroyed and repaired toward
+        // machines with meaningful costs even when the finite machines
+        // are perfectly balanced.
+        let g = gen::erdos_renyi(120, 450, 4);
+        let m = g.num_edges();
+        let mut machines = vec![Machine::new(1_000_000, 1.0, 2.0, 1.0); 3];
+        machines[1] = Machine::new(1_000_000, f64::NAN, 2.0, 1.0);
+        let c = Cluster::new(machines);
+        // round-robin start: machines 0 and 2 carry near-identical loads,
+        // so the NaN machine is the one that must drive the destroy —
+        // and with the NaN-consistent repair comparator it can never
+        // win its edges back (only the max-slack fallback reaches it,
+        // and the finite machines stay feasible here)
+        let mut ep = EdgePartition::unassigned(&g, 3);
+        let mut order = vec![Vec::new(); 3];
+        for e in 0..m {
+            let part = e % 3;
+            ep.assignment[e] = part as PartId;
+            order[part].push(e as EId);
+        }
+        let deltas = vec![(m / 3 + 1) as u64; 3];
+        let mut sls = SubgraphLocalSearch::new(&g, &c, ep, order, deltas, 7);
+        let e1_before = sls.tracker.e_count[1];
+        assert!(e1_before > 0);
+        let params = SlsParams { theta: 0.05, gamma: 0.5, ..Default::default() };
+        sls.destroy_repair(&params);
+        assert!(
+            sls.last_destroyed >= 1,
+            "NaN-cost machine must be destroyed even without finite spread"
+        );
+        assert!(
+            sls.tracker.e_count[1] < e1_before,
+            "destroys must come from the NaN machine"
+        );
+        // every removed edge was repaired somewhere — no edge lost
+        assert!(sls.tracker.assignment.iter().all(|&a| a != UNASSIGNED));
+        // drive the full loop too: completeness survives repeated
+        // NaN-machine destroys (companion to
+        // repartition_survives_nan_machine_costs)
+        sls.run(&SlsParams { t0: 8, theta: 0.05, gamma: 0.5, ..Default::default() });
+        assert!(sls.into_partition().is_complete());
+    }
+
+    #[test]
+    fn nan_incumbent_loses_to_finite_candidate() {
+        // `tc < NaN` is false for every tc, so a NaN incumbent cost used
+        // to lock snapshot_if_best shut: no later (finite, better) state
+        // could ever be accepted. A NaN incumbent must lose to any
+        // non-NaN candidate.
+        let g = gen::erdos_renyi(100, 400, 3);
+        let c = cluster(3);
+        let (ep, order) = skewed_start(&g, 3);
+        let deltas = vec![(g.num_edges() / 3 + 1) as u64; 3];
+        let mut sls = SubgraphLocalSearch::new(&g, &c, ep, order, deltas, 2);
+        sls.best_tc = f64::NAN;
+        sls.snapshot_if_best();
+        assert!(
+            !sls.best_tc.is_nan(),
+            "a finite candidate must replace a NaN incumbent"
+        );
+        assert_eq!(sls.best_assignment, sls.tracker.assignment);
+        // and the accepted value is the candidate's actual cost
+        assert!((sls.best_tc - sls.tracker.tc()).abs() < 1e-12);
+        // sanity: a worse finite candidate still loses to a finite incumbent
+        let locked = sls.best_tc;
+        sls.snapshot_if_best(); // same state: tc < best_tc is false
+        assert_eq!(sls.best_tc, locked);
+    }
+
+    #[test]
+    fn destroy_quota_ignores_stale_order_entries() {
+        // After an Algorithm-7 re-partition the order lists can carry ids
+        // the machine no longer owns; the destroy quota must be a
+        // θ-fraction of the machine's *real* edge count, not of the
+        // (inflatable) list length. Model the staleness deterministically
+        // through the public constructor: machine 0's list additionally
+        // carries every edge machine 1 owns.
+        let g = gen::erdos_renyi(30, 60, 1);
+        let m = g.num_edges();
+        let cut = 3 * m / 4;
+        // c_node = 0, c_edge dominant: T_i ≈ 100·e_count[i], so machine 0
+        // (3/4 of the edges) is the unique hot machine at γ = 0.5
+        let c = Cluster::new(vec![Machine::new(u64::MAX / 2, 0.0, 100.0, 1.0); 2]);
+        let mut ep = EdgePartition::unassigned(&g, 2);
+        let mut order = vec![Vec::new(); 2];
+        for e in 0..m {
+            let part = usize::from(e >= cut);
+            ep.assignment[e] = part as PartId;
+            order[part].push(e as EId);
+        }
+        // stale tail: machine-1-owned ids appended to machine 0's list —
+        // popped (LIFO) and skipped first, but they must not widen the quota
+        order[0].extend((cut..m).map(|e| e as EId));
+        let deltas = vec![(m / 2 + 1) as u64; 2];
+        let theta = 0.1;
+        let mut sls = SubgraphLocalSearch::new(&g, &c, ep, order, deltas, 3);
+        let expected = ((cut as f64 * theta).ceil() as usize).max(1);
+        let inflated = (((cut + (m - cut)) as f64 * theta).ceil() as usize).max(1);
+        assert!(inflated > expected, "test graph too small to distinguish quotas");
+        sls.destroy_repair(&SlsParams { theta, gamma: 0.5, ..Default::default() });
+        assert_eq!(
+            sls.last_destroyed, expected,
+            "quota must track e_count, not the stale-inflated order list"
+        );
+        assert!(sls.tracker.assignment.iter().all(|&a| a != UNASSIGNED));
+
+        // the organic route: re-partition first, then destroy — the count
+        // stays within the θ-quota of the machines' true pre-destroy
+        // edge counts
+        let g2 = gen::erdos_renyi(200, 800, 5);
+        let c2 = cluster(4);
+        let (ep2, order2) = skewed_start(&g2, 4);
+        let deltas2 = vec![(g2.num_edges() / 4 + 1) as u64; 4];
+        let params = SlsParams { theta: 0.05, gamma: 0.5, ..Default::default() };
+        let mut sls2 = SubgraphLocalSearch::new(&g2, &c2, ep2, order2, deltas2, 9);
+        sls2.repartition(&params);
+        let e_before = sls2.tracker.e_count.clone();
+        sls2.destroy_repair(&params);
+        let bound: usize = e_before
+            .iter()
+            .map(|&ec| ((ec as f64 * params.theta).ceil() as usize).max(1))
+            .sum();
+        assert!(
+            sls2.last_destroyed <= bound,
+            "destroyed {} > θ-quota bound {bound}",
+            sls2.last_destroyed
+        );
+    }
+
+    #[test]
+    fn round_based_destroy_repair_matches_sequential() {
+        // SlsParams::parallel is honored by the repair phase itself:
+        // repeated destroy/repair under RoundBased must land on the
+        // byte-identical assignment at every speculation width (the full
+        // cross-mode matrix lives in tests/differential.rs)
+        let g = gen::erdos_renyi(300, 1500, 6);
+        let c = cluster(4);
+        let (ep, order) = skewed_start(&g, 4);
+        let deltas = vec![(g.num_edges() / 4 + 1) as u64; 4];
+        let base = SubgraphLocalSearch::new(&g, &c, ep, order, deltas, 8);
+        let run = |mode: ParallelMode, workers: usize| {
+            let params = SlsParams {
+                theta: 0.1,
+                gamma: 0.3,
+                parallel: mode,
+                workers,
+                ..Default::default()
+            };
+            let mut s = base.clone();
+            for _ in 0..5 {
+                s.destroy_repair(&params);
+            }
+            s.tracker.assignment.clone()
+        };
+        let reference = run(ParallelMode::Sequential, 0);
+        for workers in [1usize, 2, 3, 8] {
+            assert_eq!(
+                run(ParallelMode::RoundBased, workers),
+                reference,
+                "round-based repair diverged at {workers} workers"
+            );
+        }
     }
 }
 

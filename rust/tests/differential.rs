@@ -16,7 +16,9 @@
 //!
 //! Pinned across Erdős–Rényi and R-MAT inputs (several seeds each), the
 //! expansion-only pipeline (expand + leftover sweep), the SLS-resume path
-//! (`Expander::with_state*` on a partially-assigned graph), and the full
+//! (`Expander::with_state*` on a partially-assigned graph), the SLS
+//! destroy/repair phase in isolation (`SlsParams.parallel` routes the
+//! repair loop through the same round-based protocol), and the full
 //! WindGP `Variant::Full` pass (capacities + expansion + SLS with its
 //! re-partition resume).
 
@@ -24,7 +26,8 @@ use windgp::graph::{gen, rmat, CompactPolicy, Graph};
 use windgp::machines::{Cluster, Machine};
 use windgp::partition::{EdgePartition, PartId, Partitioner};
 use windgp::windgp::{
-    expand_clusters, ExpandParams, Expander, ParallelMode, Variant, WindGP, WindGPConfig,
+    expand_clusters, ExpandParams, Expander, ParallelMode, SlsParams, SubgraphLocalSearch,
+    Variant, WindGP, WindGPConfig,
 };
 
 fn test_graphs() -> Vec<(String, Graph)> {
@@ -237,6 +240,60 @@ fn full_windgp_round_based_byte_identical_to_sequential() {
                     run(ParallelMode::RoundBased, workers),
                     reference,
                     "{name} seed {seed}: full WindGP diverged at {workers} workers"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sls_phase_byte_identical_across_modes_and_worker_counts() {
+    // the SLS tentpole contract: destroy/repair under RoundBased ==
+    // Sequential, bit for bit, at every speculation width — the full
+    // Algorithm-4 loop (destroy/repair + snapshot + the N0 re-partition
+    // resume) from a skewed start, ER + R-MAT × seeds
+    let cluster = cluster8();
+    let p = cluster.len();
+    for (name, g) in test_graphs() {
+        let m = g.num_edges();
+        // 70% of edges on machine 0 so destroy/repair has real work
+        let mut ep = EdgePartition::unassigned(&g, p);
+        let mut order = vec![Vec::new(); p];
+        for e in 0..m {
+            let part = if e % 10 < 7 { 0 } else { 1 + e % (p - 1) };
+            ep.assignment[e] = part as PartId;
+            order[part].push(e as u32);
+        }
+        let deltas = vec![(m / p + 1) as u64; p];
+        for seed in [3u64, 11] {
+            let run = |mode: ParallelMode, workers: usize| {
+                let params = SlsParams {
+                    t0: 12,
+                    theta: 0.05,
+                    gamma: 0.5,
+                    parallel: mode,
+                    workers,
+                    ..Default::default()
+                };
+                let mut sls = SubgraphLocalSearch::new(
+                    &g,
+                    &cluster,
+                    ep.clone(),
+                    order.clone(),
+                    deltas.clone(),
+                    seed,
+                );
+                sls.run(&params);
+                let out = sls.into_partition();
+                assert!(out.is_complete(), "{name} seed {seed}: SLS left edges unassigned");
+                out.assignment
+            };
+            let reference = run(ParallelMode::Sequential, 0);
+            for workers in [1usize, 2, 8] {
+                assert_eq!(
+                    run(ParallelMode::RoundBased, workers),
+                    reference,
+                    "{name} seed {seed}: SLS phase diverged at {workers} workers"
                 );
             }
         }
