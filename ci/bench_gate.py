@@ -37,6 +37,7 @@ ASSERTED = [
     "sls/destroy-repair-parallel",
     "sls/destroy-repair-parallel-w1",
     "sls/full",
+    "serve/query-batch",
 ]
 
 

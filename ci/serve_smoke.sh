@@ -1,0 +1,80 @@
+#!/usr/bin/env bash
+# CI smoke for the serving subsystem: drives the full artifact pipeline
+# (gen → partition --out → export → serve) through the release binary and
+# asserts that scripted serve sessions are byte-identical across
+# WINDGP_WORKERS settings. Run from the repo root after
+# `cargo build --release`.
+set -euo pipefail
+
+BIN="${WINDGP_BIN:-target/release/windgp}"
+WORK="$(mktemp -d)"
+trap 'rm -rf "$WORK"' EXIT
+
+# Explicit cluster with ample memory: the experiment-context clusters are
+# paper-scaled and infeasibly tight for the shrunk stand-in graph.
+cat > "$WORK/cluster.json" <<'EOF'
+{"m_node":1,"m_edge":2,"machines":[
+  {"mem":1000000,"c_node":10,"c_edge":15,"c_com":15,"count":2},
+  {"mem":1000000,"c_node":5,"c_edge":10,"c_com":10,"count":4}]}
+EOF
+
+echo "== gen =="
+"$BIN" gen --graph rn-s --shrink 4 --format bin --out "$WORK/g.bin"
+
+echo "== partition --out --json =="
+"$BIN" partition --graph "$WORK/g.bin" --cluster "$WORK/cluster.json" \
+    --algo windgp --seed 1 --json --out "$WORK/part.bin" > "$WORK/report.json"
+python3 - "$WORK/report.json" <<'EOF'
+import json, sys
+r = json.load(open(sys.argv[1]))
+assert r["complete"] is True, r
+assert r["p"] == 6, r
+assert r["tc"] > 0, r
+print(f"  partition ok: tc={r['tc']:.2f} rf={r['rf']:.3f}")
+EOF
+
+echo "== export =="
+"$BIN" export --graph "$WORK/g.bin" --cluster "$WORK/cluster.json" \
+    --partition "$WORK/part.bin" --out "$WORK/export"
+for f in manifest.json shard_0000.bin shard_0005.bin replicas.bin assignment.bin; do
+    test -f "$WORK/export/$f" || { echo "FAIL: missing export artifact $f"; exit 1; }
+done
+python3 - "$WORK/export/manifest.json" <<'EOF'
+import json, sys
+m = json.load(open(sys.argv[1]))
+assert m["schema"] == "windgp-export-v1", m["schema"]
+assert len(m["machines"]) == 6
+assert sum(mm["edges"] for mm in m["machines"]) == m["graph"]["edges"]
+print(f"  manifest ok: {m['graph']['edges']} edges over {len(m['machines'])} shards")
+EOF
+
+echo "== serve (stdin session, WINDGP_WORKERS=1 vs 8) =="
+cat > "$WORK/session.ndjson" <<'EOF'
+{"op":"assign","u":0,"v":1}
+{"op":"replicas","v":0}
+{"op":"metrics"}
+{"op":"batch","requests":[{"op":"metrics"},{"op":"replicas","v":1}]}
+{"op":"shutdown"}
+EOF
+WINDGP_WORKERS=1 "$BIN" serve --graph "$WORK/g.bin" --export "$WORK/export" \
+    < "$WORK/session.ndjson" > "$WORK/out.w1"
+WINDGP_WORKERS=8 "$BIN" serve --graph "$WORK/g.bin" --export "$WORK/export" \
+    < "$WORK/session.ndjson" > "$WORK/out.w8"
+cmp "$WORK/out.w1" "$WORK/out.w8" \
+    || { echo "FAIL: serve responses differ across WINDGP_WORKERS"; exit 1; }
+python3 - "$WORK/out.w1" <<'EOF'
+import json, sys
+lines = [json.loads(l) for l in open(sys.argv[1]) if l.strip()]
+assert len(lines) == 5, f"expected 5 responses, got {len(lines)}"
+ops = [l.get("op") for l in lines]
+assert ops == ["assign", "replicas", "metrics", "batch", "shutdown"], ops
+# (0,1) may or may not be an edge of the generated graph; either answer is
+# a well-formed assign response and both must be deterministic
+assert all(l["ok"] for l in lines[1:]), lines
+assert lines[1]["machines"], "vertex 0 must have at least one replica"
+assert lines[2]["tc"] > 0
+assert lines[3]["count"] == 2
+print(f"  serve ok: {len(lines)} responses, byte-identical at workers 1 and 8")
+EOF
+
+echo "serve smoke OK"

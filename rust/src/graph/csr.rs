@@ -81,6 +81,30 @@ impl Graph {
             .collect()
     }
 
+    /// Deterministic 64-bit content hash (FNV-1a over the vertex count,
+    /// edge count and the canonical edge stream). Two graphs hash equal
+    /// iff their canonical forms are identical, so saved assignments and
+    /// export artifacts can be bound to the exact graph they were
+    /// computed for and rejected when replayed against a different one.
+    pub fn content_hash(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(mut h: u64, x: u64) -> u64 {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+            h
+        }
+        let mut h = FNV_OFFSET;
+        h = mix(h, self.num_vertices() as u64);
+        h = mix(h, self.num_edges() as u64);
+        for &(u, v) in &self.edges {
+            h = mix(h, ((u as u64) << 32) | v as u64);
+        }
+        h
+    }
+
     /// Quick structural sanity check used by tests and after IO.
     pub fn validate(&self) -> Result<(), String> {
         let n = self.num_vertices() as VId;
@@ -247,5 +271,24 @@ mod tests {
         assert_eq!(g.num_vertices(), 1);
         assert_eq!(g.num_edges(), 0);
         g.validate().unwrap();
+    }
+
+    #[test]
+    fn content_hash_distinguishes_graphs() {
+        let g = triangle();
+        assert_eq!(g.content_hash(), triangle().content_hash());
+        // one extra edge changes the hash
+        let mut b = GraphBuilder::new();
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 0);
+        b.add_edge(0, 3);
+        assert_ne!(g.content_hash(), b.build(0).content_hash());
+        // same edges, different vertex count (trailing isolated) differs
+        let mut b = GraphBuilder::new();
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 0);
+        assert_ne!(g.content_hash(), b.build(5).content_hash());
     }
 }

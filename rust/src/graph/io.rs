@@ -71,6 +71,40 @@ const BIN_MAGIC_V2: u32 = 0x5747_4202; // "WGB\x02"
 /// Largest vertex count any cache header may claim (ids are u32).
 const MAX_HEADER_N: u64 = (u32::MAX as u64) + 1;
 
+/// Shared header-vs-length validation for every binary artifact (cache,
+/// shards, assignments, replica tables): fail with a clear error *before*
+/// any allocation sized from the header, so truncated or corrupt files
+/// can't OOM the reader.
+pub(crate) fn validate_len(
+    display: &str,
+    kind: &str,
+    detail: &str,
+    file_len: u64,
+    expected: u128,
+) -> Result<()> {
+    if (file_len as u128) != expected {
+        bail!(
+            "corrupt or truncated {kind} {display}: {detail} \
+             ({expected} bytes expected, file is {file_len} bytes)"
+        );
+    }
+    Ok(())
+}
+
+pub(crate) fn read_u32<R: Read>(r: &mut R, display: &str) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)
+        .with_context(|| format!("corrupt or truncated binary file {display}: short header"))?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub(crate) fn read_u64<R: Read>(r: &mut R, display: &str) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)
+        .with_context(|| format!("corrupt or truncated binary file {display}: short header"))?;
+    Ok(u64::from_le_bytes(b))
+}
+
 /// Write the binary cache (v2: full CSR image).
 pub fn write_binary<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
     let f = File::create(&path)?;
@@ -116,20 +150,12 @@ pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
     let f = File::open(&path).with_context(|| format!("open {display}"))?;
     let file_len = f.metadata()?.len();
     let mut r = BufReader::with_capacity(1 << 20, f);
-    let mut u32buf = [0u8; 4];
-    let mut u64buf = [0u8; 8];
-    r.read_exact(&mut u32buf)
-        .with_context(|| format!("corrupt or truncated binary cache {display}: no magic"))?;
-    let magic = u32::from_le_bytes(u32buf);
+    let magic = read_u32(&mut r, &display)?;
     if magic != BIN_MAGIC_V1 && magic != BIN_MAGIC_V2 {
         bail!("bad magic in {display}");
     }
-    r.read_exact(&mut u64buf)
-        .with_context(|| format!("corrupt or truncated binary cache {display}: short header"))?;
-    let n = u64::from_le_bytes(u64buf);
-    r.read_exact(&mut u64buf)
-        .with_context(|| format!("corrupt or truncated binary cache {display}: short header"))?;
-    let m = u64::from_le_bytes(u64buf);
+    let n = read_u64(&mut r, &display)?;
+    let m = read_u64(&mut r, &display)?;
     if n > MAX_HEADER_N {
         bail!("corrupt binary cache {display}: header claims {n} vertices (ids are u32)");
     }
@@ -139,14 +165,16 @@ pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
     } else {
         header + (n as u128 + 1) * 8 + (m as u128) * 16
     };
-    if (file_len as u128) != expected {
-        bail!(
-            "corrupt or truncated binary cache {display}: header claims n={n} m={m} \
-             ({expected} bytes expected, file is {file_len} bytes)"
-        );
-    }
+    validate_len(
+        &display,
+        "binary cache",
+        &format!("header claims n={n} m={m}"),
+        file_len,
+        expected,
+    )?;
     let n = n as usize;
     let m = m as usize;
+    let mut u32buf = [0u8; 4];
 
     if magic == BIN_MAGIC_V1 {
         let mut b = GraphBuilder::with_capacity(m);
@@ -212,6 +240,94 @@ pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
         bail!("corrupt binary cache {display}: {msg}");
     }
     Ok(g)
+}
+
+/// Per-machine edge-shard format written by `windgp export` (v1): magic,
+/// machine id, global vertex count, shard edge count, graph content hash,
+/// then one `(global edge id, u, v)` u32 triple per edge in ascending
+/// edge-id order. Any layout change bumps the low byte; readers reject
+/// magics they don't know.
+const SHARD_MAGIC_V1: u32 = 0x5747_5301; // "WGS\x01"
+
+/// One machine's edge shard: the engine-consumable slice of the partition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Shard {
+    /// machine (= partition) index this shard belongs to
+    pub machine: u32,
+    /// vertex count of the *source* graph (shard ids are global)
+    pub num_vertices: u64,
+    /// [`Graph::content_hash`] of the source graph
+    pub graph_hash: u64,
+    /// `(global edge id, u, v)` triples, ascending by edge id
+    pub edges: Vec<(EId, VId, VId)>,
+}
+
+/// Write one machine's edge shard (shares the length-validated header
+/// conventions of the cache-v2 format).
+pub fn write_shard<P: AsRef<Path>>(path: P, shard: &Shard) -> Result<()> {
+    let f = File::create(&path)
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::with_capacity(1 << 20, f);
+    w.write_all(&SHARD_MAGIC_V1.to_le_bytes())?;
+    w.write_all(&shard.machine.to_le_bytes())?;
+    w.write_all(&shard.num_vertices.to_le_bytes())?;
+    w.write_all(&(shard.edges.len() as u64).to_le_bytes())?;
+    w.write_all(&shard.graph_hash.to_le_bytes())?;
+    for &(e, u, v) in &shard.edges {
+        w.write_all(&e.to_le_bytes())?;
+        w.write_all(&u.to_le_bytes())?;
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one edge shard back, validating the header against the file
+/// length before allocating and every record against the claimed vertex
+/// count (endpoints in range, canonical `u < v`, edge ids strictly
+/// ascending).
+pub fn read_shard<P: AsRef<Path>>(path: P) -> Result<Shard> {
+    let display = path.as_ref().display().to_string();
+    let f = File::open(&path).with_context(|| format!("open {display}"))?;
+    let file_len = f.metadata()?.len();
+    let mut r = BufReader::with_capacity(1 << 20, f);
+    let magic = read_u32(&mut r, &display)?;
+    if magic != SHARD_MAGIC_V1 {
+        bail!("bad magic in {display}: not a windgp edge shard");
+    }
+    let machine = read_u32(&mut r, &display)?;
+    let n = read_u64(&mut r, &display)?;
+    let m = read_u64(&mut r, &display)?;
+    let graph_hash = read_u64(&mut r, &display)?;
+    if n > MAX_HEADER_N {
+        bail!("corrupt edge shard {display}: header claims {n} vertices (ids are u32)");
+    }
+    validate_len(
+        &display,
+        "edge shard",
+        &format!("header claims machine={machine} n={n} m={m}"),
+        file_len,
+        32 + (m as u128) * 12,
+    )?;
+    let m = m as usize;
+    let mut buf = vec![0u8; 12 * m];
+    r.read_exact(&mut buf)?;
+    let mut edges = Vec::with_capacity(m);
+    let mut last_eid: Option<EId> = None;
+    for rec in buf.chunks_exact(12) {
+        let e = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+        let u = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+        let v = u32::from_le_bytes(rec[8..12].try_into().unwrap());
+        if u as u64 >= n || v as u64 >= n || u >= v {
+            bail!("corrupt edge shard {display}: record ({e}, {u}, {v}) is not a canonical edge");
+        }
+        if last_eid.is_some_and(|prev| prev >= e) {
+            bail!("corrupt edge shard {display}: edge ids not strictly ascending");
+        }
+        last_eid = Some(e);
+        edges.push((e, u, v));
+    }
+    Ok(Shard { machine, num_vertices: n, graph_hash, edges })
 }
 
 /// Load a graph from `path`, sniffing the format: binary caches (v1/v2
@@ -321,6 +437,57 @@ mod tests {
         assert!(p.exists());
         let g2 = load_or_generate(&p, || panic!("should hit cache")).unwrap();
         assert_eq!(g1.edges, g2.edges);
+    }
+
+    #[test]
+    fn shard_roundtrip() {
+        let g = rmat::generate(&rmat::RmatParams::graph500(7, 4), 9);
+        let dir = std::env::temp_dir().join("windgp_io_test_shard");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("shard_0000.bin");
+        let edges: Vec<(EId, VId, VId)> = g
+            .edges
+            .iter()
+            .enumerate()
+            .filter(|(e, _)| e % 3 == 0)
+            .map(|(e, &(u, v))| (e as EId, u, v))
+            .collect();
+        let shard = Shard {
+            machine: 0,
+            num_vertices: g.num_vertices() as u64,
+            graph_hash: g.content_hash(),
+            edges,
+        };
+        write_shard(&p, &shard).unwrap();
+        let back = read_shard(&p).unwrap();
+        assert_eq!(back, shard);
+    }
+
+    #[test]
+    fn shard_rejects_truncation_and_bad_records() {
+        let dir = std::env::temp_dir().join("windgp_io_test_shard");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        let shard = Shard {
+            machine: 1,
+            num_vertices: 4,
+            graph_hash: 7,
+            edges: vec![(0, 0, 1), (2, 1, 3)],
+        };
+        write_shard(&p, &shard).unwrap();
+        // truncate one byte: the length check must fire before any parse
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 1]).unwrap();
+        let err = read_shard(&p).unwrap_err().to_string();
+        assert!(err.contains("corrupt or truncated"), "{err}");
+        // non-canonical record (u >= v) is rejected
+        let bad = Shard { edges: vec![(0, 1, 1)], ..shard.clone() };
+        write_shard(&p, &bad).unwrap();
+        assert!(read_shard(&p).is_err());
+        // edge ids must be strictly ascending
+        let bad = Shard { edges: vec![(2, 0, 1), (1, 1, 2)], ..shard };
+        write_shard(&p, &bad).unwrap();
+        assert!(read_shard(&p).is_err());
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub mod partition;
 /// [`simulator::ell::PureBackend`]).
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod util;
 pub mod windgp;

@@ -139,6 +139,13 @@ impl Cluster {
 
     pub fn from_json(text: &str) -> Result<Self> {
         let j = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json_value(&j)
+    }
+
+    /// Build a cluster from an already-parsed JSON object of the same
+    /// shape as [`Self::from_json`] — used by the export manifest, whose
+    /// `"cluster"` member embeds the spec verbatim.
+    pub fn from_json_value(j: &Json) -> Result<Self> {
         let mut machines = Vec::new();
         let list = j
             .get("machines")

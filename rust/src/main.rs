@@ -29,7 +29,9 @@ fn main() {
     }
 }
 
-/// Parse `--key value` pairs after the subcommand.
+/// Parse `--key value` pairs after the subcommand. A repeated flag is an
+/// error: the old last-one-wins overwrite silently dropped the first
+/// value, which turns a shell-history editing slip into a wrong run.
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut m = HashMap::new();
     let mut i = 0;
@@ -39,13 +41,15 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
             bail!("expected --flag, got '{k}'");
         }
         let key = k.trim_start_matches("--").to_string();
-        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-            m.insert(key, args[i + 1].clone());
-            i += 2;
+        let (val, step) = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            (args[i + 1].clone(), 2)
         } else {
-            m.insert(key, "true".to_string());
-            i += 1;
+            ("true".to_string(), 1)
+        };
+        if m.insert(key.clone(), val).is_some() {
+            bail!("duplicate flag --{key} (each flag may be given once)");
         }
+        i += step;
     }
     Ok(m)
 }
@@ -59,6 +63,8 @@ fn dispatch(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "experiment" => cmd_experiment(&flags),
         "partition" => cmd_partition(&flags),
+        "export" => cmd_export(&flags),
+        "serve" => cmd_serve(&flags),
         "simulate" => cmd_simulate(&flags),
         "bench" => cmd_bench(&flags),
         "gen" => cmd_gen(&flags),
@@ -82,9 +88,19 @@ fn print_help() {
            experiment --id <id|all> [--seeds N] [--shrink K] [--out DIR]\n\
                       regenerate a paper table/figure (see DESIGN.md §5)\n\
            partition  --graph NAME --algo NAME [--seed N] [--cluster FILE] [--workers N]\n\
+                      [--out FILE] [--json]\n\
                       partition a dataset and print the quality report\n\
                       (--workers: round-based parallel expansion, 0 = auto;\n\
-                       byte-identical output at any worker count)\n\
+                       byte-identical output at any worker count;\n\
+                       --out: save the assignment for export/serve;\n\
+                       --json: machine-readable report on stdout)\n\
+           export     --graph NAME --partition FILE --out DIR [--cluster FILE]\n\
+                      write engine-consumable artifacts: per-machine edge\n\
+                      shards, replica table, manifest.json\n\
+           serve      --graph NAME (--export DIR | --partition FILE)\n\
+                      [--cluster FILE] [--listen ADDR]\n\
+                      answer assign/replicas/metrics/batch queries as\n\
+                      newline-delimited JSON over stdin/stdout or TCP\n\
            simulate   --graph NAME --algo NAME --workload pagerank|sssp|bfs|triangle|wcc\n\
                       [--pjrt] [--iters N]  run a distributed workload\n\
            bench      [--shrink N] [--samples N] [--out FILE]\n\
@@ -122,12 +138,12 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn graph_and_cluster(
+fn load_graph(
     flags: &HashMap<String, String>,
     ctx: &ExpCtx,
-) -> Result<(std::sync::Arc<windgp::Graph>, Cluster)> {
+) -> Result<std::sync::Arc<windgp::Graph>> {
     let name = flags.get("graph").ok_or_else(|| anyhow!("--graph required"))?;
-    let g = if std::path::Path::new(name).exists() {
+    if std::path::Path::new(name).exists() {
         // external file: sniff binary caches, parse text through the
         // parallel ingest pipeline (gapped SNAP ids remapped densely)
         let ing = windgp::graph::io::load_path(name)?;
@@ -138,10 +154,18 @@ fn graph_and_cluster(
                 ids.last().copied().unwrap_or(0)
             );
         }
-        std::sync::Arc::new(ing.graph)
+        Ok(std::sync::Arc::new(ing.graph))
     } else {
-        ctx.graph(name)
-    };
+        Ok(ctx.graph(name))
+    }
+}
+
+fn graph_and_cluster(
+    flags: &HashMap<String, String>,
+    ctx: &ExpCtx,
+) -> Result<(std::sync::Arc<windgp::Graph>, Cluster)> {
+    let g = load_graph(flags, ctx)?;
+    let name = flags.get("graph").expect("load_graph checked --graph");
     let cluster = match flags.get("cluster") {
         Some(path) => Cluster::from_json_file(path)?,
         None => ctx.cluster_for(name, &g),
@@ -184,6 +208,36 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
     let ep = algo.partition(&g, &cluster, seed);
     let secs = t0.elapsed().as_secs_f64();
     let r = Metrics::new(&g, &cluster).report(&ep);
+    if let Some(path) = flags.get("out") {
+        windgp::serve::write_assignment(path, &g, &ep)?;
+        eprintln!("saved assignment to {path} (reload with 'export' or 'serve --partition')");
+    }
+    if flags.contains_key("json") {
+        use windgp::util::json::{obj, Json};
+        let counts = |xs: &[u64]| Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect());
+        let report = obj(vec![
+            ("algo", Json::Str(algo.name().to_string())),
+            (
+                "graph",
+                obj(vec![
+                    ("vertices", Json::Num(g.num_vertices() as f64)),
+                    ("edges", Json::Num(g.num_edges() as f64)),
+                ]),
+            ),
+            ("p", Json::Num(cluster.len() as f64)),
+            ("seconds", Json::Num(secs)),
+            ("tc", Json::Num(r.tc)),
+            ("rf", Json::Num(r.rf)),
+            ("alpha_prime", Json::Num(r.alpha_prime)),
+            ("complete", Json::Bool(ep.is_complete())),
+            ("feasible", Json::Bool(r.all_feasible())),
+            ("e_count", counts(&r.e_count)),
+            ("v_count", counts(&r.v_count)),
+            ("t", Json::Arr((0..cluster.len()).map(|i| Json::Num(r.t(i))).collect())),
+        ]);
+        println!("{}", report.dump());
+        return Ok(());
+    }
     println!(
         "{} on |V|={} |E|={} p={}: {:.3}s",
         algo.name(),
@@ -214,6 +268,76 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
         )
     );
     Ok(())
+}
+
+/// `windgp export` — turn a saved assignment into the engine-consumable
+/// artifact set (per-machine edge shards, replica table, manifest).
+fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
+    let ctx = ctx_from(flags)?;
+    let (g, cluster) = graph_and_cluster(flags, &ctx)?;
+    let part_path = flags
+        .get("partition")
+        .ok_or_else(|| anyhow!("--partition required (a file from 'partition --out')"))?;
+    let out = flags.get("out").ok_or_else(|| anyhow!("--out required (export directory)"))?;
+    let ep = windgp::serve::read_assignment(part_path)?.into_partition(&g)?;
+    let paths = windgp::serve::export_artifacts(out, &g, &cluster, &ep)?;
+    println!(
+        "exported {} shards + replica table + assignment + manifest to {}",
+        paths.shards.len(),
+        paths.dir.display()
+    );
+    Ok(())
+}
+
+/// `windgp serve` — warm-start from a saved partition (or a full export
+/// directory) and answer newline-delimited JSON queries.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let ctx = ctx_from(flags)?;
+    let g = load_graph(flags, &ctx)?;
+    let (cluster, ep) = match (flags.get("export"), flags.get("partition")) {
+        (Some(_), Some(_)) => bail!("pass either --export DIR or --partition FILE, not both"),
+        (Some(dir), None) => {
+            let dir = std::path::Path::new(dir);
+            let manifest = windgp::serve::read_manifest(dir.join("manifest.json"))?;
+            let hash = g.content_hash();
+            if manifest.graph_hash != hash {
+                bail!(
+                    "export was produced from a different graph \
+                     (manifest hash {:016x}, loaded graph hashes {hash:016x})",
+                    manifest.graph_hash
+                );
+            }
+            let ep = windgp::serve::read_assignment(dir.join(&manifest.assignment_file))?
+                .into_partition(&g)?;
+            (manifest.cluster, ep)
+        }
+        (None, Some(path)) => {
+            let cluster = match flags.get("cluster") {
+                Some(p) => Cluster::from_json_file(p)?,
+                None => {
+                    let name = flags.get("graph").expect("load_graph checked --graph");
+                    ctx.cluster_for(name, &g)
+                }
+            };
+            let ep = windgp::serve::read_assignment(path)?.into_partition(&g)?;
+            (cluster, ep)
+        }
+        (None, None) => bail!(
+            "serve needs --export DIR (from 'export') or --partition FILE \
+             (from 'partition --out')"
+        ),
+    };
+    let state = windgp::serve::ServeState::new(&g, &cluster, &ep)?;
+    eprintln!(
+        "windgp serve: ready (|V|={} |E|={} p={})",
+        g.num_vertices(),
+        g.num_edges(),
+        cluster.len()
+    );
+    match flags.get("listen") {
+        Some(addr) => windgp::serve::serve_tcp(&state, addr),
+        None => windgp::serve::serve_stdio(&state),
+    }
 }
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
@@ -540,6 +664,32 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
         }));
     }
 
+    // --- serve: batched query evaluation over the warm state ---
+    {
+        use windgp::serve::{Request, ServeState};
+        let state = ServeState::new(&g, &cluster, &wind_ep)?;
+        let n = g.num_vertices();
+        let nq = 50_000.min(2 * m);
+        // 3:1 edge-ownership lookups to replica lookups, the mix an
+        // engine's placement-driven router issues
+        let reqs: Vec<Request> = (0..nq)
+            .map(|_| {
+                if rng.next_usize(4) == 0 {
+                    Request::Replicas { v: rng.next_usize(n) as u32 }
+                } else {
+                    let (u, v) = g.edge(rng.next_usize(m) as u32);
+                    Request::Assign { u, v }
+                }
+            })
+            .collect();
+        let batch = Request::Batch(reqs);
+        println!("serve batch: {nq} mixed queries");
+        results.push(bench("serve/query-batch", samples, || {
+            let resp = state.handle(&batch);
+            assert_eq!(resp.get("count").and_then(Json::as_usize), Some(nq));
+        }));
+    }
+
     // --- emit machine-readable results ---
     let dur_ns = |d: std::time::Duration| Json::Num(d.as_nanos() as f64);
     let entries: Vec<Json> = results
@@ -621,4 +771,46 @@ fn cmd_list() -> Result<()> {
     );
     println!("experiments: {:?}", experiments::ALL);
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_flags;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_values_and_booleans() {
+        let m = parse_flags(&argv(&["--graph", "rn-s", "--json", "--seed", "7"])).unwrap();
+        assert_eq!(m.get("graph").map(String::as_str), Some("rn-s"));
+        assert_eq!(m.get("json").map(String::as_str), Some("true"));
+        assert_eq!(m.get("seed").map(String::as_str), Some("7"));
+        assert!(parse_flags(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_flags_rejects_duplicates() {
+        // value-then-value, value-then-boolean, boolean-then-boolean: every
+        // shape of repeat must error instead of last-one-wins
+        for args in [
+            vec!["--seed", "1", "--seed", "2"],
+            vec!["--out", "a.bin", "--out"],
+            vec!["--json", "--json"],
+        ] {
+            let err = parse_flags(&argv(&args)).unwrap_err().to_string();
+            assert!(err.contains("duplicate flag"), "{args:?}: {err}");
+        }
+        let err = parse_flags(&argv(&["--seed", "1", "--seed", "2"])).unwrap_err();
+        assert!(err.to_string().contains("--seed"));
+    }
+
+    #[test]
+    fn parse_flags_rejects_positional_arguments() {
+        let err = parse_flags(&argv(&["oops"])).unwrap_err().to_string();
+        assert!(err.contains("expected --flag"));
+        let err = parse_flags(&argv(&["--graph", "g", "stray"])).unwrap_err().to_string();
+        assert!(err.contains("expected --flag"), "{err}");
+    }
 }

@@ -194,6 +194,33 @@ impl<'a> Metrics<'a> {
         CostReport { v_count, e_count, t_cal, t_com, tc, rf, alpha_prime, feasible }
     }
 
+    /// Master machine per vertex — the from-scratch reference for
+    /// [`super::CostTracker::master_of`] (and the master bit in exported
+    /// replica tables): the owner holding the most of v's edges, ties
+    /// broken toward the lowest machine id. `None` for vertices with no
+    /// assigned incident edge.
+    pub fn masters(&self, ep: &EdgePartition) -> Vec<Option<u32>> {
+        (0..self.g.num_vertices())
+            .map(|u| {
+                let mut deg: std::collections::BTreeMap<u32, u32> = Default::default();
+                for &e in self.g.incident_edges(u as VId) {
+                    let a = ep.assignment[e as usize];
+                    if a != UNASSIGNED {
+                        *deg.entry(a).or_insert(0) += 1;
+                    }
+                }
+                let mut best: Option<(u32, u32)> = None;
+                for (&part, &d) in &deg {
+                    match best {
+                        Some((_, bd)) if d <= bd => {}
+                        _ => best = Some((part, d)),
+                    }
+                }
+                best.map(|(part, _)| part)
+            })
+            .collect()
+    }
+
     /// Pairwise replica counts n_{i,j} (Algorithm 7's selection criterion).
     pub fn replica_pairs(&self, ep: &EdgePartition) -> Vec<Vec<u64>> {
         let p = ep.p;
@@ -321,6 +348,23 @@ mod tests {
         let ep = EdgePartition::from_assignment(3, vec![0, 0, 2, 1, 1]);
         let r = Metrics::new(&g, &cluster).report(&ep);
         assert!(!r.all_feasible());
+    }
+
+    #[test]
+    fn masters_follow_partial_degree() {
+        let (g, cluster) = running_example();
+        // {ab,bc} on M0, {de,ef} on M1, {cf} on M2
+        let ep = EdgePartition::from_assignment(3, vec![0, 0, 2, 1, 1]);
+        let m = Metrics::new(&g, &cluster).masters(&ep);
+        // b has both edges on M0; c has one on M0 and one on M2 (tie -> 0)
+        assert_eq!(m[1], Some(0));
+        assert_eq!(m[2], Some(0));
+        // f: one edge on M1, one on M2 (tie -> 1); e: both on M1
+        assert_eq!(m[5], Some(1));
+        assert_eq!(m[4], Some(1));
+        // nothing assigned -> no masters
+        let none = Metrics::new(&g, &cluster).masters(&EdgePartition::unassigned(&g, 3));
+        assert!(none.iter().all(Option::is_none));
     }
 
     #[test]

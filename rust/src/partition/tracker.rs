@@ -407,6 +407,22 @@ impl<'a> CostTracker<'a> {
         s.search(part).map(|pos| s.as_slice()[pos].1).unwrap_or(0)
     }
 
+    /// The *master* replica of `v` for export/serving: the member of S(v)
+    /// holding the most of v's edges (highest partial degree), ties broken
+    /// toward the lowest machine id. `None` when v has no replicas.
+    /// Deterministic given the assignment — entries are sorted by machine
+    /// id and a tie never displaces an earlier maximum.
+    pub fn master_of(&self, v: u32) -> Option<PartId> {
+        let mut best: Option<(PartId, u32)> = None;
+        for &(part, deg) in self.replica_entries(v) {
+            match best {
+                Some((_, bd)) if deg <= bd => {}
+                _ => best = Some((part, deg)),
+            }
+        }
+        best.map(|(part, _)| part)
+    }
+
     /// Append S(u) ∩ S(v) — the machines holding *both* endpoints — to
     /// `out`, in sorted order. One shared implementation (repair ladder,
     /// leftover sweep, PowerGraph greedy ladder) so the byte-identity
@@ -888,6 +904,33 @@ mod tests {
         assert_eq!(t.part_degree(0, 1), 2);
         assert_eq!(t.parts_of(0), vec![0, 1]);
         assert_eq!(t.nij(0, 1), 1); // only the center is shared
+    }
+
+    #[test]
+    fn master_is_highest_partial_degree_lowest_id() {
+        let g = gen::star(5); // center 0, leaves 1..=4
+        let cluster = Cluster::new(vec![Machine::new(100, 0.0, 1.0, 1.0); 3]);
+        // center: deg 1 on machine 0, deg 2 on machine 1, deg 1 on machine 2
+        let ep = EdgePartition::from_assignment(3, vec![0, 1, 1, 2]);
+        let t = CostTracker::new(&g, &cluster, &ep);
+        assert_eq!(t.master_of(0), Some(1));
+        // a leaf lives on exactly one machine: that machine is its master
+        assert_eq!(t.master_of(1), Some(0));
+        // tie (deg 2 on machines 0 and 1): lowest machine id wins
+        let ep = EdgePartition::from_assignment(3, vec![0, 0, 1, 1]);
+        let t = CostTracker::new(&g, &cluster, &ep);
+        assert_eq!(t.master_of(0), Some(0));
+        // unassigned edges leave vertices masterless
+        let ep = EdgePartition::unassigned(&g, 3);
+        let t = CostTracker::new(&g, &cluster, &ep);
+        assert_eq!(t.master_of(0), None);
+        // masters agree with the from-scratch Metrics reference
+        let ep = EdgePartition::from_assignment(3, vec![0, 1, 1, 2]);
+        let t = CostTracker::new(&g, &cluster, &ep);
+        let reference = Metrics::new(&g, &cluster).masters(&ep);
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(t.master_of(v), reference[v as usize], "vertex {v}");
+        }
     }
 
     #[test]

@@ -1,0 +1,638 @@
+//! Engine-consumable partition artifacts (`windgp export`) plus the saved
+//! assignment warm-start format behind `windgp partition --out`.
+//!
+//! Every binary artifact follows the cache-v2 conventions from
+//! [`crate::graph::io`]: little-endian, a magic word whose low byte is the
+//! format version, and a header whose claimed sizes are validated against
+//! the actual file length *before* any allocation — truncated or corrupt
+//! files fail with a clear error instead of OOM-ing. Readers reject
+//! magics they don't know; any layout change bumps the version byte.
+//!
+//! Export layout (one directory per export):
+//!
+//! ```text
+//! out/
+//!   manifest.json    schema, graph hash, cluster spec, per-machine stats
+//!   shard_0000.bin   machine 0's edges: (global edge id, u, v) triples
+//!   shard_0001.bin   ...one shard per machine...
+//!   replicas.bin     vertex -> owning machines (CSR-shaped, master bit)
+//!   assignment.bin   flat edge -> machine map (serve warm start)
+//! ```
+//!
+//! Every artifact embeds [`crate::graph::csr::Graph::content_hash`] of the
+//! source graph, so a stale artifact replayed against a different graph is
+//! rejected instead of silently serving wrong placements.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::io::{read_shard, read_u32, read_u64, validate_len, write_shard, Shard};
+use crate::graph::{EId, Graph, VId};
+use crate::machines::Cluster;
+use crate::partition::{CostTracker, EdgePartition, PartId, UNASSIGNED};
+use crate::util::json::{self, obj, Json};
+
+/// `windgp partition --out` format (v1): magic, p, |E|, graph hash, then
+/// one u32 machine id per canonical edge (`UNASSIGNED` allowed, so
+/// partial assignments survive a save/load round trip).
+pub const ASSIGN_MAGIC_V1: u32 = 0x5747_4101; // "WGA\x01"
+
+/// Replica-table format (v1): magic, p, n, total entries, graph hash, a
+/// CSR offset table (n+1 × u64), then one u32 per (vertex, machine) pair
+/// — machine id in the low 31 bits, the high bit marking the master
+/// replica. Exactly one master per vertex with any replica.
+pub const REPLICA_MAGIC_V1: u32 = 0x5747_5201; // "WGR\x01"
+
+/// Manifest `"schema"` value; bump alongside any manifest layout change.
+pub const EXPORT_SCHEMA: &str = "windgp-export-v1";
+/// Manifest `"format_version"`; readers accept versions `<=` their own.
+pub const EXPORT_FORMAT_VERSION: u64 = 1;
+
+const MASTER_BIT: u32 = 1 << 31;
+
+/// A saved edge→machine map plus the identity of the graph it was
+/// computed for.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SavedAssignment {
+    pub p: usize,
+    pub graph_hash: u64,
+    pub assignment: Vec<PartId>,
+}
+
+impl SavedAssignment {
+    /// Rebind to `g`, verifying the edge count and content hash so a
+    /// stale or mismatched assignment cannot silently serve wrong
+    /// answers.
+    pub fn into_partition(self, g: &Graph) -> Result<EdgePartition> {
+        if self.assignment.len() != g.num_edges() {
+            bail!(
+                "assignment is for a graph with {} edges, loaded graph has {}",
+                self.assignment.len(),
+                g.num_edges()
+            );
+        }
+        let h = g.content_hash();
+        if self.graph_hash != h {
+            bail!(
+                "assignment was saved for a different graph \
+                 (saved hash {:016x}, loaded graph hashes {:016x})",
+                self.graph_hash,
+                h
+            );
+        }
+        Ok(EdgePartition::from_assignment(self.p, self.assignment))
+    }
+}
+
+/// Save an assignment for later warm starts (`windgp partition --out`).
+pub fn write_assignment<P: AsRef<Path>>(path: P, g: &Graph, ep: &EdgePartition) -> Result<()> {
+    let f = File::create(&path).with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::with_capacity(1 << 20, f);
+    w.write_all(&ASSIGN_MAGIC_V1.to_le_bytes())?;
+    w.write_all(&(ep.p as u32).to_le_bytes())?;
+    w.write_all(&(ep.assignment.len() as u64).to_le_bytes())?;
+    w.write_all(&g.content_hash().to_le_bytes())?;
+    for &a in &ep.assignment {
+        w.write_all(&a.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a saved assignment (header length-validated before allocation;
+/// machine ids checked against the claimed p).
+pub fn read_assignment<P: AsRef<Path>>(path: P) -> Result<SavedAssignment> {
+    let display = path.as_ref().display().to_string();
+    let f = File::open(&path).with_context(|| format!("open {display}"))?;
+    let file_len = f.metadata()?.len();
+    let mut r = BufReader::with_capacity(1 << 20, f);
+    let magic = read_u32(&mut r, &display)?;
+    if magic != ASSIGN_MAGIC_V1 {
+        bail!("bad magic in {display}: not a windgp assignment file");
+    }
+    let p = read_u32(&mut r, &display)? as usize;
+    let m = read_u64(&mut r, &display)?;
+    let graph_hash = read_u64(&mut r, &display)?;
+    validate_len(
+        &display,
+        "assignment",
+        &format!("header claims p={p} m={m}"),
+        file_len,
+        24 + (m as u128) * 4,
+    )?;
+    let mut buf = vec![0u8; 4 * m as usize];
+    r.read_exact(&mut buf)?;
+    let assignment: Vec<PartId> = buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if let Some(&bad) = assignment.iter().find(|&&a| a != UNASSIGNED && a as usize >= p) {
+        bail!("corrupt assignment {display}: machine id {bad} out of range (p={p})");
+    }
+    Ok(SavedAssignment { p, graph_hash, assignment })
+}
+
+/// The exported vertex → owning-machines table, loaded back from
+/// `replicas.bin`.
+#[derive(Clone, Debug)]
+pub struct ReplicaTable {
+    pub p: usize,
+    pub graph_hash: u64,
+    offsets: Vec<u64>,
+    entries: Vec<u32>,
+}
+
+impl ReplicaTable {
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    fn raw(&self, v: VId) -> &[u32] {
+        let (s, e) = (self.offsets[v as usize] as usize, self.offsets[v as usize + 1] as usize);
+        &self.entries[s..e]
+    }
+
+    /// Machines owning a replica of `v`, ascending.
+    pub fn machines(&self, v: VId) -> Vec<u32> {
+        self.raw(v).iter().map(|&e| e & !MASTER_BIT).collect()
+    }
+
+    /// The master machine of `v` (`None` for replica-less vertices).
+    pub fn master(&self, v: VId) -> Option<u32> {
+        self.raw(v).iter().find(|&&e| e & MASTER_BIT != 0).map(|&e| e & !MASTER_BIT)
+    }
+}
+
+/// Write the replica table derived from a warm [`CostTracker`]: per
+/// vertex, its owning machines in ascending order with the master
+/// ([`CostTracker::master_of`]) flagged.
+pub fn write_replica_table<P: AsRef<Path>>(
+    path: P,
+    g: &Graph,
+    tracker: &CostTracker<'_>,
+) -> Result<()> {
+    let n = g.num_vertices();
+    let f = File::create(&path).with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::with_capacity(1 << 20, f);
+    let total: u64 = (0..n as u32).map(|v| tracker.replica_count(v) as u64).sum();
+    w.write_all(&REPLICA_MAGIC_V1.to_le_bytes())?;
+    w.write_all(&(tracker.p as u32).to_le_bytes())?;
+    w.write_all(&(n as u64).to_le_bytes())?;
+    w.write_all(&total.to_le_bytes())?;
+    w.write_all(&g.content_hash().to_le_bytes())?;
+    let mut off = 0u64;
+    w.write_all(&off.to_le_bytes())?;
+    for v in 0..n as u32 {
+        off += tracker.replica_count(v) as u64;
+        w.write_all(&off.to_le_bytes())?;
+    }
+    for v in 0..n as u32 {
+        let master = tracker.master_of(v);
+        for &(part, _) in tracker.replica_entries(v) {
+            let entry = if Some(part) == master { part | MASTER_BIT } else { part };
+            w.write_all(&entry.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a replica table, validating the offsets (monotone, endpoints
+/// matching the header), machine ids (< p, strictly ascending per
+/// vertex) and the one-master-per-vertex invariant.
+pub fn read_replica_table<P: AsRef<Path>>(path: P) -> Result<ReplicaTable> {
+    let display = path.as_ref().display().to_string();
+    let f = File::open(&path).with_context(|| format!("open {display}"))?;
+    let file_len = f.metadata()?.len();
+    let mut r = BufReader::with_capacity(1 << 20, f);
+    let magic = read_u32(&mut r, &display)?;
+    if magic != REPLICA_MAGIC_V1 {
+        bail!("bad magic in {display}: not a windgp replica table");
+    }
+    let p = read_u32(&mut r, &display)? as usize;
+    let n = read_u64(&mut r, &display)?;
+    let total = read_u64(&mut r, &display)?;
+    let graph_hash = read_u64(&mut r, &display)?;
+    if n > (u32::MAX as u64) + 1 {
+        bail!("corrupt replica table {display}: header claims {n} vertices (ids are u32)");
+    }
+    validate_len(
+        &display,
+        "replica table",
+        &format!("header claims p={p} n={n} total={total}"),
+        file_len,
+        32 + (n as u128 + 1) * 8 + (total as u128) * 4,
+    )?;
+    let n = n as usize;
+    let total = total as usize;
+    let mut buf = vec![0u8; 8 * (n + 1)];
+    r.read_exact(&mut buf)?;
+    let offsets: Vec<u64> = buf
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if offsets[0] != 0 || offsets[n] != total as u64 {
+        bail!("corrupt replica table {display}: offset endpoints don't match header");
+    }
+    if offsets.windows(2).any(|w| w[0] > w[1]) {
+        bail!("corrupt replica table {display}: offsets not monotone");
+    }
+    let mut buf = vec![0u8; 4 * total];
+    r.read_exact(&mut buf)?;
+    let entries: Vec<u32> = buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let table = ReplicaTable { p, graph_hash, offsets, entries };
+    for v in 0..n as u32 {
+        let raw = table.raw(v);
+        let mut masters = 0usize;
+        let mut prev: Option<u32> = None;
+        for &e in raw {
+            let machine = e & !MASTER_BIT;
+            if machine as usize >= p {
+                bail!("corrupt replica table {display}: machine {machine} out of range (p={p})");
+            }
+            if prev.is_some_and(|q| q >= machine) {
+                bail!("corrupt replica table {display}: machines of vertex {v} not ascending");
+            }
+            prev = Some(machine);
+            masters += usize::from(e & MASTER_BIT != 0);
+        }
+        if !raw.is_empty() && masters != 1 {
+            bail!("corrupt replica table {display}: vertex {v} has {masters} masters");
+        }
+    }
+    Ok(table)
+}
+
+/// Everything `windgp export` wrote, with full paths.
+#[derive(Clone, Debug)]
+pub struct ExportPaths {
+    pub dir: PathBuf,
+    pub manifest: PathBuf,
+    pub shards: Vec<PathBuf>,
+    pub replicas: PathBuf,
+    pub assignment: PathBuf,
+}
+
+/// Canonical shard file name for a machine index.
+pub fn shard_file_name(machine: usize) -> String {
+    format!("shard_{machine:04}.bin")
+}
+
+/// Write the full artifact set for a complete partition: one edge shard
+/// per machine, the replica table, the warm-start assignment, and the
+/// manifest tying them together.
+pub fn export_artifacts<P: AsRef<Path>>(
+    dir: P,
+    g: &Graph,
+    cluster: &Cluster,
+    ep: &EdgePartition,
+) -> Result<ExportPaths> {
+    if ep.p != cluster.len() {
+        bail!("partition has {} machines but the cluster has {}", ep.p, cluster.len());
+    }
+    if !ep.is_complete() {
+        bail!("refusing to export an incomplete partition (unassigned edges present)");
+    }
+    let dir = dir.as_ref().to_path_buf();
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("create export dir {}", dir.display()))?;
+    let hash = g.content_hash();
+    let tracker = CostTracker::new(g, cluster, ep);
+    let report = tracker.report();
+
+    let mut shards = Vec::with_capacity(ep.p);
+    for (i, edge_ids) in ep.edges_by_part().into_iter().enumerate() {
+        let edges: Vec<(EId, VId, VId)> = edge_ids
+            .iter()
+            .map(|&e| {
+                let (u, v) = g.edge(e);
+                (e, u, v)
+            })
+            .collect();
+        let path = dir.join(shard_file_name(i));
+        let shard = Shard {
+            machine: i as u32,
+            num_vertices: g.num_vertices() as u64,
+            graph_hash: hash,
+            edges,
+        };
+        write_shard(&path, &shard)?;
+        shards.push(path);
+    }
+
+    let replicas = dir.join("replicas.bin");
+    write_replica_table(&replicas, g, &tracker)?;
+    let assignment = dir.join("assignment.bin");
+    write_assignment(&assignment, g, ep)?;
+
+    let machines: Vec<Json> = (0..ep.p)
+        .map(|i| {
+            obj(vec![
+                ("id", Json::Num(i as f64)),
+                ("shard", Json::Str(shard_file_name(i))),
+                ("edges", Json::Num(report.e_count[i] as f64)),
+                ("vertices", Json::Num(report.v_count[i] as f64)),
+                ("t_cal", Json::Num(report.t_cal[i])),
+                ("t_com", Json::Num(report.t_com[i])),
+                ("t", Json::Num(report.t(i))),
+                ("feasible", Json::Bool(report.feasible[i])),
+            ])
+        })
+        .collect();
+    let cluster_json = obj(vec![
+        ("m_node", Json::Num(cluster.m_node as f64)),
+        ("m_edge", Json::Num(cluster.m_edge as f64)),
+        (
+            "machines",
+            Json::Arr(
+                cluster
+                    .machines
+                    .iter()
+                    .map(|m| {
+                        obj(vec![
+                            ("mem", Json::Num(m.mem as f64)),
+                            ("c_node", Json::Num(m.c_node)),
+                            ("c_edge", Json::Num(m.c_edge)),
+                            ("c_com", Json::Num(m.c_com)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let total_replicas: u64 = report.v_count.iter().sum();
+    let manifest = obj(vec![
+        ("schema", Json::Str(EXPORT_SCHEMA.into())),
+        ("format_version", Json::Num(EXPORT_FORMAT_VERSION as f64)),
+        (
+            "graph",
+            obj(vec![
+                ("hash", Json::Str(format!("{hash:016x}"))),
+                ("vertices", Json::Num(g.num_vertices() as f64)),
+                ("edges", Json::Num(g.num_edges() as f64)),
+            ]),
+        ),
+        ("cluster", cluster_json),
+        ("machines", Json::Arr(machines)),
+        (
+            "totals",
+            obj(vec![
+                ("tc", Json::Num(report.tc)),
+                ("rf", Json::Num(report.rf)),
+                ("alpha_prime", Json::Num(report.alpha_prime)),
+                ("replica_entries", Json::Num(total_replicas as f64)),
+            ]),
+        ),
+        (
+            "files",
+            obj(vec![
+                ("replicas", Json::Str("replicas.bin".into())),
+                ("assignment", Json::Str("assignment.bin".into())),
+            ]),
+        ),
+    ]);
+    let manifest_path = dir.join("manifest.json");
+    std::fs::write(&manifest_path, manifest.dump())
+        .with_context(|| format!("write {}", manifest_path.display()))?;
+    Ok(ExportPaths { dir, manifest: manifest_path, shards, replicas, assignment })
+}
+
+/// The parsed `manifest.json` of an export directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub cluster: Cluster,
+    pub graph_hash: u64,
+    pub vertices: usize,
+    pub edges: usize,
+    /// shard file names in machine order
+    pub shard_files: Vec<String>,
+    pub e_count: Vec<u64>,
+    pub v_count: Vec<u64>,
+    pub tc: f64,
+    pub rf: f64,
+    pub replicas_file: String,
+    pub assignment_file: String,
+}
+
+/// Read and validate an export manifest (schema + format version gate,
+/// machine entries in id order).
+pub fn read_manifest<P: AsRef<Path>>(path: P) -> Result<Manifest> {
+    let display = path.as_ref().display().to_string();
+    let text = std::fs::read_to_string(&path).with_context(|| format!("read {display}"))?;
+    let j = json::parse(&text).map_err(|e| anyhow!("{display}: {e}"))?;
+    let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+    if schema != EXPORT_SCHEMA {
+        bail!("{display}: unexpected schema {schema:?} (expected {EXPORT_SCHEMA:?})");
+    }
+    let version = j.get("format_version").and_then(Json::as_u64).unwrap_or(0);
+    if version == 0 || version > EXPORT_FORMAT_VERSION {
+        bail!(
+            "{display}: unsupported format_version {version} \
+             (this build reads versions 1..={EXPORT_FORMAT_VERSION})"
+        );
+    }
+    let field = |name: &str| j.get(name).ok_or_else(|| anyhow!("{display}: missing '{name}'"));
+    let graph = field("graph")?;
+    let hash_str = graph
+        .get("hash")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("{display}: missing graph.hash"))?;
+    let graph_hash = u64::from_str_radix(hash_str, 16)
+        .with_context(|| format!("{display}: bad graph.hash {hash_str:?}"))?;
+    let vertices = graph
+        .get("vertices")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("{display}: missing graph.vertices"))?;
+    let edges = graph
+        .get("edges")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("{display}: missing graph.edges"))?;
+    let cluster = Cluster::from_json_value(field("cluster")?)
+        .with_context(|| format!("{display}: bad cluster spec"))?;
+    let machines = field("machines")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{display}: 'machines' is not an array"))?;
+    let mut shard_files = Vec::with_capacity(machines.len());
+    let mut e_count = Vec::with_capacity(machines.len());
+    let mut v_count = Vec::with_capacity(machines.len());
+    for (i, mj) in machines.iter().enumerate() {
+        let id = mj.get("id").and_then(Json::as_usize);
+        if id != Some(i) {
+            bail!("{display}: machine entry {i} has id {id:?} (entries must be in id order)");
+        }
+        shard_files.push(
+            mj.get("shard")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{display}: machine {i} missing 'shard'"))?
+                .to_string(),
+        );
+        e_count.push(
+            mj.get("edges")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("{display}: machine {i} missing 'edges'"))?,
+        );
+        v_count.push(
+            mj.get("vertices")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("{display}: machine {i} missing 'vertices'"))?,
+        );
+    }
+    if machines.len() != cluster.len() {
+        bail!(
+            "{display}: {} machine entries but the cluster spec has {}",
+            machines.len(),
+            cluster.len()
+        );
+    }
+    let totals = field("totals")?;
+    let tc = totals.get("tc").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let rf = totals.get("rf").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let files = field("files")?;
+    let replicas_file = files
+        .get("replicas")
+        .and_then(Json::as_str)
+        .unwrap_or("replicas.bin")
+        .to_string();
+    let assignment_file = files
+        .get("assignment")
+        .and_then(Json::as_str)
+        .unwrap_or("assignment.bin")
+        .to_string();
+    Ok(Manifest {
+        cluster,
+        graph_hash,
+        vertices,
+        edges,
+        shard_files,
+        e_count,
+        v_count,
+        tc,
+        rf,
+        replicas_file,
+        assignment_file,
+    })
+}
+
+/// Reconstruct a full [`EdgePartition`] from an export directory's shards
+/// — the reverse direction engines use, and what the round-trip tests
+/// pin: the union of shards must reproduce the original edge set exactly.
+pub fn partition_from_shards(
+    dir: &Path,
+    manifest: &Manifest,
+) -> Result<(usize, Vec<(EId, VId, VId, PartId)>)> {
+    let mut all: Vec<(EId, VId, VId, PartId)> = Vec::with_capacity(manifest.edges);
+    for (i, file) in manifest.shard_files.iter().enumerate() {
+        let shard = read_shard(dir.join(file))?;
+        if shard.machine as usize != i {
+            bail!("shard {file} claims machine {} but the manifest lists it as {i}", shard.machine);
+        }
+        if shard.graph_hash != manifest.graph_hash {
+            bail!("shard {file} was exported from a different graph (hash mismatch)");
+        }
+        if shard.num_vertices as usize != manifest.vertices {
+            bail!("shard {file} vertex count disagrees with the manifest");
+        }
+        if shard.edges.len() as u64 != manifest.e_count[i] {
+            bail!(
+                "shard {file} holds {} edges but the manifest claims {}",
+                shard.edges.len(),
+                manifest.e_count[i]
+            );
+        }
+        all.extend(shard.edges.iter().map(|&(e, u, v)| (e, u, v, i as PartId)));
+    }
+    all.sort_unstable_by_key(|&(e, ..)| e);
+    if all.len() != manifest.edges {
+        bail!("shards hold {} edges, manifest claims {}", all.len(), manifest.edges);
+    }
+    if all.windows(2).any(|w| w[0].0 == w[1].0) {
+        bail!("two shards claim the same edge id (shards must be disjoint)");
+    }
+    Ok((manifest.shard_files.len(), all))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat;
+    use crate::machines::Machine;
+    use crate::util::SplitMix64;
+
+    fn setup() -> (Graph, Cluster, EdgePartition) {
+        let g = rmat::generate(&rmat::RmatParams::graph500(7, 4), 5);
+        let cluster = Cluster::new(vec![Machine::new(u64::MAX / 8, 5.0, 10.0, 10.0); 4]);
+        let mut rng = SplitMix64::new(9);
+        let assignment: Vec<PartId> =
+            (0..g.num_edges()).map(|_| rng.next_usize(4) as u32).collect();
+        let ep = EdgePartition::from_assignment(4, assignment);
+        (g, cluster, ep)
+    }
+
+    #[test]
+    fn assignment_roundtrip() {
+        let (g, _, ep) = setup();
+        let dir = std::env::temp_dir().join("windgp_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.bin");
+        write_assignment(&p, &g, &ep).unwrap();
+        let saved = read_assignment(&p).unwrap();
+        assert_eq!(saved.p, 4);
+        assert_eq!(saved.graph_hash, g.content_hash());
+        assert_eq!(saved.assignment, ep.assignment);
+        let ep2 = saved.into_partition(&g).unwrap();
+        assert_eq!(ep2.assignment, ep.assignment);
+    }
+
+    #[test]
+    fn assignment_rejects_wrong_graph_and_truncation() {
+        let (g, _, ep) = setup();
+        let dir = std::env::temp_dir().join("windgp_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("b.bin");
+        write_assignment(&p, &g, &ep).unwrap();
+        // same |E|, perturbed hash: the content check must still fire
+        let mut saved = read_assignment(&p).unwrap();
+        saved.graph_hash ^= 1;
+        let err = saved.into_partition(&g).unwrap_err();
+        assert!(err.to_string().contains("different graph"), "{err}");
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 2]).unwrap();
+        let err = read_assignment(&p).unwrap_err().to_string();
+        assert!(err.contains("corrupt or truncated"), "{err}");
+    }
+
+    #[test]
+    fn replica_table_matches_tracker() {
+        let (g, cluster, ep) = setup();
+        let dir = std::env::temp_dir().join("windgp_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("r.bin");
+        let tracker = CostTracker::new(&g, &cluster, &ep);
+        write_replica_table(&p, &g, &tracker).unwrap();
+        let table = read_replica_table(&p).unwrap();
+        assert_eq!(table.p, 4);
+        assert_eq!(table.num_vertices(), g.num_vertices());
+        assert_eq!(table.graph_hash, g.content_hash());
+        for v in 0..g.num_vertices() as u32 {
+            let expect: Vec<u32> =
+                tracker.replica_entries(v).iter().map(|&(part, _)| part).collect();
+            assert_eq!(table.machines(v), expect, "vertex {v}");
+            assert_eq!(table.master(v), tracker.master_of(v), "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn export_requires_complete_partition() {
+        let (g, cluster, mut ep) = setup();
+        ep.assignment[0] = UNASSIGNED;
+        let dir = std::env::temp_dir().join("windgp_artifact_test_incomplete");
+        let err = export_artifacts(&dir, &g, &cluster, &ep).unwrap_err();
+        assert!(err.to_string().contains("incomplete"), "{err}");
+    }
+}

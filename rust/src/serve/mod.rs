@@ -1,0 +1,30 @@
+//! Partition-serving subsystem: `windgp export` artifacts + the
+//! `windgp serve` query loop.
+//!
+//! The partitioner alone produces an in-process [`crate::partition::EdgePartition`]
+//! and exits; this layer turns that result into something a downstream
+//! distributed engine — or a long-running online placement workload — can
+//! actually consume:
+//!
+//! - [`artifact`]: per-machine binary edge shards, a replica table
+//!   (vertex → owning machines, master flagged), the saved-assignment
+//!   warm-start format behind `windgp partition --out`, and a
+//!   `manifest.json` tying the set together (graph content hash, cluster
+//!   spec, per-machine |E|/|V|/T_i, format version).
+//! - [`protocol`]: the newline-delimited JSON request surface —
+//!   `assign` / `replicas` / `metrics` / `batch` / `shutdown`.
+//! - [`server`]: the long-running loop over stdin/stdout or a TCP
+//!   listener. Batched requests fan out over
+//!   [`crate::coordinator::pool::parallel_map`] with an order-preserving
+//!   merge, so replies are byte-identical at any `WINDGP_WORKERS`.
+
+pub mod artifact;
+pub mod protocol;
+pub mod server;
+
+pub use artifact::{
+    export_artifacts, partition_from_shards, read_assignment, read_manifest, read_replica_table,
+    write_assignment, write_replica_table, ExportPaths, Manifest, ReplicaTable, SavedAssignment,
+};
+pub use protocol::Request;
+pub use server::{serve_stdio, serve_tcp, ServeState};

@@ -1,0 +1,144 @@
+//! The newline-delimited JSON request protocol spoken by `windgp serve`.
+//!
+//! One request per line, one response line per request, in order. Every
+//! response object carries `"ok"`; errors add `"error"` (and `"op"` when
+//! the operation was recognized). Supported operations:
+//!
+//! ```text
+//! {"op":"assign","u":0,"v":1}        -> owning machine of edge (u, v)
+//! {"op":"replicas","v":3}            -> machines holding v + its master
+//! {"op":"metrics"}                   -> Definition-4 cost report
+//! {"op":"batch","requests":[...]}    -> fan a request list over workers
+//! {"op":"shutdown"}                  -> acknowledge and stop the server
+//! ```
+//!
+//! Parsing is strict: unknown ops, missing fields, non-integer ids and
+//! nested batches are errors — but errors are *responses*, never
+//! connection teardowns, so one bad line in a scripted session doesn't
+//! desynchronize the remaining request/response pairing.
+
+use crate::util::json::{self, obj, Json};
+
+/// A parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Which machine owns edge `(u, v)`?
+    Assign { u: u32, v: u32 },
+    /// Which machines hold a replica of `v`, and which is the master?
+    Replicas { v: u32 },
+    /// The full Definition-4 cost report of the served partition.
+    Metrics,
+    /// Evaluate the inner requests concurrently, responses in input order.
+    Batch(Vec<Request>),
+    /// Acknowledge and stop serving.
+    Shutdown,
+}
+
+/// Parse one request line. The error string is ready to embed in an
+/// [`error_response`].
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = json::parse(line).map_err(|e| e.to_string())?;
+    from_json(&j, false)
+}
+
+fn from_json(j: &Json, nested: bool) -> Result<Request, String> {
+    let op = j
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing 'op' field".to_string())?;
+    match op {
+        "assign" => Ok(Request::Assign { u: field_u32(j, "u")?, v: field_u32(j, "v")? }),
+        "replicas" => Ok(Request::Replicas { v: field_u32(j, "v")? }),
+        "metrics" => Ok(Request::Metrics),
+        "shutdown" => Ok(Request::Shutdown),
+        "batch" => {
+            if nested {
+                return Err("'batch' cannot nest inside a batch".to_string());
+            }
+            let reqs = j
+                .get("requests")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| "batch needs a 'requests' array".to_string())?;
+            let inner: Result<Vec<Request>, String> =
+                reqs.iter().map(|r| from_json(r, true)).collect();
+            Ok(Request::Batch(inner?))
+        }
+        other => Err(format!("unknown op {other:?}")),
+    }
+}
+
+fn field_u32(j: &Json, name: &str) -> Result<u32, String> {
+    let x = j
+        .get(name)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing numeric field '{name}'"))?;
+    if !(0.0..=u32::MAX as f64).contains(&x) || x.fract() != 0.0 {
+        return Err(format!("field '{name}' must be a u32 (got {x})"));
+    }
+    Ok(x as u32)
+}
+
+/// `{"ok":false,"error":...}` — for lines that didn't parse far enough to
+/// know the operation.
+pub fn error_response(msg: &str) -> Json {
+    obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))])
+}
+
+/// An error response tagged with the operation that failed.
+pub fn error_for(op: &str, msg: &str) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("op", Json::Str(op.to_string())),
+        ("error", Json::Str(msg.to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_op() {
+        assert_eq!(
+            parse_request(r#"{"op":"assign","u":3,"v":9}"#),
+            Ok(Request::Assign { u: 3, v: 9 })
+        );
+        assert_eq!(parse_request(r#"{"op":"replicas","v":0}"#), Ok(Request::Replicas { v: 0 }));
+        assert_eq!(parse_request(r#"{"op":"metrics"}"#), Ok(Request::Metrics));
+        assert_eq!(parse_request(r#"{"op":"shutdown"}"#), Ok(Request::Shutdown));
+        assert_eq!(
+            parse_request(r#"{"op":"batch","requests":[{"op":"metrics"}]}"#),
+            Ok(Request::Batch(vec![Request::Metrics]))
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"u":1}"#).unwrap_err().contains("missing 'op'"));
+        assert!(parse_request(r#"{"op":"frobnicate"}"#).unwrap_err().contains("unknown op"));
+        assert!(parse_request(r#"{"op":"assign","u":1}"#).unwrap_err().contains("'v'"));
+        assert!(parse_request(r#"{"op":"assign","u":1.5,"v":2}"#)
+            .unwrap_err()
+            .contains("must be a u32"));
+        assert!(parse_request(r#"{"op":"assign","u":-1,"v":2}"#)
+            .unwrap_err()
+            .contains("must be a u32"));
+        assert!(parse_request(r#"{"op":"batch"}"#).unwrap_err().contains("requests"));
+    }
+
+    #[test]
+    fn nested_batch_is_rejected() {
+        let line = r#"{"op":"batch","requests":[{"op":"batch","requests":[]}]}"#;
+        assert!(parse_request(line).unwrap_err().contains("cannot nest"));
+    }
+
+    #[test]
+    fn error_responses_are_tagged() {
+        assert_eq!(error_response("boom").dump(), r#"{"error":"boom","ok":false}"#);
+        assert_eq!(
+            error_for("assign", "no such edge").dump(),
+            r#"{"error":"no such edge","ok":false,"op":"assign"}"#
+        );
+    }
+}

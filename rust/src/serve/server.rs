@@ -1,0 +1,366 @@
+//! The `windgp serve` evaluation engine: immutable partition state plus
+//! the request → response mapping, independent of any transport.
+//!
+//! Every response is a pure function of (request, state): the state is
+//! never mutated after warm-up, so `batch` requests fan out over
+//! [`parallel_map`] with an order-preserving merge and the response
+//! stream is **byte-identical for any worker count** — the same contract
+//! the partitioner's parallel phases pin, extended to serving.
+//!
+//! Transports: [`serve_stdio`] (newline-delimited JSON over
+//! stdin/stdout, for pipelines and the CI smoke test) and [`serve_tcp`]
+//! (same protocol over a socket, one connection at a time).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::pool::{parallel_map, parallel_map_workers};
+use crate::graph::{EId, Graph, VId};
+use crate::machines::Cluster;
+use crate::partition::{CostReport, CostTracker, EdgePartition, UNASSIGNED};
+use crate::util::json::{obj, Json};
+
+use super::protocol::{error_for, error_response, parse_request, Request};
+
+/// Warm serving state: the graph, the cluster, a [`CostTracker`] built
+/// once from the saved assignment (replica tables, partial degrees), and
+/// the precomputed Definition-4 report answered by `metrics`.
+pub struct ServeState<'a> {
+    pub g: &'a Graph,
+    pub cluster: &'a Cluster,
+    tracker: CostTracker<'a>,
+    report: CostReport,
+}
+
+impl<'a> ServeState<'a> {
+    /// Build the warm state; the partition must match the graph and the
+    /// cluster (serving a mismatched trio would answer garbage).
+    pub fn new(g: &'a Graph, cluster: &'a Cluster, ep: &EdgePartition) -> Result<Self> {
+        if ep.p != cluster.len() {
+            bail!("partition has {} machines but the cluster has {}", ep.p, cluster.len());
+        }
+        if ep.assignment.len() != g.num_edges() {
+            bail!(
+                "partition covers {} edges but the graph has {}",
+                ep.assignment.len(),
+                g.num_edges()
+            );
+        }
+        let tracker = CostTracker::new(g, cluster, ep);
+        let report = tracker.report();
+        Ok(Self { g, cluster, tracker, report })
+    }
+
+    /// Canonical edge id of `(u, v)`, if present. Neighbor lists are
+    /// sorted, so this is a binary search on the lower-degree endpoint —
+    /// O(log deg_min) per lookup.
+    pub fn edge_id(&self, u: VId, v: VId) -> Option<EId> {
+        let n = self.g.num_vertices() as u64;
+        if u == v || u as u64 >= n || v as u64 >= n {
+            return None;
+        }
+        let (a, b) = if self.g.degree(u) <= self.g.degree(v) { (u, v) } else { (v, u) };
+        let pos = self.g.neighbors(a).binary_search(&b).ok()?;
+        Some(self.g.incident_edges(a)[pos])
+    }
+
+    /// Evaluate one request with the session-configured worker count
+    /// (`WINDGP_WORKERS` / cores) for batches.
+    pub fn handle(&self, req: &Request) -> Json {
+        self.handle_workers(req, 0)
+    }
+
+    /// [`Self::handle`] with an explicit batch worker count (`0` = the
+    /// session default). The response is byte-identical for every
+    /// `workers` value: each sub-response depends only on its request and
+    /// the immutable state, and the merge preserves input order.
+    pub fn handle_workers(&self, req: &Request, workers: usize) -> Json {
+        match req {
+            Request::Assign { u, v } => self.assign(*u, *v),
+            Request::Replicas { v } => self.replicas(*v),
+            Request::Metrics => self.metrics(),
+            Request::Shutdown => {
+                obj(vec![("ok", Json::Bool(true)), ("op", Json::Str("shutdown".into()))])
+            }
+            Request::Batch(reqs) => {
+                let idx: Vec<usize> = (0..reqs.len()).collect();
+                let run = |i: usize| self.handle_workers(&reqs[i], 1);
+                let responses = if workers == 0 {
+                    parallel_map(idx, run)
+                } else {
+                    parallel_map_workers(idx, workers, run)
+                };
+                obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("op", Json::Str("batch".into())),
+                    ("count", Json::Num(responses.len() as f64)),
+                    ("responses", Json::Arr(responses)),
+                ])
+            }
+        }
+    }
+
+    fn assign(&self, u: VId, v: VId) -> Json {
+        let Some(e) = self.edge_id(u, v) else {
+            return error_for("assign", &format!("no edge ({u}, {v}) in the served graph"));
+        };
+        let a = self.tracker.assignment[e as usize];
+        let machine = if a == UNASSIGNED { Json::Null } else { Json::Num(a as f64) };
+        obj(vec![
+            ("ok", Json::Bool(true)),
+            ("op", Json::Str("assign".into())),
+            ("u", Json::Num(u as f64)),
+            ("v", Json::Num(v as f64)),
+            ("edge", Json::Num(e as f64)),
+            ("machine", machine),
+        ])
+    }
+
+    fn replicas(&self, v: VId) -> Json {
+        if v as usize >= self.g.num_vertices() {
+            return error_for("replicas", &format!("vertex {v} out of range"));
+        }
+        let machines: Vec<Json> = self
+            .tracker
+            .replica_entries(v)
+            .iter()
+            .map(|&(part, _)| Json::Num(part as f64))
+            .collect();
+        let master = match self.tracker.master_of(v) {
+            Some(part) => Json::Num(part as f64),
+            None => Json::Null,
+        };
+        obj(vec![
+            ("ok", Json::Bool(true)),
+            ("op", Json::Str("replicas".into())),
+            ("v", Json::Num(v as f64)),
+            ("machines", Json::Arr(machines)),
+            ("master", master),
+        ])
+    }
+
+    fn metrics(&self) -> Json {
+        let r = &self.report;
+        let machines: Vec<Json> = (0..self.tracker.p)
+            .map(|i| {
+                obj(vec![
+                    ("id", Json::Num(i as f64)),
+                    ("edges", Json::Num(r.e_count[i] as f64)),
+                    ("vertices", Json::Num(r.v_count[i] as f64)),
+                    ("t_cal", Json::Num(r.t_cal[i])),
+                    ("t_com", Json::Num(r.t_com[i])),
+                    ("t", Json::Num(r.t(i))),
+                    ("feasible", Json::Bool(r.feasible[i])),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("ok", Json::Bool(true)),
+            ("op", Json::Str("metrics".into())),
+            ("vertices", Json::Num(self.g.num_vertices() as f64)),
+            ("edges", Json::Num(self.g.num_edges() as f64)),
+            ("p", Json::Num(self.tracker.p as f64)),
+            ("tc", Json::Num(r.tc)),
+            ("rf", Json::Num(r.rf)),
+            ("alpha_prime", Json::Num(r.alpha_prime)),
+            ("machines", Json::Arr(machines)),
+        ])
+    }
+
+    /// Evaluate one raw line: `(response, stop)` where `stop` marks a
+    /// well-formed `shutdown`. Parse errors become error responses, never
+    /// stream teardowns.
+    pub fn eval_line(&self, line: &str) -> (Json, bool) {
+        match parse_request(line) {
+            Ok(req) => {
+                let stop = matches!(req, Request::Shutdown);
+                (self.handle(&req), stop)
+            }
+            Err(e) => (error_response(&e), false),
+        }
+    }
+
+    /// Drive the protocol over any line-oriented transport: one response
+    /// line per non-blank request line, flushed eagerly so pipe-driven
+    /// clients never deadlock. Returns `true` when a `shutdown` request
+    /// ended the session (vs. the input simply running dry).
+    pub fn serve_lines<R: BufRead, W: Write>(&self, reader: R, writer: &mut W) -> Result<bool> {
+        for line in reader.lines() {
+            let line = line.context("read request line")?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (resp, stop) = self.eval_line(line);
+            writeln!(writer, "{}", resp.dump()).context("write response")?;
+            writer.flush().context("flush response")?;
+            if stop {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+}
+
+/// Serve newline-delimited JSON over stdin/stdout until EOF or a
+/// `shutdown` request.
+pub fn serve_stdio(state: &ServeState<'_>) -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    state.serve_lines(stdin.lock(), &mut out)?;
+    Ok(())
+}
+
+/// Serve the same protocol over TCP, one connection at a time (the state
+/// is immutable, so sequential accept keeps response interleaving
+/// trivially deterministic per connection). A `shutdown` request stops
+/// the listener; a dropped connection only ends that session.
+pub fn serve_tcp(state: &ServeState<'_>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    eprintln!("windgp serve: listening on {}", listener.local_addr()?);
+    for stream in listener.incoming() {
+        let stream = stream.context("accept connection")?;
+        let reader = BufReader::new(stream.try_clone().context("clone connection")?);
+        let mut writer = stream;
+        match state.serve_lines(reader, &mut writer) {
+            Ok(true) => break,
+            Ok(false) => {}
+            Err(e) => eprintln!("windgp serve: connection error: {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::machines::Machine;
+
+    /// The §2.1 running example: a=0..f=5, edges ab,bc,cf,de,ef on three
+    /// machines as {ab,bc}->0, {de,ef}->1, {cf}->2.
+    fn setup() -> (Graph, Cluster, EdgePartition) {
+        let mut b = GraphBuilder::new();
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 5);
+        b.add_edge(3, 4);
+        b.add_edge(4, 5);
+        let g = b.build(6);
+        let cluster = Cluster::new(vec![
+            Machine::new(7, 0.0, 1.0, 1.0),
+            Machine::new(7, 0.0, 2.0, 2.0),
+            Machine::new(5, 0.0, 1.0, 1.0),
+        ]);
+        let ep = EdgePartition::from_assignment(3, vec![0, 0, 2, 1, 1]);
+        (g, cluster, ep)
+    }
+
+    #[test]
+    fn edge_id_finds_edges_in_both_directions() {
+        let (g, cluster, ep) = setup();
+        let s = ServeState::new(&g, &cluster, &ep).unwrap();
+        for e in 0..g.num_edges() as EId {
+            let (u, v) = g.edge(e);
+            assert_eq!(s.edge_id(u, v), Some(e));
+            assert_eq!(s.edge_id(v, u), Some(e));
+        }
+        assert_eq!(s.edge_id(0, 5), None);
+        assert_eq!(s.edge_id(2, 2), None);
+        assert_eq!(s.edge_id(0, 99), None);
+    }
+
+    #[test]
+    fn assign_and_replicas_answer_the_running_example() {
+        let (g, cluster, ep) = setup();
+        let s = ServeState::new(&g, &cluster, &ep).unwrap();
+        let r = s.handle(&Request::Assign { u: 2, v: 1 });
+        assert_eq!(r.get("machine").and_then(Json::as_u64), Some(0));
+        assert_eq!(r.get("edge").and_then(Json::as_u64), Some(1));
+        let r = s.handle(&Request::Assign { u: 0, v: 5 });
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert!(r.get("error").and_then(Json::as_str).unwrap().contains("no edge"));
+        // c=2 is split across machines 0 and 2; b holds both edges on 0
+        let r = s.handle(&Request::Replicas { v: 2 });
+        let machines: Vec<u64> =
+            r.get("machines").unwrap().as_arr().unwrap().iter().filter_map(Json::as_u64).collect();
+        assert_eq!(machines, vec![0, 2]);
+        assert_eq!(r.get("master").and_then(Json::as_u64), Some(0));
+        let r = s.handle(&Request::Replicas { v: 99 });
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn metrics_reports_the_paper_numbers() {
+        let (g, cluster, ep) = setup();
+        let s = ServeState::new(&g, &cluster, &ep).unwrap();
+        let r = s.handle(&Request::Metrics);
+        assert_eq!(r.get("tc").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(r.get("p").and_then(Json::as_u64), Some(3));
+        let machines = r.get("machines").unwrap().as_arr().unwrap();
+        assert_eq!(machines.len(), 3);
+        assert_eq!(machines[1].get("t").and_then(Json::as_f64), Some(7.0));
+    }
+
+    #[test]
+    fn unassigned_edges_serve_null_machine() {
+        let (g, cluster, _) = setup();
+        let mut ep = EdgePartition::unassigned(&g, 3);
+        ep.assignment[0] = 1;
+        let s = ServeState::new(&g, &cluster, &ep).unwrap();
+        let r = s.handle(&Request::Assign { u: 1, v: 2 });
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("machine"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn batch_is_byte_identical_across_worker_counts() {
+        let (g, cluster, ep) = setup();
+        let s = ServeState::new(&g, &cluster, &ep).unwrap();
+        let mut reqs = Vec::new();
+        for e in 0..g.num_edges() as EId {
+            let (u, v) = g.edge(e);
+            reqs.push(Request::Assign { u, v });
+        }
+        for v in 0..g.num_vertices() as u32 {
+            reqs.push(Request::Replicas { v });
+        }
+        reqs.push(Request::Metrics);
+        reqs.push(Request::Assign { u: 0, v: 5 }); // errors participate too
+        let batch = Request::Batch(reqs);
+        let one = s.handle_workers(&batch, 1).dump();
+        for workers in [2, 4, 8] {
+            assert_eq!(one, s.handle_workers(&batch, workers).dump(), "workers={workers}");
+        }
+        let r = s.handle_workers(&batch, 8);
+        assert_eq!(r.get("count").and_then(Json::as_usize), Some(13));
+    }
+
+    #[test]
+    fn serve_lines_runs_a_session_and_stops_on_shutdown() {
+        let (g, cluster, ep) = setup();
+        let s = ServeState::new(&g, &cluster, &ep).unwrap();
+        let script = "\n{\"op\":\"assign\",\"u\":0,\"v\":1}\nnot json\n{\"op\":\"shutdown\"}\n\
+                      {\"op\":\"metrics\"}\n";
+        let mut out = Vec::new();
+        let stopped = s.serve_lines(script.as_bytes(), &mut out).unwrap();
+        assert!(stopped, "shutdown must stop the session");
+        let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
+        assert_eq!(lines.len(), 3, "blank skipped, nothing after shutdown");
+        assert!(lines[0].contains("\"machine\":0"));
+        assert!(lines[1].contains("\"ok\":false"));
+        assert!(lines[2].contains("\"op\":\"shutdown\""));
+    }
+
+    #[test]
+    fn state_rejects_mismatched_inputs() {
+        let (g, cluster, _) = setup();
+        let bad_p = EdgePartition::from_assignment(2, vec![0; 5]);
+        assert!(ServeState::new(&g, &cluster, &bad_p).is_err());
+        let bad_m = EdgePartition::from_assignment(3, vec![0; 4]);
+        assert!(ServeState::new(&g, &cluster, &bad_m).is_err());
+    }
+}

@@ -104,6 +104,12 @@ impl Json {
     }
 }
 
+/// Terse object builder for emitters (`windgp bench`, the export
+/// manifest, the serve protocol): `obj(vec![("k", Json::Num(1.0))])`.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
 fn write_json_string(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {

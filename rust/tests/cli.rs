@@ -11,7 +11,7 @@ fn help_lists_commands() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["experiment", "partition", "simulate", "gen", "smoke", "list"] {
+    for cmd in ["experiment", "partition", "export", "serve", "simulate", "gen", "smoke", "list"] {
         assert!(text.contains(cmd), "missing {cmd}");
     }
 }
@@ -111,6 +111,7 @@ fn bench_emits_valid_json() {
         "expand/partition-uncompacted",
         "sls/destroy-repair",
         "sls/full",
+        "serve/query-batch",
     ] {
         assert!(names.contains(&want), "missing bench entry {want} in {names:?}");
     }

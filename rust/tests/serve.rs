@@ -1,0 +1,253 @@
+//! End-to-end tests for the serving subsystem: export → reload round
+//! trips at the library level, and the full `gen → partition --out →
+//! export → serve` CLI flow over a scripted stdin session.
+
+use std::io::Write as _;
+use std::process::{Command, Stdio};
+
+use windgp::graph::rmat::{generate, RmatParams};
+use windgp::partition::{CostTracker, EdgePartition, Metrics, Partitioner};
+use windgp::serve::{
+    export_artifacts, partition_from_shards, read_assignment, read_manifest, read_replica_table,
+    Request, ServeState,
+};
+use windgp::util::json::{self, Json};
+use windgp::windgp::WindGP;
+use windgp::{Cluster, Machine};
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_windgp"))
+}
+
+fn temp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn export_reload_roundtrip() {
+    // a real WindGP partition of a scale-free graph on a heterogeneous,
+    // memory-unconstrained cluster (the test pins artifact fidelity, not
+    // feasibility behavior)
+    let g = generate(&RmatParams::graph500(8, 8), 17);
+    let mut machines = vec![Machine::new(1 << 40, 10.0, 15.0, 15.0); 2];
+    machines.extend(vec![Machine::new(1 << 40, 5.0, 10.0, 10.0); 4]);
+    let cluster = Cluster::new(machines);
+    let ep = WindGP::default().partition(&g, &cluster, 1);
+    assert!(ep.is_complete());
+
+    let dir = temp_dir("windgp_serve_export_roundtrip");
+    let paths = export_artifacts(&dir, &g, &cluster, &ep).unwrap();
+    assert_eq!(paths.shards.len(), cluster.len());
+    let tracker = CostTracker::new(&g, &cluster, &ep);
+    let report = tracker.report();
+
+    // manifest: identity, counts and totals match the live tracker
+    let manifest = read_manifest(&paths.manifest).unwrap();
+    assert_eq!(manifest.graph_hash, g.content_hash());
+    assert_eq!(manifest.vertices, g.num_vertices());
+    assert_eq!(manifest.edges, g.num_edges());
+    assert_eq!(manifest.cluster.len(), cluster.len());
+    assert_eq!(manifest.cluster.machines, cluster.machines);
+    assert_eq!(manifest.e_count, report.e_count);
+    assert_eq!(manifest.v_count, report.v_count);
+    // floats survive the shortest-decimal JSON round trip exactly
+    assert_eq!(manifest.tc.to_bits(), report.tc.to_bits());
+    assert_eq!(manifest.rf.to_bits(), report.rf.to_bits());
+
+    // shard union == the original edge set, shard index == assignment
+    let (p, edges) = partition_from_shards(&dir, &manifest).unwrap();
+    assert_eq!(p, cluster.len());
+    assert_eq!(edges.len(), g.num_edges());
+    for (i, &(e, u, v, part)) in edges.iter().enumerate() {
+        assert_eq!(e as usize, i, "edge ids must cover 0..m exactly");
+        assert_eq!((u, v), g.edge(e));
+        assert_eq!(part, ep.assignment[e as usize]);
+    }
+
+    // replica table == the from-scratch Metrics reference
+    let table = read_replica_table(&paths.replicas).unwrap();
+    assert_eq!(table.num_vertices(), g.num_vertices());
+    let sets = Metrics::new(&g, &cluster).replica_sets(&ep);
+    let masters = Metrics::new(&g, &cluster).masters(&ep);
+    for v in 0..g.num_vertices() as u32 {
+        assert_eq!(table.machines(v), sets[v as usize], "S({v})");
+        assert_eq!(table.master(v), masters[v as usize], "master({v})");
+    }
+
+    // the embedded warm-start assignment reloads to the same partition
+    let ep2 = read_assignment(&paths.assignment).unwrap().into_partition(&g).unwrap();
+    assert_eq!(ep2.assignment, ep.assignment);
+
+    // a serve state warm-started from the reloaded artifacts answers
+    // identically to one built from the in-process partition
+    let s1 = ServeState::new(&g, &cluster, &ep).unwrap();
+    let s2 = ServeState::new(&g, &manifest.cluster, &ep2).unwrap();
+    let req = Request::Batch(vec![
+        Request::Metrics,
+        Request::Replicas { v: 0 },
+        Request::Assign { u: g.edge(0).0, v: g.edge(0).1 },
+    ]);
+    assert_eq!(s1.handle(&req).dump(), s2.handle(&req).dump());
+}
+
+#[test]
+fn batch_responses_identical_for_any_worker_count() {
+    let g = generate(&RmatParams::graph500(7, 6), 3);
+    let cluster = Cluster::new(vec![Machine::new(1 << 40, 5.0, 10.0, 10.0); 4]);
+    let ep = WindGP::default().partition(&g, &cluster, 2);
+    let s = ServeState::new(&g, &cluster, &ep).unwrap();
+    let mut reqs = Vec::new();
+    for e in (0..g.num_edges() as u32).step_by(3) {
+        let (u, v) = g.edge(e);
+        reqs.push(Request::Assign { u, v });
+        reqs.push(Request::Replicas { v: u });
+    }
+    reqs.push(Request::Metrics);
+    let batch = Request::Batch(reqs);
+    let reference = s.handle_workers(&batch, 1).dump();
+    for workers in [2, 3, 8] {
+        assert_eq!(reference, s.handle_workers(&batch, workers).dump(), "workers={workers}");
+    }
+}
+
+/// The full CLI flow the CI smoke job drives: gen a binary graph,
+/// partition with `--out --json`, export artifacts, then serve scripted
+/// stdin sessions — byte-identical across `WINDGP_WORKERS` settings.
+#[test]
+fn serve_cli_end_to_end() {
+    let dir = temp_dir("windgp_serve_cli_e2e");
+    let graph_path = dir.join("g.bin");
+    let cluster_path = dir.join("cluster.json");
+    let part_path = dir.join("part.bin");
+    let export_dir = dir.join("export");
+
+    // ample memory: ctx-derived clusters for file graphs are paper-scaled
+    // and would be infeasibly tight for a stand-in mesh
+    std::fs::write(
+        &cluster_path,
+        r#"{"m_node":1,"m_edge":2,"machines":[
+            {"mem":1000000,"c_node":10,"c_edge":15,"c_com":15,"count":2},
+            {"mem":1000000,"c_node":5,"c_edge":10,"c_com":10,"count":4}]}"#,
+    )
+    .unwrap();
+
+    let out = bin()
+        .args(["gen", "--graph", "rn-s", "--shrink", "4", "--format", "bin"])
+        .args(["--out", graph_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "gen: {}", String::from_utf8_lossy(&out.stderr));
+
+    let out = bin()
+        .args(["partition", "--graph", graph_path.to_str().unwrap()])
+        .args(["--cluster", cluster_path.to_str().unwrap()])
+        .args(["--algo", "windgp", "--seed", "1", "--json"])
+        .args(["--out", part_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "partition: {}", String::from_utf8_lossy(&out.stderr));
+    let report = json::parse(std::str::from_utf8(&out.stdout).unwrap().trim())
+        .expect("--json must emit valid JSON");
+    assert_eq!(report.get("complete"), Some(&Json::Bool(true)));
+    assert!(report.get("tc").and_then(Json::as_f64).unwrap() > 0.0);
+    assert_eq!(report.get("p").and_then(Json::as_usize), Some(6));
+
+    let out = bin()
+        .args(["export", "--graph", graph_path.to_str().unwrap()])
+        .args(["--cluster", cluster_path.to_str().unwrap()])
+        .args(["--partition", part_path.to_str().unwrap()])
+        .args(["--out", export_dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "export: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(export_dir.join("manifest.json").exists());
+    assert!(export_dir.join("shard_0000.bin").exists());
+    assert!(export_dir.join("replicas.bin").exists());
+
+    // pick a real edge to query
+    let g = windgp::graph::io::read_binary(&graph_path).unwrap();
+    let (u, v) = g.edge(0);
+    let script = format!(
+        "{{\"op\":\"assign\",\"u\":{u},\"v\":{v}}}\n\
+         {{\"op\":\"replicas\",\"v\":{u}}}\n\
+         {{\"op\":\"metrics\"}}\n\
+         {{\"op\":\"batch\",\"requests\":[{{\"op\":\"assign\",\"u\":{u},\"v\":{v}}},\
+         {{\"op\":\"replicas\",\"v\":{v}}}]}}\n\
+         {{\"op\":\"nope\"}}\n\
+         {{\"op\":\"shutdown\"}}\n"
+    );
+
+    let run_serve = |workers: &str| -> String {
+        let mut child = bin()
+            .args(["serve", "--graph", graph_path.to_str().unwrap()])
+            .args(["--export", export_dir.to_str().unwrap()])
+            .env("WINDGP_WORKERS", workers)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .unwrap();
+        child.stdin.as_mut().unwrap().write_all(script.as_bytes()).unwrap();
+        let out = child.wait_with_output().unwrap();
+        assert!(out.status.success(), "serve: {}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8(out.stdout).unwrap()
+    };
+
+    let w1 = run_serve("1");
+    let lines: Vec<&str> = w1.lines().collect();
+    assert_eq!(lines.len(), 6, "one response per request: {w1}");
+    assert!(lines[0].contains("\"ok\":true") && lines[0].contains("\"machine\":"));
+    assert!(lines[1].contains("\"op\":\"replicas\"") && lines[1].contains("\"master\":"));
+    assert!(lines[2].contains("\"tc\":") && lines[2].contains("\"rf\":"));
+    assert!(lines[3].contains("\"count\":2"));
+    assert!(lines[4].contains("\"ok\":false") && lines[4].contains("unknown op"));
+    assert!(lines[5].contains("\"op\":\"shutdown\""));
+    // the serving contract: responses are byte-identical at any worker count
+    assert_eq!(w1, run_serve("8"), "WINDGP_WORKERS must not change responses");
+}
+
+#[test]
+fn serve_rejects_mismatched_export() {
+    let dir = temp_dir("windgp_serve_cli_mismatch");
+    let g = generate(&RmatParams::graph500(7, 4), 5);
+    let cluster = Cluster::new(vec![Machine::new(1 << 40, 5.0, 10.0, 10.0); 3]);
+    let ep = WindGP::default().partition(&g, &cluster, 1);
+    let export_dir = dir.join("export");
+    export_artifacts(&export_dir, &g, &cluster, &ep).unwrap();
+    // a *different* graph on disk than the one exported
+    let other = generate(&RmatParams::graph500(7, 4), 6);
+    let other_path = dir.join("other.bin");
+    windgp::graph::io::write_binary(&other, &other_path).unwrap();
+    let out = bin()
+        .args(["serve", "--graph", other_path.to_str().unwrap()])
+        .args(["--export", export_dir.to_str().unwrap()])
+        .stdin(Stdio::null())
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("different graph"));
+}
+
+#[test]
+fn duplicate_cli_flags_fail_cleanly() {
+    let out = bin()
+        .args(["partition", "--graph", "rn-s", "--graph", "rn-s", "--algo", "windgp"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("duplicate flag --graph"));
+}
+
+#[test]
+fn incomplete_partition_cannot_be_exported() {
+    let g = generate(&RmatParams::graph500(7, 4), 5);
+    let cluster = Cluster::new(vec![Machine::new(1 << 40, 5.0, 10.0, 10.0); 3]);
+    let mut ep = EdgePartition::unassigned(&g, 3);
+    ep.assignment[0] = 0;
+    let dir = temp_dir("windgp_serve_incomplete_export");
+    let err = export_artifacts(dir.join("export"), &g, &cluster, &ep).unwrap_err();
+    assert!(err.to_string().contains("incomplete"), "{err}");
+}
