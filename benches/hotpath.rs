@@ -72,7 +72,7 @@ fn main() {
             assert_eq!(total, m);
         });
         println!("  -> {:.2}M edges parsed/s", throughput(m, s.mean) / 1e6);
-        let mut raw = g.edges.clone();
+        let mut raw = g.edges_vec();
         rng.shuffle(&mut raw);
         let s = bench("ingest: parallel build (merge + CSR)", 3, || {
             let gb = ingest::build_parallel(raw.clone(), 0, 0);

@@ -1,0 +1,67 @@
+#!/usr/bin/env bash
+# CI peak-RSS gate for the pluggable storage subsystem: partitions the
+# same v3 cache twice through the release binary — once with
+# `--storage ram` (materializes the full CSR on the heap) and once with
+# `--storage mapped` (file-backed view behind the bounded page cache) —
+# and asserts from `/usr/bin/time -v` that only the mapped run stays
+# under the residency ceiling.
+#
+# The algorithm is DBH, a streaming baseline whose own working state is
+# O(p + |E|/8) bitmaps and counters: with the partitioner this light, the
+# RSS difference between the two runs is almost entirely the storage
+# layer, which is exactly the claim under test. Run from the repo root
+# after `cargo build --release`.
+set -euo pipefail
+
+BIN="${WINDGP_BIN:-target/release/windgp}"
+# 64 MiB: the shrink-0 tw-s stand-in's CSR alone is ~50 MiB, so the ram
+# run lands well above this while the mapped run (pinned offsets + an
+# 8 MiB page cache + partitioner state) stays well below it.
+CEIL_KB="${CEIL_KB:-65536}"
+WORK="$(mktemp -d)"
+trap 'rm -rf "$WORK"' EXIT
+
+command -v /usr/bin/time > /dev/null || { echo "SKIP: /usr/bin/time not available"; exit 0; }
+
+# Explicit cluster with ample memory: the experiment-context clusters are
+# paper-scaled and infeasibly tight for the stand-in graph.
+cat > "$WORK/cluster.json" <<'EOF'
+{"m_node":1,"m_edge":2,"machines":[
+  {"mem":100000000,"c_node":10,"c_edge":15,"c_com":15,"count":2},
+  {"mem":100000000,"c_node":5,"c_edge":10,"c_com":10,"count":4}]}
+EOF
+
+"$BIN" gen --graph tw-s --out "$WORK/cache.bin" --format bin
+ls -l "$WORK/cache.bin"
+
+peak_kb() { # partition the cache at --storage $1, print peak RSS in KiB
+    local mode="$1"
+    /usr/bin/time -v "$BIN" partition --graph "$WORK/cache.bin" --algo dbh \
+        --cluster "$WORK/cluster.json" --storage "$mode" --seed 1 \
+        > "$WORK/out.$mode" 2> "$WORK/time.$mode" ||
+        { cat "$WORK/time.$mode" >&2; return 1; }
+    awk '/Maximum resident set size/ {print $NF}' "$WORK/time.$mode"
+}
+
+export WINDGP_PAGE_CACHE_MB=8
+mapped_kb="$(peak_kb mapped)"
+ram_kb="$(peak_kb ram)"
+echo "peak RSS: mapped=${mapped_kb} KiB  ram=${ram_kb} KiB  (ceiling ${CEIL_KB} KiB)"
+
+# the memory claim is only meaningful if both runs did the same work:
+# the printed quality reports must be byte-identical across modes
+diff "$WORK/out.mapped" "$WORK/out.ram" ||
+    { echo "FAIL: partition reports differ between storage modes"; exit 1; }
+
+[ "$mapped_kb" -lt "$CEIL_KB" ] ||
+    { echo "FAIL: mapped-mode peak RSS ${mapped_kb} KiB breaches the ${CEIL_KB} KiB ceiling"; exit 1; }
+[ "$ram_kb" -gt "$CEIL_KB" ] ||
+    { echo "FAIL: ram-mode peak RSS ${ram_kb} KiB is under the ceiling — the graph is too small for the gate to demonstrate bounded residency"; exit 1; }
+# relative margin too, so the gate doesn't rot into a lucky constant:
+# mapped must stay under 70% of the ram run
+if [ "$((mapped_kb * 10))" -ge "$((ram_kb * 7))" ]; then
+    echo "FAIL: mapped-mode RSS ${mapped_kb} KiB is not under 70% of ram-mode ${ram_kb} KiB"
+    exit 1
+fi
+
+echo "rss gate OK: mapped stays bounded where ram materializes the full CSR"

@@ -1,64 +1,162 @@
 //! Compressed-sparse-row graph storage.
 //!
-//! A [`Graph`] owns:
-//!   - a canonical undirected edge array `edges: Vec<(VId, VId)>` with
-//!     `u < v` per edge — edge partitioners operate on edge *ids* into this
-//!     array, which makes partition invariants (`E_i` disjoint, union = E)
-//!     cheap to verify;
+//! A [`Graph`] owns, behind the pluggable [`CsrStorage`] layer
+//! (see [`super::storage`]):
+//!   - a canonical undirected edge array `edges` with `u < v` per edge —
+//!     edge partitioners operate on edge *ids* into this array, which makes
+//!     partition invariants (`E_i` disjoint, union = E) cheap to verify;
 //!   - a CSR adjacency (`offsets`/`neighbors`) with, for every adjacency
 //!     slot, the id of the corresponding canonical edge (`incident`), so
 //!     expansion-based partitioners can walk neighbors and claim edges
 //!     without hashing pairs.
+//!
+//! Storage-agnostic access goes through [`Graph::adj_range`] +
+//! [`Graph::neighbor_at`]/[`Graph::incident_at`] (per-slot),
+//! [`Graph::edge`]/[`Graph::edges_iter`] (per-edge) and
+//! [`Graph::copy_adjacency`] (bulk). The borrowed-slice API
+//! ([`Graph::neighbors`], [`Graph::incident_edges`], [`Graph::edges`]) is
+//! only available on `Owned` (ram) storage and panics on `Mapped` graphs —
+//! a mapped view cannot lend slices of a file.
 
+use std::sync::OnceLock;
+
+use super::storage::{CsrStorage, MappedCsr, OwnedCsr};
 use super::{EId, VId};
 
 #[derive(Clone, Debug)]
 pub struct Graph {
-    /// canonical edges, u < v, sorted lexicographically, deduplicated
-    pub edges: Vec<(VId, VId)>,
-    /// CSR row offsets, len = n + 1
-    pub offsets: Vec<u64>,
-    /// CSR column indices, len = 2 * m
-    pub neighbors: Vec<VId>,
-    /// canonical edge id per adjacency slot, len = 2 * m
-    pub incident: Vec<EId>,
+    storage: CsrStorage,
+    /// lazily computed (Owned) or header-seeded (Mapped) content hash
+    hash: OnceLock<u64>,
 }
 
+const SLICE_ON_MAPPED: &str =
+    "slice access requires ram (Owned) storage; mapped graphs go through \
+     adj_range()/neighbor_at()/incident_at()/edges_iter()";
+
 impl Graph {
+    /// Assemble an owned graph from finished CSR parts (builder / ingest /
+    /// cache loaders). Callers guarantee canonical form; [`Graph::validate`]
+    /// checks it where it matters.
+    pub(crate) fn from_csr_parts(
+        edges: Vec<(VId, VId)>,
+        offsets: Vec<u64>,
+        neighbors: Vec<VId>,
+        incident: Vec<EId>,
+    ) -> Self {
+        Graph {
+            storage: CsrStorage::owned(edges, offsets, neighbors, incident),
+            hash: OnceLock::new(),
+        }
+    }
+
+    /// Wrap a validated mapped view (see `io::open_mapped`).
+    pub(crate) fn from_mapped(m: MappedCsr) -> Self {
+        Graph { storage: CsrStorage::Mapped(m), hash: OnceLock::new() }
+    }
+
+    /// Seed the cached content hash (cache loaders that already verified
+    /// or trust the stored value).
+    pub(crate) fn seed_hash(&self, h: u64) {
+        let _ = self.hash.set(h);
+    }
+
+    /// Is this graph served from a file-backed mapped view?
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.storage, CsrStorage::Mapped(_))
+    }
+
+    /// CSR row offsets, len = n + 1. Pinned hot in both storage modes.
+    #[inline]
+    pub fn offsets(&self) -> &[u64] {
+        match &self.storage {
+            CsrStorage::Owned(o) => &o.offsets,
+            CsrStorage::Mapped(m) => &m.offsets,
+        }
+    }
+
     #[inline]
     pub fn num_vertices(&self) -> usize {
-        self.offsets.len() - 1
+        self.offsets().len() - 1
     }
 
     #[inline]
     pub fn num_edges(&self) -> usize {
-        self.edges.len()
+        match &self.storage {
+            CsrStorage::Owned(o) => o.edges.len(),
+            CsrStorage::Mapped(m) => m.m as usize,
+        }
     }
 
-    /// Neighbor slice of `u`.
+    /// Adjacency-slot range of `u` (indexes for [`Self::neighbor_at`] /
+    /// [`Self::incident_at`]; valid in both storage modes).
+    #[inline]
+    pub fn adj_range(&self, u: VId) -> std::ops::Range<usize> {
+        let o = self.offsets();
+        o[u as usize] as usize..o[u as usize + 1] as usize
+    }
+
+    /// Neighbor slice of `u`. **Owned storage only** — panics on mapped.
     #[inline]
     pub fn neighbors(&self, u: VId) -> &[VId] {
-        let (a, b) = (self.offsets[u as usize], self.offsets[u as usize + 1]);
-        &self.neighbors[a as usize..b as usize]
+        match &self.storage {
+            CsrStorage::Owned(o) => {
+                let (a, b) = (o.offsets[u as usize], o.offsets[u as usize + 1]);
+                &o.neighbors[a as usize..b as usize]
+            }
+            CsrStorage::Mapped(_) => panic!("neighbors(): {SLICE_ON_MAPPED}"),
+        }
     }
 
     /// Canonical-edge ids incident to `u`, parallel to [`Self::neighbors`].
+    /// **Owned storage only** — panics on mapped.
     #[inline]
     pub fn incident_edges(&self, u: VId) -> &[EId] {
-        let (a, b) = (self.offsets[u as usize], self.offsets[u as usize + 1]);
-        &self.incident[a as usize..b as usize]
+        match &self.storage {
+            CsrStorage::Owned(o) => {
+                let (a, b) = (o.offsets[u as usize], o.offsets[u as usize + 1]);
+                &o.incident[a as usize..b as usize]
+            }
+            CsrStorage::Mapped(_) => panic!("incident_edges(): {SLICE_ON_MAPPED}"),
+        }
+    }
+
+    /// The canonical edge array. **Owned storage only** — panics on mapped
+    /// (use [`Self::edges_iter`] / [`Self::edges_vec`]).
+    #[inline]
+    pub fn edges(&self) -> &[(VId, VId)] {
+        match &self.storage {
+            CsrStorage::Owned(o) => &o.edges,
+            CsrStorage::Mapped(_) => panic!("edges(): {SLICE_ON_MAPPED}"),
+        }
+    }
+
+    /// Neighbor at adjacency slot `idx` (both storage modes).
+    #[inline]
+    pub fn neighbor_at(&self, idx: usize) -> VId {
+        match &self.storage {
+            CsrStorage::Owned(o) => o.neighbors[idx],
+            CsrStorage::Mapped(m) => m.neighbor_at(idx),
+        }
+    }
+
+    /// Canonical edge id at adjacency slot `idx` (both storage modes).
+    #[inline]
+    pub fn incident_at(&self, idx: usize) -> EId {
+        match &self.storage {
+            CsrStorage::Owned(o) => o.incident[idx],
+            CsrStorage::Mapped(m) => m.incident_at(idx),
+        }
     }
 
     #[inline]
     pub fn degree(&self, u: VId) -> usize {
-        (self.offsets[u as usize + 1] - self.offsets[u as usize]) as usize
+        let o = self.offsets();
+        (o[u as usize + 1] - o[u as usize]) as usize
     }
 
     pub fn max_degree(&self) -> usize {
-        (0..self.num_vertices() as VId)
-            .map(|u| self.degree(u))
-            .max()
-            .unwrap_or(0)
+        self.offsets().windows(2).map(|w| (w[1] - w[0]) as usize).max().unwrap_or(0)
     }
 
     pub fn avg_degree(&self) -> f64 {
@@ -71,14 +169,75 @@ impl Graph {
     /// Endpoints of canonical edge `e` (u < v).
     #[inline]
     pub fn edge(&self, e: EId) -> (VId, VId) {
-        self.edges[e as usize]
+        match &self.storage {
+            CsrStorage::Owned(o) => o.edges[e as usize],
+            CsrStorage::Mapped(m) => m.edge(e),
+        }
+    }
+
+    /// Iterate the canonical edge stream in edge-id order (both modes).
+    pub fn edges_iter(&self) -> impl Iterator<Item = (VId, VId)> + '_ {
+        (0..self.num_edges() as EId).map(move |e| self.edge(e))
+    }
+
+    /// Materialize the canonical edge array (clone for owned storage,
+    /// chunked bulk read for mapped).
+    pub fn edges_vec(&self) -> Vec<(VId, VId)> {
+        match &self.storage {
+            CsrStorage::Owned(o) => o.edges.clone(),
+            CsrStorage::Mapped(m) => {
+                let mut out = Vec::new();
+                m.copy_edges(&mut out);
+                out
+            }
+        }
+    }
+
+    /// Materialize the full `neighbors`/`incident` arrays (clone for owned
+    /// storage, chunked bulk read for mapped). The working-graph layer
+    /// builds its mutable copies through this in either mode.
+    pub fn copy_adjacency(&self) -> (Vec<VId>, Vec<EId>) {
+        match &self.storage {
+            CsrStorage::Owned(o) => (o.neighbors.clone(), o.incident.clone()),
+            CsrStorage::Mapped(m) => {
+                let slots = 2 * m.m as usize;
+                (
+                    m.copy_section_u32(m.neighbors_off, slots),
+                    m.copy_section_u32(m.incident_off, slots),
+                )
+            }
+        }
+    }
+
+    /// Canonical edge id of `(u, v)` if the edge exists (both modes;
+    /// binary search over the sorted neighbor list of the lower-degree
+    /// endpoint).
+    pub fn find_edge(&self, u: VId, v: VId) -> Option<EId> {
+        if u == v {
+            return None;
+        }
+        let n = self.num_vertices();
+        if u as usize >= n || v as usize >= n {
+            return None;
+        }
+        let (a, b) = if self.degree(u) <= self.degree(v) { (u, v) } else { (v, u) };
+        let r = self.adj_range(a);
+        let (mut lo, mut hi) = (r.start, r.end);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            let w = self.neighbor_at(mid);
+            match w.cmp(&b) {
+                std::cmp::Ordering::Less => lo = mid + 1,
+                std::cmp::Ordering::Greater => hi = mid,
+                std::cmp::Ordering::Equal => return Some(self.incident_at(mid)),
+            }
+        }
+        None
     }
 
     /// Degree array (convenience for partitioners that score by degree).
     pub fn degrees(&self) -> Vec<u32> {
-        (0..self.num_vertices() as VId)
-            .map(|u| self.degree(u) as u32)
-            .collect()
+        self.offsets().windows(2).map(|w| (w[1] - w[0]) as u32).collect()
     }
 
     /// Deterministic 64-bit content hash (FNV-1a over the vertex count,
@@ -86,32 +245,47 @@ impl Graph {
     /// iff their canonical forms are identical, so saved assignments and
     /// export artifacts can be bound to the exact graph they were
     /// computed for and rejected when replayed against a different one.
+    ///
+    /// Cached after first computation. Mapped graphs return the hash
+    /// stored in the v3 cache header (no O(m) pass; the writer computed
+    /// it and the ram loader cross-checks it on every full read).
     pub fn content_hash(&self) -> u64 {
-        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-        fn mix(mut h: u64, x: u64) -> u64 {
-            for b in x.to_le_bytes() {
-                h ^= b as u64;
-                h = h.wrapping_mul(FNV_PRIME);
+        *self.hash.get_or_init(|| match &self.storage {
+            CsrStorage::Owned(o) => {
+                content_hash_stream(o.offsets.len() as u64 - 1, o.edges.len() as u64, |mix| {
+                    for &(u, v) in &o.edges {
+                        mix(u, v);
+                    }
+                })
             }
-            h
-        }
-        let mut h = FNV_OFFSET;
-        h = mix(h, self.num_vertices() as u64);
-        h = mix(h, self.num_edges() as u64);
-        for &(u, v) in &self.edges {
-            h = mix(h, ((u as u64) << 32) | v as u64);
-        }
-        h
+            CsrStorage::Mapped(m) => m.stored_hash,
+        })
     }
 
-    /// Quick structural sanity check used by tests and after IO.
+    /// Quick structural sanity check used by tests and after IO. Owned
+    /// graphs get the full O(n + m) pass; mapped graphs get the cheap
+    /// O(n) offsets checks (the heavy sections were validated against the
+    /// header by the writer, and the edge stream is pinned by the stored
+    /// content hash).
     pub fn validate(&self) -> Result<(), String> {
-        let n = self.num_vertices() as VId;
-        if self.neighbors.len() != 2 * self.edges.len() {
+        let o = self.offsets();
+        let n = self.num_vertices();
+        let m = self.num_edges();
+        if o[0] != 0 || o[n] != 2 * m as u64 {
+            return Err("offset endpoints don't match edge count".into());
+        }
+        if o.windows(2).any(|w| w[0] > w[1]) {
+            return Err("offsets not monotone".into());
+        }
+        let owned = match &self.storage {
+            CsrStorage::Owned(o) => o,
+            CsrStorage::Mapped(_) => return Ok(()),
+        };
+        let n = n as VId;
+        if owned.neighbors.len() != 2 * owned.edges.len() {
             return Err("csr size mismatch".into());
         }
-        for (i, &(u, v)) in self.edges.iter().enumerate() {
+        for (i, &(u, v)) in owned.edges.iter().enumerate() {
             if u >= v {
                 return Err(format!("edge {i} not canonical: ({u},{v})"));
             }
@@ -119,7 +293,7 @@ impl Graph {
                 return Err(format!("edge {i} out of range"));
             }
         }
-        if self.edges.windows(2).any(|w| w[0] >= w[1]) {
+        if owned.edges.windows(2).any(|w| w[0] >= w[1]) {
             return Err("edge array not strictly sorted".into());
         }
         for u in 0..n {
@@ -133,6 +307,30 @@ impl Graph {
         }
         Ok(())
     }
+}
+
+/// FNV-1a over (n, m, edge stream) — the one content-hash definition
+/// shared by [`Graph::content_hash`] and the out-of-core cache writer
+/// (which streams edges from disk instead of a slice).
+pub(crate) fn content_hash_stream<F: FnOnce(&mut dyn FnMut(VId, VId))>(
+    n: u64,
+    m: u64,
+    edges: F,
+) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    fn mix(mut h: u64, x: u64) -> u64 {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
+    let mut h = FNV_OFFSET;
+    h = mix(h, n);
+    h = mix(h, m);
+    edges(&mut |u, v| h = mix(h, ((u as u64) << 32) | v as u64));
+    h
 }
 
 /// Accumulates raw (possibly duplicated / self-looped / unsorted) edges and
@@ -172,6 +370,10 @@ impl GraphBuilder {
 
     /// Sort + dedup + build CSR. `min_vertices` lets callers force a vertex
     /// count (e.g. generators that may leave trailing isolated vertices).
+    ///
+    /// Slot-order invariant (load-bearing for the out-of-core builder and
+    /// the differential tests): within each vertex's adjacency window,
+    /// slots are filled in ascending canonical edge-id order.
     pub fn build(mut self, min_vertices: usize) -> Graph {
         self.edges.sort_unstable();
         self.edges.dedup();
@@ -200,7 +402,7 @@ impl GraphBuilder {
             incident[cv] = e as EId;
             cursor[v as usize] += 1;
         }
-        Graph { edges: self.edges, offsets, neighbors, incident }
+        Graph::from_csr_parts(self.edges, offsets, neighbors, incident)
     }
 }
 
@@ -223,6 +425,7 @@ mod tests {
         assert_eq!(g.num_edges(), 3);
         assert_eq!(g.degree(0), 2);
         assert_eq!(g.neighbors(1), &[0, 2]);
+        assert!(!g.is_mapped());
         g.validate().unwrap();
     }
 
@@ -247,6 +450,39 @@ mod tests {
                 assert!((a, b) == (u.min(nb), u.max(nb)));
             }
         }
+    }
+
+    #[test]
+    fn indexed_accessors_match_slices() {
+        let g = triangle();
+        for u in 0..3u32 {
+            let r = g.adj_range(u);
+            let nbrs: Vec<_> = r.clone().map(|i| g.neighbor_at(i)).collect();
+            let incs: Vec<_> = r.map(|i| g.incident_at(i)).collect();
+            assert_eq!(nbrs, g.neighbors(u));
+            assert_eq!(incs, g.incident_edges(u));
+        }
+        let edges: Vec<_> = g.edges_iter().collect();
+        assert_eq!(edges, g.edges());
+        assert_eq!(g.edges_vec(), g.edges());
+        let (nb, inc) = g.copy_adjacency();
+        assert_eq!(nb.len(), 2 * g.num_edges());
+        assert_eq!(inc.len(), 2 * g.num_edges());
+    }
+
+    #[test]
+    fn find_edge_both_orders() {
+        let g = triangle();
+        for (e, &(u, v)) in g.edges().iter().enumerate() {
+            assert_eq!(g.find_edge(u, v), Some(e as EId));
+            assert_eq!(g.find_edge(v, u), Some(e as EId));
+        }
+        assert_eq!(g.find_edge(0, 0), None);
+        assert_eq!(g.find_edge(0, 99), None);
+        let mut b = GraphBuilder::new();
+        b.add_edge(0, 1);
+        let g = b.build(4);
+        assert_eq!(g.find_edge(2, 3), None);
     }
 
     #[test]

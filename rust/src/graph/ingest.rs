@@ -26,9 +26,12 @@
 //! optional dense remap ([`Remap`]) so CSR arrays are sized by the number
 //! of *distinct* vertices instead of `max_id + 1`.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::fs::File;
-use std::io::Read;
-use std::path::Path;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -36,7 +39,8 @@ use crate::coordinator::pool::{
     chunk_ranges, effective_workers, merge_sorted_dedup, parallel_map_workers,
 };
 
-use super::{EId, Graph, VId};
+use super::csr::content_hash_stream;
+use super::{io, EId, Graph, VId};
 
 /// How gapped vertex ids are handled during ingest.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -370,7 +374,287 @@ fn csr_from_sorted_edges(
             }
         });
     }
-    Graph { edges, offsets, neighbors, incident }
+    Graph::from_csr_parts(edges, offsets, neighbors, incident)
+}
+
+// ---------------------------------------------------------------------------
+// Out-of-core ingestion: text edge list -> v3 cache under a memory budget
+// ---------------------------------------------------------------------------
+
+/// Stats returned by [`ingest_text_to_cache`].
+#[derive(Clone, Copy, Debug)]
+pub struct OocStats {
+    /// vertex count of the built graph
+    pub n: usize,
+    /// canonical (deduplicated) edge count
+    pub m: usize,
+    /// sorted runs spilled to disk (1 = the input fit one run)
+    pub runs: usize,
+}
+
+/// Floor for the out-of-core budget so degenerate values still make
+/// progress: runs of >= 1024 edges, fill windows of >= 2048 slots.
+const OOC_MIN_BUDGET: usize = 16 * 1024;
+
+/// Build a v3 binary cache from a SNAP text edge list **without ever
+/// materializing the graph**, holding peak memory to roughly
+/// `budget_bytes` of transient buffers plus the O(n) degree/offset
+/// arrays:
+///
+///   1. **spill** — parse the text stream (same semantics as
+///      [`parse_text`]) into canonical-edge buffers of at most
+///      `budget/16` bytes; each buffer is sorted, deduplicated and
+///      written to a sibling temp run file;
+///   2. **merge** — k-way heap merge of the runs with global dedup,
+///      streaming the edge section of the v3 file directly and counting
+///      degrees as edges pass by;
+///   3. **fill** — `set_len` zero-extends the file to the full v3 layout,
+///      the offset array (prefix sums of the degrees) is written, then
+///      neighbor/incident slots are filled window-by-window: each
+///      contiguous vertex window small enough for the budget re-streams
+///      the edge section once and writes its slot range with
+///      `write_all_at`;
+///   4. **seal** — one more streaming pass computes the FNV-1a content
+///      hash and the 64-byte header is written last.
+///
+/// The single scan per window handles both endpoints of every edge in
+/// ascending edge-id order, which is exactly the sequential
+/// [`super::GraphBuilder`] slot order — so the output is **byte-identical**
+/// to [`io::write_binary`] of the same graph built in memory (pinned by a
+/// test). Gapped-id remapping is not applied here: the O(n) arrays are
+/// sized by `max_id + 1`, so feed dense-ish id spaces.
+pub fn ingest_text_to_cache<P: AsRef<Path>, Q: AsRef<Path>>(
+    input: P,
+    out: Q,
+    budget_bytes: usize,
+) -> Result<OocStats> {
+    let budget = budget_bytes.max(OOC_MIN_BUDGET);
+    let display = input.as_ref().display().to_string();
+    let f = File::open(&input).with_context(|| format!("open {display}"))?;
+    let out_path = out.as_ref().to_path_buf();
+    if let Some(dir) = out_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    // run files live next to the output so they share its filesystem; the
+    // pid suffix keeps concurrent processes from colliding
+    let run_path = |i: usize| -> PathBuf {
+        let mut name = out_path.as_os_str().to_os_string();
+        name.push(format!(".run{i}.{}.tmp", std::process::id()));
+        PathBuf::from(name)
+    };
+
+    // phase 1: spill sorted runs
+    let run_cap = (budget / 16).max(1024); // edges per sorted run
+    let mut runs: Vec<PathBuf> = Vec::new();
+    let mut pending: Vec<(VId, VId)> = Vec::with_capacity(run_cap.min(1 << 20));
+    let mut max_v: VId = 0;
+    let mut vertex_hint: Option<usize> = None;
+    let spill = |edges: &mut Vec<(VId, VId)>, runs: &mut Vec<PathBuf>| -> Result<()> {
+        edges.sort_unstable();
+        edges.dedup();
+        let p = run_path(runs.len());
+        let mut w = BufWriter::with_capacity(1 << 20, File::create(&p)?);
+        for &(u, v) in edges.iter() {
+            w.write_all(&u.to_le_bytes())?;
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.flush()?;
+        runs.push(p);
+        edges.clear();
+        Ok(())
+    };
+    for (lineno, line) in BufReader::with_capacity(1 << 20, f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if t.starts_with('#') || t.starts_with('%') {
+            if vertex_hint.is_none() {
+                vertex_hint = vertex_count_hint(t);
+            }
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (u, v) = match (it.next(), it.next()) {
+            (Some(u), Some(v)) => (u, v),
+            _ => bail!("line {}: expected 'u v'", lineno + 1),
+        };
+        let u: VId = u.parse().with_context(|| format!("line {}", lineno + 1))?;
+        let v: VId = v.parse().with_context(|| format!("line {}", lineno + 1))?;
+        if u == v {
+            continue; // drop self-loops, as GraphBuilder::add_edge does
+        }
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        max_v = max_v.max(b);
+        pending.push((a, b));
+        if pending.len() >= run_cap {
+            spill(&mut pending, &mut runs)?;
+        }
+    }
+    if !pending.is_empty() || runs.is_empty() {
+        spill(&mut pending, &mut runs)?;
+    }
+    drop(pending);
+
+    // phase 2: k-way merge-dedup straight into the v3 edge section,
+    // counting degrees on the way through
+    fn next_edge(r: &mut BufReader<File>) -> Result<Option<(VId, VId)>> {
+        let mut b = [0u8; 8];
+        match r.read_exact(&mut b) {
+            Ok(()) => Ok(Some((
+                u32::from_le_bytes(b[0..4].try_into().unwrap()),
+                u32::from_le_bytes(b[4..8].try_into().unwrap()),
+            ))),
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+    let n = (max_v as usize + 1).max(vertex_hint.unwrap_or(0)).max(1);
+    // read+write: phases 3b/4 re-stream the edge section from this handle
+    let out_f = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(&out_path)?;
+    let mut readers: Vec<BufReader<File>> = Vec::with_capacity(runs.len());
+    let rbuf = (budget / runs.len().max(1)).clamp(4096, 1 << 20);
+    for p in &runs {
+        readers.push(BufReader::with_capacity(rbuf, File::open(p)?));
+    }
+    let mut heap: BinaryHeap<Reverse<((VId, VId), usize)>> = BinaryHeap::new();
+    for (i, r) in readers.iter_mut().enumerate() {
+        if let Some(e) = next_edge(r)? {
+            heap.push(Reverse((e, i)));
+        }
+    }
+    let mut deg = vec![0u64; n];
+    let mut m: u64 = 0;
+    {
+        let mut w = BufWriter::with_capacity(1 << 20, &out_f);
+        w.write_all(&[0u8; 64])?; // header placeholder, sealed in phase 4
+        let mut last: Option<(VId, VId)> = None;
+        while let Some(Reverse((e, i))) = heap.pop() {
+            if let Some(nxt) = next_edge(&mut readers[i])? {
+                heap.push(Reverse((nxt, i)));
+            }
+            if last == Some(e) {
+                continue; // duplicate across runs
+            }
+            last = Some(e);
+            w.write_all(&e.0.to_le_bytes())?;
+            w.write_all(&e.1.to_le_bytes())?;
+            deg[e.0 as usize] += 1;
+            deg[e.1 as usize] += 1;
+            m += 1;
+        }
+        w.flush()?;
+    }
+    drop(readers);
+    for p in &runs {
+        let _ = std::fs::remove_file(p);
+    }
+    if m > u32::MAX as u64 {
+        bail!("{display}: {m} canonical edges exceed the u32 edge-id space");
+    }
+
+    // phase 3a: zero-extend to the full layout (alignment gaps must be
+    // zero for byte-identity with write_binary) and write the offsets
+    let lay = io::v3_layout(n as u64, m);
+    out_f.set_len(lay.total)?;
+    let mut offsets = vec![0u64; n + 1];
+    let mut acc = 0u64;
+    for (i, &d) in deg.iter().enumerate() {
+        acc += d;
+        offsets[i + 1] = acc;
+    }
+    drop(deg);
+    debug_assert_eq!(acc, 2 * m);
+    let mut obuf = Vec::with_capacity((n + 1) * 8);
+    for &o in &offsets {
+        obuf.extend_from_slice(&o.to_le_bytes());
+    }
+    out_f.write_all_at(&obuf, lay.offsets_off)?;
+    drop(obuf);
+
+    // phase 3b: windowed neighbor/incident fill. Each window of vertices
+    // re-streams the edge section once; handling both endpoints of each
+    // edge in one ascending-id scan reproduces the sequential builder's
+    // per-vertex slot order exactly.
+    let slots_per_window = ((budget / 8) as u64).max(2048);
+    let mut a = 0usize;
+    while a < n {
+        let mut b = a + 1;
+        while b < n && offsets[b + 1] - offsets[a] <= slots_per_window {
+            b += 1;
+        }
+        let base = offsets[a];
+        let len = (offsets[b] - base) as usize;
+        let mut nbr = vec![0u8; len * 4];
+        let mut inc = vec![0u8; len * 4];
+        let mut cursor: Vec<u64> = offsets[a..b].to_vec();
+        let mut chunk = vec![0u8; 1 << 22];
+        let mut pos = lay.edges_off;
+        let edges_end = lay.edges_off + m * 8;
+        let mut e: u32 = 0;
+        while pos < edges_end {
+            let take = chunk.len().min((edges_end - pos) as usize);
+            out_f.read_exact_at(&mut chunk[..take], pos)?;
+            for rec in chunk[..take].chunks_exact(8) {
+                let u = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+                let v = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+                for (end, nb) in [(u, v), (v, u)] {
+                    let wi = end as usize;
+                    if wi >= a && wi < b {
+                        let slot = (cursor[wi - a] - base) as usize;
+                        nbr[slot * 4..slot * 4 + 4].copy_from_slice(&nb.to_le_bytes());
+                        inc[slot * 4..slot * 4 + 4].copy_from_slice(&e.to_le_bytes());
+                        cursor[wi - a] += 1;
+                    }
+                }
+                e += 1;
+            }
+            pos += take as u64;
+        }
+        out_f.write_all_at(&nbr, lay.neighbors_off + base * 4)?;
+        out_f.write_all_at(&inc, lay.incident_off + base * 4)?;
+        a = b;
+    }
+
+    // phase 4: hash pass + header seal (same FNV the in-memory Graph uses)
+    let mut io_err: Option<std::io::Error> = None;
+    let hash = content_hash_stream(n as u64, m, |emit| {
+        let mut chunk = vec![0u8; 1 << 22];
+        let mut pos = lay.edges_off;
+        let end = lay.edges_off + m * 8;
+        while pos < end {
+            let take = chunk.len().min((end - pos) as usize);
+            if let Err(e) = out_f.read_exact_at(&mut chunk[..take], pos) {
+                io_err = Some(e);
+                return;
+            }
+            for rec in chunk[..take].chunks_exact(8) {
+                emit(
+                    u32::from_le_bytes(rec[0..4].try_into().unwrap()),
+                    u32::from_le_bytes(rec[4..8].try_into().unwrap()),
+                );
+            }
+            pos += take as u64;
+        }
+    });
+    if let Some(e) = io_err {
+        return Err(e.into());
+    }
+    let mut hdr = [0u8; 64];
+    hdr[0..4].copy_from_slice(&io::BIN_MAGIC_V3.to_le_bytes());
+    hdr[8..16].copy_from_slice(&(n as u64).to_le_bytes());
+    hdr[16..24].copy_from_slice(&m.to_le_bytes());
+    hdr[24..32].copy_from_slice(&hash.to_le_bytes());
+    out_f.write_all_at(&hdr, 0)?;
+    Ok(OocStats { n, m: m as usize, runs: runs.len() })
 }
 
 /// Distinct endpoint ids across all chunks, sorted ascending.
@@ -529,10 +813,9 @@ mod tests {
         let seq = b.build(12);
         for workers in [1usize, 2, 4, 8] {
             let par = build_parallel(raw.clone(), 12, workers);
-            assert_eq!(par.edges, seq.edges, "workers={workers}");
-            assert_eq!(par.offsets, seq.offsets, "workers={workers}");
-            assert_eq!(par.neighbors, seq.neighbors, "workers={workers}");
-            assert_eq!(par.incident, seq.incident, "workers={workers}");
+            assert_eq!(par.edges(), seq.edges(), "workers={workers}");
+            assert_eq!(par.offsets(), seq.offsets(), "workers={workers}");
+            assert_eq!(par.copy_adjacency(), seq.copy_adjacency(), "workers={workers}");
         }
     }
 
@@ -565,7 +848,7 @@ mod tests {
         .unwrap();
         assert_eq!(ing.vertex_ids, Some(vec![5, 7, 4_000_000]));
         assert_eq!(ing.graph.num_vertices(), 3);
-        assert_eq!(ing.graph.edges, vec![(0, 1), (0, 2), (1, 2)]);
+        assert_eq!(ing.graph.edges(), vec![(0, 1), (0, 2), (1, 2)]);
         ing.graph.validate().unwrap();
         // Auto fires for this id space too (max_id >> 8m)
         let auto = ingest_text(text, IngestOptions { workers: 2, remap: Remap::Auto }).unwrap();
@@ -584,5 +867,55 @@ mod tests {
         assert_eq!(ing.graph.num_vertices(), 3);
         let auto = ingest_text(text, IngestOptions { workers: 2, remap: Remap::Auto }).unwrap();
         assert!(auto.vertex_ids.is_none());
+    }
+
+    #[test]
+    fn oocore_cache_matches_in_memory_writer() {
+        let g = crate::graph::rmat::generate(
+            &crate::graph::rmat::RmatParams::graph500(9, 8),
+            7,
+        );
+        let dir = std::env::temp_dir().join(format!("windgp_ooc_eq_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let txt = dir.join("g.txt");
+        let ram = dir.join("g.ram.bin");
+        let ooc = dir.join("g.ooc.bin");
+        io::write_edge_list(&g, &txt).unwrap();
+        io::write_binary(&g, &ram).unwrap();
+        // 1 byte rounds up to the floor budget, forcing many spilled runs
+        let stats = ingest_text_to_cache(&txt, &ooc, 1).unwrap();
+        assert_eq!(stats.n, g.num_vertices());
+        assert_eq!(stats.m, g.num_edges());
+        assert!(stats.runs >= 2, "budget too large to exercise spills: {} runs", stats.runs);
+        // the out-of-core path must produce the exact bytes write_binary does
+        let a = std::fs::read(&ram).unwrap();
+        let b = std::fs::read(&ooc).unwrap();
+        assert_eq!(a, b, "out-of-core v3 cache differs from in-memory writer");
+        let gm = io::open_mapped(&ooc).unwrap();
+        assert!(gm.is_mapped());
+        assert_eq!(gm.content_hash(), g.content_hash());
+        assert_eq!(gm.edges_vec(), g.edges_vec());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oocore_handles_dups_hint_and_empty() {
+        let dir = std::env::temp_dir().join(format!("windgp_ooc_edge_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let txt = dir.join("tiny.txt");
+        let out = dir.join("tiny.bin");
+        // header hint pads n past the max endpoint; dups + self loops drop
+        std::fs::write(&txt, "# tiny: 9 vertices, 3 edges\n3 1\n1 3\n5 5\n0 2\n2 0\n").unwrap();
+        let stats = ingest_text_to_cache(&txt, &out, 1 << 20).unwrap();
+        assert_eq!((stats.n, stats.m), (9, 2));
+        let g = io::read_binary(&out).unwrap(); // verifies the stored hash
+        assert_eq!(g.edges_vec(), vec![(0, 2), (1, 3)]);
+        // empty input still produces a valid single-vertex cache
+        std::fs::write(&txt, "# nothing\n").unwrap();
+        let stats = ingest_text_to_cache(&txt, &out, 1 << 20).unwrap();
+        assert_eq!((stats.n, stats.m), (1, 0));
+        let g = io::read_binary(&out).unwrap();
+        assert_eq!(g.num_vertices(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

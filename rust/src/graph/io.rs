@@ -1,19 +1,30 @@
 //! Edge-list IO in the SNAP text format the paper's datasets ship in:
 //! one `u v` pair per line, `#` comments, arbitrary whitespace. A
 //! little-endian binary cache avoids re-parsing large generated stand-ins
-//! between runs; the v2 format serializes the finished CSR
-//! (`offsets`/`neighbors`/`incident`) behind a length-validated header, so
-//! reload skips the sort/dedup/CSR rebuild entirely. [`load_path`] sniffs
-//! the format and routes text through the parallel
-//! [`super::ingest`] pipeline.
+//! between runs. Three cache generations exist:
+//!
+//!   - **v1**: header + raw edge pairs — full rebuild on load;
+//!   - **v2**: header + CSR image (`offsets`/`neighbors`/`incident`) —
+//!     reload skips the rebuild but still materializes everything;
+//!   - **v3** (current writer): a 64-byte header carrying `n`, `m` and the
+//!     [`Graph::content_hash`], then the canonical edge array plus the CSR
+//!     image in **64-byte-aligned sections**. The alignment means no 4- or
+//!     8-byte record straddles a page boundary, so [`open_mapped`] can
+//!     serve the file zero-copy through the bounded page cache in
+//!     [`super::storage`] with only the offsets array resident.
+//!
+//! All three read back via [`read_binary`]; [`load_path`] sniffs the
+//! format and routes text through the parallel [`super::ingest`] pipeline.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::os::unix::fs::FileExt;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use super::ingest::{self, Ingested};
+use super::storage::MappedCsr;
 use super::{EId, Graph, GraphBuilder, VId};
 
 /// Read a SNAP-format text edge list (sequential reference path). A
@@ -55,7 +66,7 @@ pub fn write_edge_list<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
     let f = File::create(&path)?;
     let mut w = BufWriter::new(f);
     writeln!(w, "# undirected graph: {} vertices, {} edges", g.num_vertices(), g.num_edges())?;
-    for &(u, v) in &g.edges {
+    for (u, v) in g.edges_iter() {
         writeln!(w, "{u}\t{v}")?;
     }
     Ok(())
@@ -67,9 +78,40 @@ const BIN_MAGIC_V1: u32 = 0x5747_4201; // "WGB\x01"
 /// v2: magic, n, m, offsets (n+1 × u64), neighbors (2m × u32), incident
 /// (2m × u32) — the finished CSR image; reload skips the rebuild.
 const BIN_MAGIC_V2: u32 = 0x5747_4202; // "WGB\x02"
+/// v3: 64-byte header (magic, reserved, n, m, content hash, zero pad),
+/// then edges / offsets / neighbors / incident in 64-byte-aligned
+/// sections. Mappable; the stored hash replaces the O(m) rehash on load.
+pub(crate) const BIN_MAGIC_V3: u32 = 0x5747_4203; // "WGB\x03"
 
 /// Largest vertex count any cache header may claim (ids are u32).
 const MAX_HEADER_N: u64 = (u32::MAX as u64) + 1;
+
+/// Section alignment of the v3 layout. 64 divides the 64 KiB page size
+/// and every record size (4/8 bytes), so aligned sections never put a
+/// record across a page boundary.
+const V3_ALIGN: u64 = 64;
+
+/// Byte offsets of the four v3 sections plus the total file length, all
+/// derived from (n, m). Shared by the writer, the ram reader, the mapped
+/// opener and the out-of-core builder so the layout is defined once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct V3Layout {
+    pub edges_off: u64,
+    pub offsets_off: u64,
+    pub neighbors_off: u64,
+    pub incident_off: u64,
+    pub total: u64,
+}
+
+pub(crate) fn v3_layout(n: u64, m: u64) -> V3Layout {
+    let align = |x: u64| x.div_ceil(V3_ALIGN) * V3_ALIGN;
+    let edges_off = 64;
+    let offsets_off = align(edges_off + m * 8);
+    let neighbors_off = align(offsets_off + (n + 1) * 8);
+    let incident_off = align(neighbors_off + 2 * m * 4);
+    let total = incident_off + 2 * m * 4; // tail section unpadded
+    V3Layout { edges_off, offsets_off, neighbors_off, incident_off, total }
+}
 
 /// Shared header-vs-length validation for every binary artifact (cache,
 /// shards, assignments, replica tables): fail with a clear error *before*
@@ -105,35 +147,91 @@ pub(crate) fn read_u64<R: Read>(r: &mut R, display: &str) -> Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
-/// Write the binary cache (v2: full CSR image).
+/// Consume `k` bytes from a sequential reader (v3 alignment gaps, < 64 B).
+fn skip_exact<R: Read>(r: &mut R, mut k: u64) -> Result<()> {
+    let mut buf = [0u8; 64];
+    while k > 0 {
+        let take = k.min(64) as usize;
+        r.read_exact(&mut buf[..take])?;
+        k -= take as u64;
+    }
+    Ok(())
+}
+
+/// Write `k` zero bytes (v3 alignment gaps, < 64 B).
+fn write_pad<W: Write>(w: &mut W, k: u64) -> Result<()> {
+    let zeros = [0u8; 64];
+    w.write_all(&zeros[..k as usize])?;
+    Ok(())
+}
+
+/// Write the binary cache in the current (v3) format: 64-byte header with
+/// the content hash, then 64-byte-aligned edges / offsets / neighbors /
+/// incident sections. The output is byte-for-byte the file the
+/// out-of-core builder produces for the same graph.
 pub fn write_binary<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
+    let n = g.num_vertices() as u64;
+    let m = g.num_edges() as u64;
+    let lay = v3_layout(n, m);
+    let f = File::create(&path)?;
+    let mut w = BufWriter::with_capacity(1 << 20, f);
+    w.write_all(&BIN_MAGIC_V3.to_le_bytes())?;
+    w.write_all(&0u32.to_le_bytes())?; // reserved
+    w.write_all(&n.to_le_bytes())?;
+    w.write_all(&m.to_le_bytes())?;
+    w.write_all(&g.content_hash().to_le_bytes())?;
+    w.write_all(&[0u8; 32])?;
+    for (u, v) in g.edges_iter() {
+        w.write_all(&u.to_le_bytes())?;
+        w.write_all(&v.to_le_bytes())?;
+    }
+    write_pad(&mut w, lay.offsets_off - (lay.edges_off + m * 8))?;
+    for &o in g.offsets() {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    write_pad(&mut w, lay.neighbors_off - (lay.offsets_off + (n + 1) * 8))?;
+    for idx in 0..(2 * m) as usize {
+        w.write_all(&g.neighbor_at(idx).to_le_bytes())?;
+    }
+    write_pad(&mut w, lay.incident_off - (lay.neighbors_off + 2 * m * 4))?;
+    for idx in 0..(2 * m) as usize {
+        w.write_all(&g.incident_at(idx).to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Legacy v2 writer (unaligned CSR image, no stored hash). Kept so the
+/// v2 read/validation paths and the v2→v3 migration stay test-coverable;
+/// new caches are always written as v3.
+pub fn write_binary_v2<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
     let f = File::create(&path)?;
     let mut w = BufWriter::with_capacity(1 << 20, f);
     w.write_all(&BIN_MAGIC_V2.to_le_bytes())?;
     w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
     w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
-    for &o in &g.offsets {
+    for &o in g.offsets() {
         w.write_all(&o.to_le_bytes())?;
     }
-    for &v in &g.neighbors {
-        w.write_all(&v.to_le_bytes())?;
+    for idx in 0..2 * g.num_edges() {
+        w.write_all(&g.neighbor_at(idx).to_le_bytes())?;
     }
-    for &e in &g.incident {
-        w.write_all(&e.to_le_bytes())?;
+    for idx in 0..2 * g.num_edges() {
+        w.write_all(&g.incident_at(idx).to_le_bytes())?;
     }
     w.flush()?;
     Ok(())
 }
 
 /// Legacy v1 writer (header + raw edge pairs). Kept so old caches remain
-/// coverable by tests; new caches are always written as v2.
+/// coverable by tests; new caches are always written as v3.
 pub fn write_binary_v1<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
     let f = File::create(&path)?;
     let mut w = BufWriter::with_capacity(1 << 20, f);
     w.write_all(&BIN_MAGIC_V1.to_le_bytes())?;
     w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
     w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
-    for &(u, v) in &g.edges {
+    for (u, v) in g.edges_iter() {
         w.write_all(&u.to_le_bytes())?;
         w.write_all(&v.to_le_bytes())?;
     }
@@ -141,16 +239,21 @@ pub fn write_binary_v1<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
     Ok(())
 }
 
-/// Read a binary cache (v1 or v2, dispatched on magic). The header's
-/// `n`/`m` are validated against the actual file length *before* any
-/// allocation, so truncated or corrupt caches fail with a clear error
-/// instead of OOM-ing or mis-reading.
+/// Read a binary cache into fully-materialized (Owned) storage — v1, v2
+/// or v3, dispatched on magic. The header's `n`/`m` are validated against
+/// the actual file length *before* any allocation, so truncated or
+/// corrupt caches fail with a clear error instead of OOM-ing or
+/// mis-reading. v3 loads additionally recompute the content hash and
+/// reject a mismatch against the stored one.
 pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
     let display = path.as_ref().display().to_string();
     let f = File::open(&path).with_context(|| format!("open {display}"))?;
     let file_len = f.metadata()?.len();
     let mut r = BufReader::with_capacity(1 << 20, f);
     let magic = read_u32(&mut r, &display)?;
+    if magic == BIN_MAGIC_V3 {
+        return read_binary_v3(&mut r, file_len, &display);
+    }
     if magic != BIN_MAGIC_V1 && magic != BIN_MAGIC_V2 {
         bail!("bad magic in {display}");
     }
@@ -225,7 +328,7 @@ pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
     }
     // reconstruct the canonical edge array from the CSR image: the slot of
     // the smaller endpoint names the (u, v) pair for edge id incident[slot]
-    let mut edges = vec![(0 as VId, 0 as VId); m];
+    let mut edges: Vec<(VId, VId)> = vec![(0, 0); m];
     for u in 0..n {
         let (s, e) = (offsets[u] as usize, offsets[u + 1] as usize);
         for idx in s..e {
@@ -235,10 +338,149 @@ pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Graph> {
             }
         }
     }
-    let g = Graph { edges, offsets, neighbors, incident };
+    let g = Graph::from_csr_parts(edges, offsets, neighbors, incident);
     if let Err(msg) = g.validate() {
         bail!("corrupt binary cache {display}: {msg}");
     }
+    Ok(g)
+}
+
+/// Parse and validate a v3 header the sequential reader already consumed
+/// the magic of. Returns (n, m, stored hash, layout).
+fn read_v3_header<R: Read>(
+    r: &mut R,
+    file_len: u64,
+    display: &str,
+) -> Result<(u64, u64, u64, V3Layout)> {
+    let _reserved = read_u32(r, display)?;
+    let n = read_u64(r, display)?;
+    let m = read_u64(r, display)?;
+    let stored_hash = read_u64(r, display)?;
+    skip_exact(r, 32)
+        .with_context(|| format!("corrupt or truncated binary file {display}: short header"))?;
+    if n > MAX_HEADER_N {
+        bail!("corrupt binary cache {display}: header claims {n} vertices (ids are u32)");
+    }
+    if m > u32::MAX as u64 {
+        bail!("corrupt binary cache {display}: header claims {m} edges (ids are u32)");
+    }
+    let lay = v3_layout(n, m);
+    validate_len(
+        display,
+        "binary cache",
+        &format!("header claims n={n} m={m}"),
+        file_len,
+        lay.total as u128,
+    )?;
+    Ok((n, m, stored_hash, lay))
+}
+
+fn read_binary_v3<R: Read>(r: &mut R, file_len: u64, display: &str) -> Result<Graph> {
+    let (n, m, stored_hash, lay) = read_v3_header(r, file_len, display)?;
+    let (n, m) = (n as usize, m as usize);
+    let mut buf = vec![0u8; 8 * m];
+    r.read_exact(&mut buf)?;
+    let edges: Vec<(VId, VId)> = buf
+        .chunks_exact(8)
+        .map(|c| {
+            (
+                u32::from_le_bytes(c[0..4].try_into().unwrap()),
+                u32::from_le_bytes(c[4..8].try_into().unwrap()),
+            )
+        })
+        .collect();
+    skip_exact(r, lay.offsets_off - (lay.edges_off + 8 * m as u64))?;
+    let mut buf = vec![0u8; 8 * (n + 1)];
+    r.read_exact(&mut buf)?;
+    let offsets: Vec<u64> = buf
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    skip_exact(r, lay.neighbors_off - (lay.offsets_off + 8 * (n as u64 + 1)))?;
+    let mut buf = vec![0u8; 4 * 2 * m];
+    r.read_exact(&mut buf)?;
+    let neighbors: Vec<VId> = buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    skip_exact(r, lay.incident_off - (lay.neighbors_off + 8 * m as u64))?;
+    r.read_exact(&mut buf)?;
+    let incident: Vec<EId> = buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if neighbors.iter().any(|&v| v as usize >= n) {
+        bail!("corrupt binary cache {display}: neighbor id out of range");
+    }
+    if incident.iter().any(|&e| e as usize >= m) {
+        bail!("corrupt binary cache {display}: edge id out of range");
+    }
+    let g = Graph::from_csr_parts(edges, offsets, neighbors, incident);
+    if let Err(msg) = g.validate() {
+        bail!("corrupt binary cache {display}: {msg}");
+    }
+    let computed = g.content_hash();
+    if computed != stored_hash {
+        bail!(
+            "corrupt binary cache {display}: content hash mismatch \
+             (header {stored_hash:016x}, edge stream hashes {computed:016x})"
+        );
+    }
+    Ok(g)
+}
+
+/// Open a v3 cache as a file-backed [`Graph`] with bounded resident
+/// memory: only the header and the offsets array are read eagerly; the
+/// edge and adjacency sections are served on demand through the
+/// `WINDGP_PAGE_CACHE_MB`-bounded page cache. The stored content hash is
+/// trusted (the writer computed it; [`read_binary`] cross-checks it on
+/// every full load), which is exactly what lets serve/export skip the
+/// O(m) rehash at startup.
+pub fn open_mapped<P: AsRef<Path>>(path: P) -> Result<Graph> {
+    let display = path.as_ref().display().to_string();
+    let f = File::open(&path).with_context(|| format!("open {display}"))?;
+    let file_len = f.metadata()?.len();
+    if file_len < 64 {
+        bail!(
+            "corrupt or truncated binary cache {display}: {file_len} bytes \
+             is smaller than the 64-byte v3 header"
+        );
+    }
+    let mut hdr = [0u8; 64];
+    f.read_exact_at(&mut hdr, 0)?;
+    let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+    if magic != BIN_MAGIC_V3 {
+        bail!(
+            "{display} is not a v3 cache: mapped storage requires the v3 format \
+             (rewrite it with 'windgp ingest', or load with --storage ram)"
+        );
+    }
+    let mut hr: &[u8] = &hdr[4..];
+    let (n, m, stored_hash, lay) = read_v3_header(&mut hr, file_len, &display)?;
+    let mut buf = vec![0u8; (n as usize + 1) * 8];
+    f.read_exact_at(&mut buf, lay.offsets_off)?;
+    let offsets: Vec<u64> = buf
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if offsets[0] != 0 || offsets[n as usize] != 2 * m {
+        bail!("corrupt binary cache {display}: offset table endpoints don't match header");
+    }
+    if offsets.windows(2).any(|w| w[0] > w[1]) {
+        bail!("corrupt binary cache {display}: offsets not monotone");
+    }
+    let mapped = MappedCsr::new(
+        f,
+        n,
+        m,
+        stored_hash,
+        offsets,
+        lay.edges_off,
+        lay.neighbors_off,
+        lay.incident_off,
+    );
+    let g = Graph::from_mapped(mapped);
+    g.seed_hash(stored_hash);
     Ok(g)
 }
 
@@ -263,7 +505,7 @@ pub struct Shard {
 }
 
 /// Write one machine's edge shard (shares the length-validated header
-/// conventions of the cache-v2 format).
+/// conventions of the cache formats).
 pub fn write_shard<P: AsRef<Path>>(path: P, shard: &Shard) -> Result<()> {
     let f = File::create(&path)
         .with_context(|| format!("create {}", path.as_ref().display()))?;
@@ -330,20 +572,102 @@ pub fn read_shard<P: AsRef<Path>>(path: P) -> Result<Shard> {
     Ok(Shard { machine, num_vertices: n, graph_hash, edges })
 }
 
-/// Load a graph from `path`, sniffing the format: binary caches (v1/v2
-/// magic) go through [`read_binary`]; anything else is parsed as SNAP text
-/// by the parallel ingest pipeline with auto remap for gapped ids.
+/// How [`load_path_with`] should back the loaded graph.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StorageMode {
+    /// v3 caches open mapped (fast cold start, bounded memory); anything
+    /// else is fully materialized.
+    #[default]
+    Auto,
+    /// Always materialize in RAM (v3 loads also verify the stored hash).
+    Ram,
+    /// Require a mapped view; fails on non-v3 inputs instead of silently
+    /// materializing.
+    Mapped,
+}
+
+impl StorageMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "auto" => Ok(StorageMode::Auto),
+            "ram" => Ok(StorageMode::Ram),
+            "mapped" => Ok(StorageMode::Mapped),
+            other => bail!("unknown storage mode '{other}' (expected auto, ram or mapped)"),
+        }
+    }
+}
+
+/// True when `path` starts with any known binary-cache magic (v1/v2/v3).
+/// Lets callers pick between "rewrite a cache" and "ingest text" without
+/// materializing the graph first.
+pub fn is_binary_cache<P: AsRef<Path>>(path: P) -> Result<bool> {
+    let display = path.as_ref().display().to_string();
+    let mut f = File::open(&path).with_context(|| format!("open {display}"))?;
+    let mut head = Vec::with_capacity(4);
+    f.by_ref().take(4).read_to_end(&mut head)?;
+    if head.len() < 4 {
+        return Ok(false);
+    }
+    let word = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    Ok(word == BIN_MAGIC_V1 || word == BIN_MAGIC_V2 || word == BIN_MAGIC_V3)
+}
+
+/// Load a graph from `path`, sniffing the format: binary caches
+/// (v1/v2/v3 magic) go through [`read_binary`], anything else is parsed
+/// as SNAP text by the parallel ingest pipeline with auto remap for
+/// gapped ids. Equivalent to [`load_path_with`] at [`StorageMode::Auto`],
+/// so a v3 cache comes back mapped.
 pub fn load_path<P: AsRef<Path>>(path: P) -> Result<Ingested> {
-    let mut f = File::open(&path)
-        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    load_path_with(path, StorageMode::Auto)
+}
+
+/// [`load_path`] with an explicit storage mode (the `--storage` flag).
+pub fn load_path_with<P: AsRef<Path>>(path: P, mode: StorageMode) -> Result<Ingested> {
+    let display = path.as_ref().display().to_string();
+    let mut f = File::open(&path).with_context(|| format!("open {display}"))?;
     let mut head = Vec::with_capacity(4);
     f.by_ref().take(4).read_to_end(&mut head)?;
     drop(f);
-    if head.len() == 4 {
+    if head.is_empty() {
+        bail!("empty graph file {display}: expected a binary cache or a text edge list");
+    }
+    if head.len() < 4 {
+        // shorter than any cache magic: either a tiny text edge list or a
+        // truncated binary file — tell them apart instead of handing raw
+        // bytes to the text parser
+        let texty = |&b: &u8| matches!(b, b'\t' | b'\n' | b'\r' | b' '..=b'~');
+        if !head.iter().all(texty) {
+            bail!(
+                "corrupt or truncated graph file {display}: {} bytes is shorter \
+                 than any cache magic and not a text edge list",
+                head.len()
+            );
+        }
+    } else {
         let word = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+        if word == BIN_MAGIC_V3 {
+            let graph = match mode {
+                StorageMode::Ram => read_binary(&path)?,
+                StorageMode::Auto | StorageMode::Mapped => open_mapped(&path)?,
+            };
+            return Ok(Ingested { graph, vertex_ids: None });
+        }
         if word == BIN_MAGIC_V1 || word == BIN_MAGIC_V2 {
+            if mode == StorageMode::Mapped {
+                bail!(
+                    "{display} is a legacy v1/v2 cache; mapped storage requires the \
+                     v3 format — rewrite it with 'windgp ingest --graph {display} \
+                     --out <cache.bin>'"
+                );
+            }
             return Ok(Ingested { graph: read_binary(&path)?, vertex_ids: None });
         }
+    }
+    if mode == StorageMode::Mapped {
+        bail!(
+            "mapped storage requires a v3 binary cache; {display} looks like a \
+             text edge list (convert it with 'windgp ingest')"
+        );
     }
     ingest::read_edge_list_parallel(
         &path,
@@ -369,51 +693,195 @@ mod tests {
     use super::*;
     use crate::graph::rmat;
 
+    fn tdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Structural equality across storage modes (slice comparison only
+    /// works on owned graphs, so compare through the agnostic API).
+    fn assert_graphs_equal(a: &Graph, b: &Graph) {
+        assert_eq!(a.num_vertices(), b.num_vertices());
+        assert_eq!(a.num_edges(), b.num_edges());
+        assert_eq!(a.offsets(), b.offsets());
+        assert_eq!(a.edges_vec(), b.edges_vec());
+        assert_eq!(a.copy_adjacency(), b.copy_adjacency());
+        assert_eq!(a.content_hash(), b.content_hash());
+    }
+
     #[test]
     fn text_roundtrip() {
         let g = rmat::generate(&rmat::RmatParams::graph500(8, 4), 1);
-        let dir = std::env::temp_dir().join("windgp_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("g.txt");
+        let p = tdir("windgp_io_test").join("g.txt");
         write_edge_list(&g, &p).unwrap();
         let g2 = read_edge_list(&p).unwrap();
-        assert_eq!(g.edges, g2.edges);
+        assert_eq!(g.edges(), g2.edges());
         assert_eq!(g.num_vertices(), g2.num_vertices());
     }
 
     #[test]
     fn binary_roundtrip_preserves_isolated() {
         let g = rmat::generate(&rmat::RmatParams::graph500(8, 4), 2);
-        let dir = std::env::temp_dir().join("windgp_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("g.bin");
+        let p = tdir("windgp_io_test").join("g.bin");
         write_binary(&g, &p).unwrap();
         let g2 = read_binary(&p).unwrap();
-        assert_eq!(g.edges, g2.edges);
-        assert_eq!(g.offsets, g2.offsets);
-        assert_eq!(g.neighbors, g2.neighbors);
-        assert_eq!(g.incident, g2.incident);
-        assert_eq!(g.num_vertices(), g2.num_vertices());
+        assert_graphs_equal(&g, &g2);
+        assert_eq!(g.edges(), g2.edges());
         g2.validate().unwrap();
     }
 
     #[test]
     fn legacy_v1_cache_still_reads() {
         let g = rmat::generate(&rmat::RmatParams::graph500(7, 4), 6);
-        let dir = std::env::temp_dir().join("windgp_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("g_v1.bin");
+        let p = tdir("windgp_io_test").join("g_v1.bin");
         write_binary_v1(&g, &p).unwrap();
         let g2 = read_binary(&p).unwrap();
-        assert_eq!(g.edges, g2.edges);
+        assert_eq!(g.edges(), g2.edges());
         assert_eq!(g.num_vertices(), g2.num_vertices());
     }
 
     #[test]
+    fn legacy_v2_cache_still_reads() {
+        let g = rmat::generate(&rmat::RmatParams::graph500(7, 4), 4);
+        let p = tdir("windgp_io_test").join("g_v2.bin");
+        write_binary_v2(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_graphs_equal(&g, &g2);
+    }
+
+    #[test]
+    fn cache_version_migration_v1_v2_v3() {
+        // write v1 and v2, read back, rewrite as v3: all three loads must
+        // be the same graph with the same content hash
+        let g = rmat::generate(&rmat::RmatParams::graph500(7, 6), 11);
+        let dir = tdir("windgp_io_test_migrate");
+        let hash = g.content_hash();
+        let writers: [(&str, &dyn Fn(&Graph, &std::path::Path) -> Result<()>); 2] = [
+            ("v1", &|g, p| write_binary_v1(g, p)),
+            ("v2", &|g, p| write_binary_v2(g, p)),
+        ];
+        for (name, write) in writers {
+            let legacy = dir.join(format!("g.{name}.bin"));
+            write(&g, &legacy).unwrap();
+            let back = read_binary(&legacy).unwrap();
+            assert_eq!(back.content_hash(), hash, "{name} reload changed the hash");
+            let v3 = dir.join(format!("g.{name}.v3.bin"));
+            write_binary(&back, &v3).unwrap();
+            let migrated = read_binary(&v3).unwrap();
+            assert_graphs_equal(&g, &migrated);
+            assert_eq!(migrated.content_hash(), hash, "{name}→v3 changed the hash");
+            // and the migrated cache opens mapped with the same identity
+            let mapped = open_mapped(&v3).unwrap();
+            assert!(mapped.is_mapped());
+            assert_graphs_equal(&g, &mapped);
+        }
+    }
+
+    #[test]
+    fn mapped_view_matches_owned() {
+        let g = rmat::generate(&rmat::RmatParams::graph500(8, 8), 5);
+        let p = tdir("windgp_io_test_mapped").join("g.bin");
+        write_binary(&g, &p).unwrap();
+        let gm = open_mapped(&p).unwrap();
+        assert!(gm.is_mapped());
+        assert_graphs_equal(&g, &gm);
+        gm.validate().unwrap();
+        // per-slot and per-edge accessors agree with the owned arrays
+        for u in (0..g.num_vertices() as u32).step_by(17) {
+            assert_eq!(g.degree(u), gm.degree(u));
+            let r = g.adj_range(u);
+            assert_eq!(r, gm.adj_range(u));
+            for idx in r {
+                assert_eq!(g.neighbor_at(idx), gm.neighbor_at(idx));
+                assert_eq!(g.incident_at(idx), gm.incident_at(idx));
+            }
+        }
+        for e in (0..g.num_edges() as u32).step_by(13) {
+            assert_eq!(g.edge(e), gm.edge(e));
+            let (u, v) = g.edge(e);
+            assert_eq!(gm.find_edge(u, v), g.find_edge(u, v));
+        }
+        // hash was taken from the header, not recomputed
+        assert_eq!(gm.content_hash(), g.content_hash());
+    }
+
+    #[test]
+    fn v3_rejects_corrupted_edge_stream() {
+        let g = rmat::generate(&rmat::RmatParams::graph500(7, 4), 3);
+        let p = tdir("windgp_io_test_v3c").join("g.bin");
+        write_binary(&g, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // flip a low byte inside the first edge record (offset 64):
+        // structure can stay valid, but the stored hash must catch it
+        bytes[64] ^= 1;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_binary(&p).unwrap_err().to_string();
+        assert!(
+            err.contains("hash mismatch") || err.contains("corrupt"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn v3_rejects_truncation() {
+        let g = rmat::generate(&rmat::RmatParams::graph500(7, 4), 3);
+        let p = tdir("windgp_io_test_v3t").join("g.bin");
+        write_binary(&g, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        for res in [read_binary(&p).map(|_| ()), open_mapped(&p).map(|_| ())] {
+            let err = res.unwrap_err().to_string();
+            assert!(err.contains("corrupt or truncated"), "{err}");
+        }
+    }
+
+    #[test]
+    fn load_path_rejects_empty_and_truncated_below_magic() {
+        let dir = tdir("windgp_io_test_empty");
+        let p = dir.join("empty.bin");
+        std::fs::write(&p, b"").unwrap();
+        let err = load_path(&p).unwrap_err().to_string();
+        assert!(err.contains("empty graph file"), "{err}");
+        // first two bytes of a binary magic: clearly not text
+        let p = dir.join("stub.bin");
+        std::fs::write(&p, &BIN_MAGIC_V3.to_le_bytes()[..2]).unwrap();
+        let err = load_path(&p).unwrap_err().to_string();
+        assert!(err.contains("corrupt or truncated graph file"), "{err}");
+        // a tiny but legitimate text edge list still parses
+        let p = dir.join("tiny.txt");
+        std::fs::write(&p, b"0 1").unwrap();
+        let ing = load_path(&p).unwrap();
+        assert_eq!(ing.graph.num_edges(), 1);
+    }
+
+    #[test]
+    fn storage_mode_dispatch() {
+        let g = rmat::generate(&rmat::RmatParams::graph500(7, 4), 2);
+        let dir = tdir("windgp_io_test_modes");
+        let v3 = dir.join("g.bin");
+        write_binary(&g, &v3).unwrap();
+        assert!(load_path_with(&v3, StorageMode::Auto).unwrap().graph.is_mapped());
+        assert!(load_path_with(&v3, StorageMode::Mapped).unwrap().graph.is_mapped());
+        assert!(!load_path_with(&v3, StorageMode::Ram).unwrap().graph.is_mapped());
+        // legacy caches and text refuse --storage mapped with a pointer to ingest
+        let v2 = dir.join("g2.bin");
+        write_binary_v2(&g, &v2).unwrap();
+        let err = load_path_with(&v2, StorageMode::Mapped).unwrap_err().to_string();
+        assert!(err.contains("windgp ingest"), "{err}");
+        assert!(!load_path_with(&v2, StorageMode::Auto).unwrap().graph.is_mapped());
+        let txt = dir.join("g.txt");
+        write_edge_list(&g, &txt).unwrap();
+        let err = load_path_with(&txt, StorageMode::Mapped).unwrap_err().to_string();
+        assert!(err.contains("windgp ingest"), "{err}");
+        // storage-mode flag parsing
+        assert_eq!(StorageMode::parse("MAPPED").unwrap(), StorageMode::Mapped);
+        assert!(StorageMode::parse("disk").is_err());
+    }
+
+    #[test]
     fn parses_comments_and_whitespace() {
-        let dir = std::env::temp_dir().join("windgp_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("c.txt");
+        let p = tdir("windgp_io_test").join("c.txt");
         std::fs::write(&p, "# header\n% alt comment\n0 1\n  1\t2  \n\n2 0\n").unwrap();
         let g = read_edge_list(&p).unwrap();
         assert_eq!(g.num_edges(), 3);
@@ -421,9 +889,7 @@ mod tests {
 
     #[test]
     fn rejects_malformed() {
-        let dir = std::env::temp_dir().join("windgp_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("bad.txt");
+        let p = tdir("windgp_io_test").join("bad.txt");
         std::fs::write(&p, "0\n").unwrap();
         assert!(read_edge_list(&p).is_err());
     }
@@ -433,20 +899,19 @@ mod tests {
         let dir = std::env::temp_dir().join("windgp_io_test_cache");
         let _ = std::fs::remove_dir_all(&dir);
         let p = dir.join("x.bin");
-        let g1 = load_or_generate(&p, || rmat::generate(&rmat::RmatParams::graph500(7, 4), 3)).unwrap();
+        let g1 =
+            load_or_generate(&p, || rmat::generate(&rmat::RmatParams::graph500(7, 4), 3)).unwrap();
         assert!(p.exists());
         let g2 = load_or_generate(&p, || panic!("should hit cache")).unwrap();
-        assert_eq!(g1.edges, g2.edges);
+        assert_eq!(g1.edges(), g2.edges());
     }
 
     #[test]
     fn shard_roundtrip() {
         let g = rmat::generate(&rmat::RmatParams::graph500(7, 4), 9);
-        let dir = std::env::temp_dir().join("windgp_io_test_shard");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("shard_0000.bin");
+        let p = tdir("windgp_io_test_shard").join("shard_0000.bin");
         let edges: Vec<(EId, VId, VId)> = g
-            .edges
+            .edges()
             .iter()
             .enumerate()
             .filter(|(e, _)| e % 3 == 0)
@@ -465,9 +930,7 @@ mod tests {
 
     #[test]
     fn shard_rejects_truncation_and_bad_records() {
-        let dir = std::env::temp_dir().join("windgp_io_test_shard");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("bad.bin");
+        let p = tdir("windgp_io_test_shard").join("bad.bin");
         let shard = Shard {
             machine: 1,
             num_vertices: 4,
@@ -493,16 +956,15 @@ mod tests {
     #[test]
     fn load_path_sniffs_binary_and_text() {
         let g = rmat::generate(&rmat::RmatParams::graph500(7, 4), 8);
-        let dir = std::env::temp_dir().join("windgp_io_test_sniff");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tdir("windgp_io_test_sniff");
         let bp = dir.join("g.bin");
         write_binary(&g, &bp).unwrap();
         let from_bin = load_path(&bp).unwrap();
-        assert_eq!(from_bin.graph.edges, g.edges);
+        assert_eq!(from_bin.graph.edges_vec(), g.edges());
         let tp = dir.join("g.txt");
         write_edge_list(&g, &tp).unwrap();
         let from_txt = load_path(&tp).unwrap();
-        assert_eq!(from_txt.graph.edges, g.edges);
+        assert_eq!(from_txt.graph.edges(), g.edges());
         assert_eq!(from_txt.graph.num_vertices(), g.num_vertices());
     }
 }

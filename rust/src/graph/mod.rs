@@ -11,9 +11,11 @@ pub mod ingest;
 pub mod io;
 pub mod mesh;
 pub mod rmat;
+pub mod storage;
 pub mod working;
 
 pub use csr::{Graph, GraphBuilder};
+pub use io::StorageMode;
 pub use working::{CompactPolicy, WorkingGraph};
 
 /// Vertex id type. u32 keeps CSR arrays compact for the multi-hundred-M-edge

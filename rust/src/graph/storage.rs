@@ -1,0 +1,332 @@
+//! Pluggable CSR storage: `Owned` heap vectors vs `Mapped` file-backed
+//! views over a v3 binary cache.
+//!
+//! The partitioning and serving layers see one [`crate::graph::Graph`] API;
+//! this module supplies the two backends behind it (enum dispatch, not
+//! trait generics, so `Graph` stays a plain sized type usable behind `Arc`
+//! and in collections):
+//!
+//!   - [`OwnedCsr`]: the classic fully-materialized arrays
+//!     (`edges`/`offsets`/`neighbors`/`incident`) — O(m) resident.
+//!   - [`MappedCsr`]: a zero-copy view over the 64-byte-aligned v3 cache
+//!     image (see `graph::io`), served through a bounded page cache built
+//!     on `pread` ([`std::os::unix::fs::FileExt::read_at`]) — no `mmap`,
+//!     no unsafe, no platform crates. Only the offsets array is pinned hot
+//!     (`(n+1) * 8` bytes: it is touched by every adjacency walk and is
+//!     tiny next to the edge sections), so resident memory is
+//!     O(n) + the cache budget regardless of `m`.
+//!
+//! The page-cache budget comes from `WINDGP_PAGE_CACHE_MB` (default 64).
+//! Pages are 64 KiB and section offsets in the v3 layout are 64-byte
+//! aligned, so no 4- or 8-byte record ever straddles a page boundary; the
+//! read path still handles straddles generically for safety. Eviction is
+//! FIFO per shard — adjacency walks are sequential scans, where FIFO and
+//! LRU behave identically and FIFO needs no touch bookkeeping on hits.
+
+use std::collections::{HashMap, VecDeque};
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::sync::Mutex;
+
+use super::{EId, VId};
+
+/// Environment variable naming the mapped-storage page-cache budget in MiB.
+pub const PAGE_CACHE_ENV: &str = "WINDGP_PAGE_CACHE_MB";
+/// Default page-cache budget when [`PAGE_CACHE_ENV`] is unset: 64 MiB.
+pub const DEFAULT_PAGE_CACHE_MB: usize = 64;
+
+const PAGE_SHIFT: u32 = 16; // 64 KiB pages
+const PAGE_SIZE: usize = 1 << PAGE_SHIFT;
+const SHARD_COUNT: usize = 16;
+
+/// Resolve the page-cache budget in bytes from the environment.
+pub fn page_cache_budget() -> usize {
+    let mb = std::env::var(PAGE_CACHE_ENV)
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&mb| mb > 0)
+        .unwrap_or(DEFAULT_PAGE_CACHE_MB);
+    mb << 20
+}
+
+/// Fully-materialized CSR arrays (the pre-refactor `Graph` fields).
+#[derive(Clone, Debug)]
+pub struct OwnedCsr {
+    /// canonical edges, u < v, sorted lexicographically, deduplicated
+    pub(crate) edges: Vec<(VId, VId)>,
+    /// CSR row offsets, len = n + 1
+    pub(crate) offsets: Vec<u64>,
+    /// CSR column indices, len = 2 * m
+    pub(crate) neighbors: Vec<VId>,
+    /// canonical edge id per adjacency slot, len = 2 * m
+    pub(crate) incident: Vec<EId>,
+}
+
+/// A bounded cache of 64 KiB file pages, sharded to keep lock contention
+/// low under the round-based parallel engines. Each shard holds at most
+/// `cap_per_shard` pages and evicts FIFO.
+#[derive(Debug)]
+struct PageCache {
+    shards: Vec<Mutex<CacheShard>>,
+    cap_per_shard: usize,
+    budget_bytes: usize,
+}
+
+#[derive(Debug, Default)]
+struct CacheShard {
+    pages: HashMap<u64, Vec<u8>>,
+    fifo: VecDeque<u64>,
+}
+
+impl PageCache {
+    fn new(budget_bytes: usize) -> Self {
+        let total_pages = (budget_bytes / PAGE_SIZE).max(SHARD_COUNT);
+        let cap_per_shard = (total_pages / SHARD_COUNT).max(1);
+        let shards = (0..SHARD_COUNT).map(|_| Mutex::new(CacheShard::default())).collect();
+        Self { shards, cap_per_shard, budget_bytes }
+    }
+
+    /// Copy `dst.len()` bytes at absolute file offset `off` out of the
+    /// cache, faulting pages in from `file` as needed. Callers only read
+    /// ranges validated against the file length at open time.
+    fn read_bytes(&self, file: &File, off: u64, dst: &mut [u8]) {
+        let mut pos = 0usize;
+        while pos < dst.len() {
+            let abs = off + pos as u64;
+            let page_id = abs >> PAGE_SHIFT;
+            let in_page = (abs & (PAGE_SIZE as u64 - 1)) as usize;
+            let take = (dst.len() - pos).min(PAGE_SIZE - in_page);
+            let shard = &self.shards[(page_id as usize) % SHARD_COUNT];
+            let mut s = shard.lock().unwrap();
+            if !s.pages.contains_key(&page_id) {
+                let page = read_page(file, page_id);
+                if s.fifo.len() >= self.cap_per_shard {
+                    if let Some(old) = s.fifo.pop_front() {
+                        s.pages.remove(&old);
+                    }
+                }
+                s.fifo.push_back(page_id);
+                s.pages.insert(page_id, page);
+            }
+            let page = &s.pages[&page_id];
+            dst[pos..pos + take].copy_from_slice(&page[in_page..in_page + take]);
+            pos += take;
+        }
+    }
+
+    #[cfg(test)]
+    fn resident_pages(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().pages.len()).sum()
+    }
+}
+
+/// Read one page via `pread`, tolerating a short tail page at EOF.
+fn read_page(file: &File, page_id: u64) -> Vec<u8> {
+    let off = page_id << PAGE_SHIFT;
+    let mut buf = vec![0u8; PAGE_SIZE];
+    let mut read = 0usize;
+    while read < PAGE_SIZE {
+        match file.read_at(&mut buf[read..], off + read as u64) {
+            Ok(0) => break, // EOF: short tail page
+            Ok(k) => read += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => panic!("mapped graph storage: read_at failed: {e}"),
+        }
+    }
+    buf.truncate(read);
+    buf
+}
+
+/// File-backed CSR view over a v3 cache image (see module docs).
+#[derive(Debug)]
+pub struct MappedCsr {
+    file: File,
+    cache: PageCache,
+    pub(crate) n: u64,
+    pub(crate) m: u64,
+    /// content hash stored in the v3 header (trusted; verified by the ram
+    /// loader and pinned by the cache writer)
+    pub(crate) stored_hash: u64,
+    /// row offsets, pinned hot — O(n) resident
+    pub(crate) offsets: Vec<u64>,
+    pub(crate) edges_off: u64,
+    pub(crate) neighbors_off: u64,
+    pub(crate) incident_off: u64,
+}
+
+impl Clone for MappedCsr {
+    fn clone(&self) -> Self {
+        MappedCsr {
+            file: self.file.try_clone().expect("clone mapped-graph file handle"),
+            cache: PageCache::new(self.cache.budget_bytes),
+            n: self.n,
+            m: self.m,
+            stored_hash: self.stored_hash,
+            offsets: self.offsets.clone(),
+            edges_off: self.edges_off,
+            neighbors_off: self.neighbors_off,
+            incident_off: self.incident_off,
+        }
+    }
+}
+
+impl MappedCsr {
+    /// Assemble a mapped view; the caller (`io::open_mapped`) has already
+    /// validated the header, total file length and the offsets array.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        file: File,
+        n: u64,
+        m: u64,
+        stored_hash: u64,
+        offsets: Vec<u64>,
+        edges_off: u64,
+        neighbors_off: u64,
+        incident_off: u64,
+    ) -> Self {
+        let cache = PageCache::new(page_cache_budget());
+        MappedCsr {
+            file,
+            cache,
+            n,
+            m,
+            stored_hash,
+            offsets,
+            edges_off,
+            neighbors_off,
+            incident_off,
+        }
+    }
+
+    #[inline]
+    fn read_u32(&self, off: u64) -> u32 {
+        let mut b = [0u8; 4];
+        self.cache.read_bytes(&self.file, off, &mut b);
+        u32::from_le_bytes(b)
+    }
+
+    #[inline]
+    pub(crate) fn edge(&self, e: EId) -> (VId, VId) {
+        let mut b = [0u8; 8];
+        self.cache.read_bytes(&self.file, self.edges_off + (e as u64) * 8, &mut b);
+        (
+            u32::from_le_bytes(b[0..4].try_into().unwrap()),
+            u32::from_le_bytes(b[4..8].try_into().unwrap()),
+        )
+    }
+
+    #[inline]
+    pub(crate) fn neighbor_at(&self, idx: usize) -> VId {
+        self.read_u32(self.neighbors_off + (idx as u64) * 4)
+    }
+
+    #[inline]
+    pub(crate) fn incident_at(&self, idx: usize) -> EId {
+        self.read_u32(self.incident_off + (idx as u64) * 4)
+    }
+
+    /// Bulk-read `count` u32 values starting at absolute file offset
+    /// `off`, bypassing the page cache (chunked `pread`, 4 MiB at a time,
+    /// so transient memory stays bounded). Used for one-shot whole-section
+    /// copies (working-graph construction, cache rewrites).
+    pub(crate) fn copy_section_u32(&self, off: u64, count: usize) -> Vec<u32> {
+        const CHUNK: usize = 1 << 22; // 4 MiB
+        let mut out = Vec::with_capacity(count);
+        let mut buf = vec![0u8; CHUNK.min((count * 4).max(4))];
+        let mut done = 0usize;
+        while done < count {
+            let take = (count - done).min(CHUNK / 4);
+            let bytes = &mut buf[..take * 4];
+            self.file
+                .read_exact_at(bytes, off + (done as u64) * 4)
+                .expect("mapped graph storage: section read failed");
+            out.extend(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())));
+            done += take;
+        }
+        out
+    }
+
+    /// Bulk-read the canonical edge array (chunked, cache-bypassing).
+    pub(crate) fn copy_edges(&self, out: &mut Vec<(VId, VId)>) {
+        let raw = self.copy_section_u32(self.edges_off, (self.m as usize) * 2);
+        out.reserve(self.m as usize);
+        out.extend(raw.chunks_exact(2).map(|c| (c[0], c[1])));
+    }
+}
+
+/// The storage backend behind a [`crate::graph::Graph`] (enum dispatch).
+#[derive(Clone, Debug)]
+pub enum CsrStorage {
+    /// Fully materialized in RAM.
+    Owned(OwnedCsr),
+    /// File-backed view over a v3 cache, bounded resident memory.
+    Mapped(MappedCsr),
+}
+
+impl CsrStorage {
+    pub(crate) fn owned(
+        edges: Vec<(VId, VId)>,
+        offsets: Vec<u64>,
+        neighbors: Vec<VId>,
+        incident: Vec<EId>,
+    ) -> Self {
+        CsrStorage::Owned(OwnedCsr { edges, offsets, neighbors, incident })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn temp_file(name: &str, bytes: &[u8]) -> File {
+        let dir = std::env::temp_dir().join("windgp_storage_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = File::create(&p).unwrap();
+        f.write_all(bytes).unwrap();
+        File::open(&p).unwrap()
+    }
+
+    #[test]
+    fn page_cache_reads_across_page_boundaries() {
+        // 3 pages of a counting pattern; read ranges that straddle pages
+        let n = 3 * PAGE_SIZE + 100;
+        let bytes: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+        let f = temp_file("straddle.bin", &bytes);
+        let cache = PageCache::new(8 * PAGE_SIZE);
+        for &(off, len) in
+            &[(0usize, 16), (PAGE_SIZE - 3, 8), (2 * PAGE_SIZE - 1, 2), (3 * PAGE_SIZE, 100)]
+        {
+            let mut dst = vec![0u8; len];
+            cache.read_bytes(&f, off as u64, &mut dst);
+            assert_eq!(dst, &bytes[off..off + len], "off={off} len={len}");
+        }
+    }
+
+    #[test]
+    fn page_cache_eviction_bounds_residency() {
+        // budget of SHARD_COUNT pages => 1 page per shard; touching many
+        // distinct pages must never hold more than the cap
+        let pages = 64usize;
+        let bytes = vec![7u8; pages * PAGE_SIZE];
+        let f = temp_file("evict.bin", &bytes);
+        let cache = PageCache::new(SHARD_COUNT * PAGE_SIZE);
+        let mut dst = [0u8; 4];
+        for p in 0..pages {
+            cache.read_bytes(&f, (p * PAGE_SIZE) as u64, &mut dst);
+            assert_eq!(dst, [7, 7, 7, 7]);
+        }
+        assert!(cache.resident_pages() <= SHARD_COUNT, "{}", cache.resident_pages());
+    }
+
+    #[test]
+    fn short_tail_page_reads() {
+        let bytes: Vec<u8> = (0..100u8).collect();
+        let f = temp_file("tail.bin", &bytes);
+        let cache = PageCache::new(4 * PAGE_SIZE);
+        let mut dst = [0u8; 10];
+        cache.read_bytes(&f, 90, &mut dst);
+        assert_eq!(dst, &bytes[90..100]);
+    }
+}

@@ -84,19 +84,23 @@ pub struct WorkingGraph {
 }
 
 impl WorkingGraph {
-    /// Full working graph (no edges assigned yet): straight CSR copy.
+    /// Full working graph (no edges assigned yet): straight CSR copy. Works
+    /// from any storage mode — a mapped source is streamed out of the page
+    /// cache exactly once, here.
     pub fn new(g: &Graph, policy: CompactPolicy) -> Self {
         let n = g.num_vertices();
+        let offsets = g.offsets();
         let mut starts = Vec::with_capacity(n);
         let mut live_len = Vec::with_capacity(n);
         for v in 0..n {
-            starts.push(g.offsets[v] as usize);
-            live_len.push((g.offsets[v + 1] - g.offsets[v]) as u32);
+            starts.push(offsets[v] as usize);
+            live_len.push((offsets[v + 1] - offsets[v]) as u32);
         }
+        let (neighbors, incident) = g.copy_adjacency();
         Self {
             starts,
-            neighbors: g.neighbors.clone(),
-            incident: g.incident.clone(),
+            neighbors,
+            incident,
             live_len,
             dead: vec![0; n],
             policy,
@@ -111,19 +115,22 @@ impl WorkingGraph {
     pub fn from_assigned(g: &Graph, assigned: &[bool], policy: CompactPolicy) -> Self {
         debug_assert_eq!(assigned.len(), g.num_edges());
         let n = g.num_vertices();
+        let offsets = g.offsets();
+        // one streamed copy of the source adjacency, then filter in place:
+        // the surviving slots of vertex v are a prefix of its window, so
+        // the write cursor never passes the read cursor
+        let (mut neighbors, mut incident) = g.copy_adjacency();
         let mut starts = Vec::with_capacity(n);
         let mut live_len = vec![0u32; n];
-        let mut neighbors = vec![0 as VId; g.neighbors.len()];
-        let mut incident = vec![0 as EId; g.incident.len()];
         for v in 0..n {
-            let start = g.offsets[v] as usize;
-            let end = g.offsets[v + 1] as usize;
+            let start = offsets[v] as usize;
+            let end = offsets[v + 1] as usize;
             starts.push(start);
             let mut w = start;
             for idx in start..end {
-                let e = g.incident[idx];
+                let e = incident[idx];
                 if !assigned[e as usize] {
-                    neighbors[w] = g.neighbors[idx];
+                    neighbors[w] = neighbors[idx];
                     incident[w] = e;
                     w += 1;
                 }

@@ -89,9 +89,8 @@ impl<'a> Metrics<'a> {
                 .map(|u| {
                     let mut s: Vec<u32> = self
                         .g
-                        .incident_edges(u as VId)
-                        .iter()
-                        .map(|&e| ep.assignment[e as usize])
+                        .adj_range(u as VId)
+                        .map(|idx| ep.assignment[self.g.incident_at(idx) as usize])
                         .filter(|&a| a != UNASSIGNED)
                         .collect();
                     s.sort_unstable();
@@ -203,8 +202,8 @@ impl<'a> Metrics<'a> {
         (0..self.g.num_vertices())
             .map(|u| {
                 let mut deg: std::collections::BTreeMap<u32, u32> = Default::default();
-                for &e in self.g.incident_edges(u as VId) {
-                    let a = ep.assignment[e as usize];
+                for idx in self.g.adj_range(u as VId) {
+                    let a = ep.assignment[self.g.incident_at(idx) as usize];
                     if a != UNASSIGNED {
                         *deg.entry(a).or_insert(0) += 1;
                     }

@@ -55,15 +55,10 @@ impl<'a> ServeState<'a> {
 
     /// Canonical edge id of `(u, v)`, if present. Neighbor lists are
     /// sorted, so this is a binary search on the lower-degree endpoint —
-    /// O(log deg_min) per lookup.
+    /// O(log deg_min) per lookup, storage-agnostic (a mapped graph touches
+    /// only the probed adjacency slots).
     pub fn edge_id(&self, u: VId, v: VId) -> Option<EId> {
-        let n = self.g.num_vertices() as u64;
-        if u == v || u as u64 >= n || v as u64 >= n {
-            return None;
-        }
-        let (a, b) = if self.g.degree(u) <= self.g.degree(v) { (u, v) } else { (v, u) };
-        let pos = self.g.neighbors(a).binary_search(&b).ok()?;
-        Some(self.g.incident_edges(a)[pos])
+        self.g.find_edge(u, v)
     }
 
     /// Evaluate one request with the session-configured worker count

@@ -51,7 +51,7 @@ pub fn sssp(g: &Graph, source: VId) -> Vec<f32> {
     // Bellman-Ford rounds (matches the distributed superstep structure)
     loop {
         let mut changed = false;
-        for &(u, v) in &g.edges {
+        for (u, v) in g.edges_iter() {
             let w = edge_weight(u, v);
             let du = dist[u as usize];
             let dv = dist[v as usize];
@@ -134,7 +134,7 @@ pub fn wcc(g: &Graph) -> Vec<VId> {
     let mut label: Vec<VId> = (0..n as VId).collect();
     loop {
         let mut changed = false;
-        for &(u, v) in &g.edges {
+        for (u, v) in g.edges_iter() {
             let lu = label[u as usize];
             let lv = label[v as usize];
             if lu < lv {

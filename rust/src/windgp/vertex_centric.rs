@@ -18,9 +18,8 @@ pub struct VertexPartition {
 impl VertexPartition {
     /// Number of cut edges (endpoints on different machines).
     pub fn edge_cut(&self, g: &Graph) -> usize {
-        g.edges
-            .iter()
-            .filter(|&&(u, v)| self.owner[u as usize] != self.owner[v as usize])
+        g.edges_iter()
+            .filter(|&(u, v)| self.owner[u as usize] != self.owner[v as usize])
             .count()
     }
 

@@ -109,6 +109,8 @@ fn bench_emits_valid_json() {
         "ingest/cache-reload",
         "expand/partition",
         "expand/partition-uncompacted",
+        "ingest/build-oocore",
+        "io/load-mapped",
         "sls/destroy-repair",
         "sls/full",
         "serve/query-batch",
@@ -144,7 +146,7 @@ fn gen_binary_format_roundtrips_through_partition() {
     // the cache reloads to the exact generated graph
     let g = windgp::experiments::ExpCtx::new(3, 4).graph("rn-s");
     let g2 = windgp::graph::io::read_binary(&out_path).unwrap();
-    assert_eq!(g.edges, g2.edges);
+    assert_eq!(g.edges(), g2.edges());
     assert_eq!(g.num_vertices(), g2.num_vertices());
     // and the partition path sniffs + loads the binary file end-to-end
     let out = bin()
@@ -154,6 +156,59 @@ fn gen_binary_format_roundtrips_through_partition() {
             out_path.to_str().unwrap(),
             "--algo",
             "ne",
+            "--shrink",
+            "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("TC"));
+}
+
+#[test]
+fn ingest_builds_mapped_loadable_cache_and_partitions() {
+    let dir = std::env::temp_dir().join("windgp_cli_ingest_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let txt = dir.join("g.txt");
+    let g = windgp::experiments::ExpCtx::new(3, 4).graph("rn-s");
+    windgp::graph::io::write_edge_list(&g, &txt).unwrap();
+    let cache = dir.join("g.bin");
+    let out = bin()
+        .args([
+            "ingest",
+            "--graph",
+            txt.to_str().unwrap(),
+            "--out",
+            cache.to_str().unwrap(),
+            "--budget-mb",
+            "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // the out-of-core cache opens mapped and matches the source graph
+    let gm = windgp::graph::io::open_mapped(&cache).unwrap();
+    assert!(gm.is_mapped());
+    assert_eq!(gm.edges_vec(), g.edges());
+    assert_eq!(gm.content_hash(), g.content_hash());
+    // and partition accepts it with explicit mapped storage
+    let out = bin()
+        .args([
+            "partition",
+            "--graph",
+            cache.to_str().unwrap(),
+            "--algo",
+            "dbh",
+            "--storage",
+            "mapped",
             "--shrink",
             "4",
         ])

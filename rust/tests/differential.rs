@@ -21,8 +21,13 @@
 //! repair loop through the same round-based protocol), and the full
 //! WindGP `Variant::Full` pass (capacities + expansion + SLS with its
 //! re-partition resume).
+//!
+//! A third axis rides the same contract: graph **storage**. A `Mapped`
+//! (file-backed v3 cache behind the bounded page cache) graph must drive
+//! the whole pipeline to the exact bytes the `Owned` heap CSR produces,
+//! at every worker width.
 
-use windgp::graph::{gen, rmat, CompactPolicy, Graph};
+use windgp::graph::{gen, io, rmat, CompactPolicy, Graph};
 use windgp::machines::{Cluster, Machine};
 use windgp::partition::{EdgePartition, PartId, Partitioner};
 use windgp::windgp::{
@@ -317,6 +322,50 @@ fn round_based_respects_windgp_workers_env_auto_width() {
     );
     let sequential = expand_pipeline(&g, &cluster, 2, CompactPolicy::Halving);
     assert_eq!(auto, sequential, "auto-width round-based diverged from sequential");
+}
+
+#[test]
+fn full_windgp_byte_identical_across_storage_modes() {
+    // the storage tentpole contract: partitioning a Mapped graph (v3
+    // cache served through the bounded page cache) must produce the
+    // exact assignment bytes the Owned heap CSR does — ER + R-MAT ×
+    // seeds × worker widths {sequential, 1, 8}
+    let dir = std::env::temp_dir().join(format!("windgp_diff_storage_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for (name, g) in test_graphs() {
+        let path = dir.join(format!("{name}.bin"));
+        io::write_binary(&g, &path).unwrap();
+        let mapped = io::open_mapped(&path).unwrap();
+        assert!(mapped.is_mapped(), "{name}: cache did not open mapped");
+        assert_eq!(mapped.content_hash(), g.content_hash(), "{name}: cache hash drifted");
+        let cluster = Cluster::heterogeneous_small(3, 5, g.num_edges() as f64 / 2.0e6);
+        for seed in [5u64, 23] {
+            let run = |g: &Graph, workers: usize| {
+                let cfg = WindGPConfig {
+                    variant: Variant::Full,
+                    parallel: if workers == 0 {
+                        ParallelMode::Sequential
+                    } else {
+                        ParallelMode::RoundBased
+                    },
+                    workers,
+                    ..Default::default()
+                };
+                let ep = WindGP::new(cfg).partition(g, &cluster, seed);
+                assert!(ep.is_complete(), "{name} seed {seed}: incomplete at {workers} workers");
+                ep.assignment
+            };
+            let reference = run(&g, 0);
+            for workers in [0usize, 1, 8] {
+                assert_eq!(
+                    run(&mapped, workers),
+                    reference,
+                    "{name} seed {seed}: mapped storage diverged at {workers} workers"
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -16,10 +16,9 @@ use windgp::graph::{gen, io, rmat, Graph, GraphBuilder};
 use windgp::util::SplitMix64;
 
 fn graphs_identical(a: &Graph, b: &Graph) {
-    assert_eq!(a.edges, b.edges, "edges differ");
-    assert_eq!(a.offsets, b.offsets, "offsets differ");
-    assert_eq!(a.neighbors, b.neighbors, "neighbors differ");
-    assert_eq!(a.incident, b.incident, "incident differ");
+    assert_eq!(a.edges(), b.edges(), "edges differ");
+    assert_eq!(a.offsets(), b.offsets(), "offsets differ");
+    assert_eq!(a.copy_adjacency(), b.copy_adjacency(), "adjacency differs");
 }
 
 fn test_dir(name: &str) -> std::path::PathBuf {
@@ -82,7 +81,7 @@ fn i2_text_roundtrip_preserves_trailing_isolated_vertices() {
     io::write_edge_list(&g, &p).unwrap();
     let seq = io::read_edge_list(&p).unwrap();
     assert_eq!(seq.num_vertices(), 10, "sequential read lost isolated vertices");
-    assert_eq!(seq.edges, g.edges);
+    assert_eq!(seq.edges(), g.edges());
     let par = ingest::read_edge_list_parallel(&p, IngestOptions::default()).unwrap();
     assert_eq!(par.graph.num_vertices(), 10, "parallel read lost isolated vertices");
     graphs_identical(&seq, &par.graph);
@@ -113,7 +112,7 @@ fn i3_gapped_ids_remap_and_map_back_exactly() {
     let ids = ing.vertex_ids.expect("gapped input must report a mapping");
     assert_eq!(ids, vec![5, 7, 2_147_483_000]);
     assert_eq!(ing.graph.num_vertices(), 3);
-    assert_eq!(ing.graph.edges, vec![(0, 1), (0, 2), (1, 2)]);
+    assert_eq!(ing.graph.edges(), vec![(0, 1), (0, 2), (1, 2)]);
     ing.graph.validate().unwrap();
     // Auto policy also fires for this id space
     let auto = ingest::read_edge_list_parallel(
@@ -159,13 +158,12 @@ fn i3_random_gapped_roundtrips_across_worker_counts() {
             Some(ids) => {
                 let back: Vec<(u32, u32)> = rem
                     .graph
-                    .edges
-                    .iter()
-                    .map(|&(u, v)| (ids[u as usize], ids[v as usize]))
+                    .edges_iter()
+                    .map(|(u, v)| (ids[u as usize], ids[v as usize]))
                     .collect();
-                assert_eq!(back, seq.edges, "case {case}: remap must be order-preserving");
+                assert_eq!(back, seq.edges(), "case {case}: remap must be order-preserving");
             }
-            None => assert_eq!(rem.graph.edges, seq.edges, "case {case}"),
+            None => assert_eq!(rem.graph.edges(), seq.edges(), "case {case}"),
         }
     }
 }
@@ -211,7 +209,7 @@ fn i4_truncated_v2_cache_is_rejected() {
     let g = gen::erdos_renyi(50, 200, 4);
     let dir = test_dir("corrupt_v2");
     let p = dir.join("trunc.bin");
-    io::write_binary(&g, &p).unwrap();
+    io::write_binary_v2(&g, &p).unwrap();
     let data = std::fs::read(&p).unwrap();
     std::fs::write(&p, &data[..data.len() - 5]).unwrap();
     let err = io::read_binary(&p).unwrap_err().to_string();
@@ -235,7 +233,7 @@ fn i4_interior_corruption_in_v2_is_rejected() {
     let g = b.build(0);
     let dir = test_dir("corrupt_v2_interior");
     let p = dir.join("flip.bin");
-    io::write_binary(&g, &p).unwrap();
+    io::write_binary_v2(&g, &p).unwrap();
     let mut data = std::fs::read(&p).unwrap();
     data[55] = 0xFF; // high byte of neighbors[0] -> id far out of range
     std::fs::write(&p, &data).unwrap();
@@ -257,13 +255,18 @@ fn i4_absurd_vertex_count_is_rejected() {
 }
 
 #[test]
-fn binary_v2_roundtrip_via_gen_graph() {
-    // end-to-end: RMAT graph -> v2 cache -> reload -> byte-identical
+fn binary_roundtrip_via_gen_graph() {
+    // end-to-end: RMAT graph -> cache -> reload -> byte-identical, for the
+    // current (v3) writer and the legacy v2 writer
     let g = rmat::generate(&rmat::RmatParams::mild(10, 6), 13);
-    let dir = test_dir("v2_roundtrip");
-    let p = dir.join("g.bin");
-    io::write_binary(&g, &p).unwrap();
-    let g2 = io::read_binary(&p).unwrap();
-    graphs_identical(&g, &g2);
-    g2.validate().unwrap();
+    let dir = test_dir("bin_roundtrip");
+    for (name, path) in [("v3", dir.join("g.bin")), ("v2", dir.join("g_v2.bin"))] {
+        match name {
+            "v3" => io::write_binary(&g, &path).unwrap(),
+            _ => io::write_binary_v2(&g, &path).unwrap(),
+        }
+        let g2 = io::read_binary(&path).unwrap();
+        graphs_identical(&g, &g2);
+        g2.validate().unwrap();
+    }
 }
