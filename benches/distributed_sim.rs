@@ -55,6 +55,7 @@ fn main() {
             Workload::Sssp { source: 0 },
             Workload::Triangle,
         ],
+        workers: 0,
     };
     bench("run_job windgp lj-s", 2, || {
         let rep = run_job(&job, None);

@@ -13,7 +13,8 @@ use windgp::machines::Cluster;
 use windgp::partition::{CostTracker, EdgePartition};
 #[cfg(feature = "pjrt")]
 use windgp::runtime::{PjrtBackend, PjrtEngine};
-use windgp::simulator::ell::{EllBackend, EllBlock, PureBackend};
+use windgp::simulator::ell::{EllBackend, EllBlock, PureBackend, INF};
+use windgp::simulator::simd::{SimdBackend, SimdMode};
 use windgp::simulator::SimGraph;
 use windgp::util::bench::{bench, throughput};
 use windgp::util::SplitMix64;
@@ -119,6 +120,32 @@ fn main() {
             assert_eq!(y.len(), blk.rows);
         },
     );
+    println!("  -> {:.1}M lanes/s", throughput(blk.rows * blk.k, s.mean) / 1e6);
+
+    // scalar (branchless, lane-unrolled) vs SIMD path of the SimdBackend —
+    // all bitwise-identical to the pure oracle, so the delta is raw speed
+    let mut scalar_be = SimdBackend::new(SimdMode::Scalar);
+    let mut simd_be = SimdBackend::new(SimdMode::Auto);
+    let x_inf = blk.fill_x(&vec![1.0; blk.verts], INF);
+    let s = bench("ell spmv scalar", 5, || {
+        let y = scalar_be.spmv(0, &blk, &x);
+        assert_eq!(y.len(), blk.rows);
+    });
+    println!("  -> {:.1}M lanes/s", throughput(blk.rows * blk.k, s.mean) / 1e6);
+    let s = bench(&format!("ell spmv simd ({})", simd_be.active()), 5, || {
+        let y = simd_be.spmv(0, &blk, &x);
+        assert_eq!(y.len(), blk.rows);
+    });
+    println!("  -> {:.1}M lanes/s", throughput(blk.rows * blk.k, s.mean) / 1e6);
+    let s = bench("ell minplus scalar", 5, || {
+        let y = scalar_be.minplus(0, &blk, &x_inf);
+        assert_eq!(y.len(), blk.rows);
+    });
+    println!("  -> {:.1}M lanes/s", throughput(blk.rows * blk.k, s.mean) / 1e6);
+    let s = bench(&format!("ell minplus simd ({})", simd_be.active()), 5, || {
+        let y = simd_be.minplus(0, &blk, &x_inf);
+        assert_eq!(y.len(), blk.rows);
+    });
     println!("  -> {:.1}M lanes/s", throughput(blk.rows * blk.k, s.mean) / 1e6);
 
     #[cfg(feature = "pjrt")]

@@ -40,6 +40,12 @@ ASSERTED = [
     "sls/destroy-repair-parallel-w1",
     "sls/full",
     "serve/query-batch",
+    "sim/spmv",
+    "sim/spmv-simd",
+    "sim/minplus",
+    "sim/minplus-simd",
+    "sim/pagerank-superstep",
+    "sim/pagerank-superstep-simd",
 ]
 
 

@@ -59,6 +59,7 @@ fn main() {
             partitioner: a.as_ref(),
             seed: 3,
             workloads: vec![Workload::Bfs { source: 0 }, Workload::Sssp { source: 0 }],
+            workers: 0,
         };
         let rep = run_job(&job, None);
         assert!(rep.partition.is_complete());

@@ -15,7 +15,7 @@ pub mod pool;
 
 pub use pool::{
     chunk_ranges, effective_workers, in_pool_worker, merge_sorted_dedup, parallel_map,
-    parallel_map_mut, parallel_map_workers,
+    parallel_map_mut, parallel_map_mut_chunked, parallel_map_workers,
 };
 
 use std::time::Instant;
@@ -24,7 +24,8 @@ use crate::graph::Graph;
 use crate::machines::Cluster;
 use crate::partition::{CostReport, EdgePartition, Metrics, Partitioner};
 use crate::simulator::algorithms;
-use crate::simulator::ell::{EllBackend, PureBackend};
+use crate::simulator::ell::EllBackend;
+use crate::simulator::simd::SimdBackend;
 use crate::simulator::{SimGraph, SimReport};
 
 /// Workloads the coordinator can schedule after partitioning.
@@ -44,6 +45,9 @@ pub struct Job<'a> {
     pub partitioner: &'a dyn Partitioner,
     pub seed: u64,
     pub workloads: Vec<Workload>,
+    /// superstep compute-fan width: 0 = auto (`WINDGP_WORKERS` / cores),
+    /// 1 = sequential, n = at most n pool threads per superstep
+    pub workers: usize,
 }
 
 /// Everything the leader reports back.
@@ -57,27 +61,30 @@ pub struct JobReport {
 }
 
 /// Execute a job start-to-finish on the calling thread.
-/// `backend`: None = pure Rust compute; Some = PJRT-backed kernels.
+/// `backend`: None = CPU compute ([`SimdBackend`], honoring `WINDGP_SIMD`
+/// with a lenient fallback to auto-detection); Some = caller-supplied
+/// kernels (PJRT, or an explicit scalar backend).
 pub fn run_job(job: &Job, backend: Option<&mut dyn EllBackend>) -> JobReport {
     let t0 = Instant::now();
     let partition = job.partitioner.partition(job.g, job.cluster, job.seed);
     let partition_secs = t0.elapsed().as_secs_f64();
     let cost = Metrics::new(job.g, job.cluster).report(&partition);
-    let mut pure = PureBackend;
+    let mut default_be = SimdBackend::from_env_lenient();
     let be: &mut dyn EllBackend = match backend {
         Some(b) => b,
-        None => &mut pure,
+        None => &mut default_be,
     };
+    let w = job.workers;
     let mut runs = Vec::new();
     if !job.workloads.is_empty() {
         let sg = SimGraph::build(job.g, job.cluster, &partition);
-        for w in &job.workloads {
-            let rep = match *w {
-                Workload::PageRank { iters } => algorithms::pagerank(&sg, iters, be).1,
-                Workload::Sssp { source } => algorithms::sssp(&sg, source, be).1,
-                Workload::Bfs { source } => algorithms::bfs(&sg, source).1,
-                Workload::Triangle => algorithms::triangles(&sg).1,
-                Workload::Wcc => algorithms::wcc(&sg).1,
+        for wl in &job.workloads {
+            let rep = match *wl {
+                Workload::PageRank { iters } => algorithms::pagerank_workers(&sg, iters, be, w).1,
+                Workload::Sssp { source } => algorithms::sssp_workers(&sg, source, be, w).1,
+                Workload::Bfs { source } => algorithms::bfs_workers(&sg, source, w).1,
+                Workload::Triangle => algorithms::triangles_workers(&sg, w).1,
+                Workload::Wcc => algorithms::wcc_workers(&sg, w).1,
             };
             runs.push(rep);
         }
@@ -106,6 +113,7 @@ mod tests {
                 Workload::Bfs { source: 0 },
                 Workload::Triangle,
             ],
+            workers: 0,
         };
         let rep = run_job(&job, None);
         assert!(rep.partition.is_complete());

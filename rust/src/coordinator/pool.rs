@@ -190,6 +190,45 @@ where
         .collect()
 }
 
+/// [`parallel_map_mut`] with an explicit worker budget: the slots are
+/// split into at most `workers` contiguous chunks, one scoped thread per
+/// chunk, each chunk walked sequentially in slot order. This is the
+/// superstep fan of the BSP simulator: `p` per-machine slots usually
+/// exceed the sensible thread count, so one-thread-per-slot
+/// ([`parallel_map_mut`]) over-spawns and ignores `WINDGP_WORKERS`.
+///
+/// Deterministic contract: identical to [`parallel_map_mut`] — output
+/// order equals slot order and `f` sees each slot exactly once, for any
+/// `workers`. `workers <= 1` (or a nested call) runs sequentially on the
+/// calling thread.
+pub fn parallel_map_mut_chunked<T, R, F>(slots: &mut [T], workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = slots.len();
+    let workers = workers.max(1).min(n.max(1));
+    if n <= 1 || workers == 1 || IN_POOL_WORKER.with(|c| c.get()) {
+        return slots.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let ranges = chunk_ranges(n, workers);
+    let mut chunks: Vec<(usize, &mut [T])> = Vec::with_capacity(ranges.len());
+    let mut rest = slots;
+    for &(a, b) in &ranges {
+        let tail = std::mem::take(&mut rest);
+        let (head, tail) = tail.split_at_mut(b - a);
+        chunks.push((a, head));
+        rest = tail;
+    }
+    let f = &f;
+    let nested: Vec<Vec<R>> = parallel_map_mut(&mut chunks, |_, (base, chunk)| {
+        let base = *base;
+        chunk.iter_mut().enumerate().map(|(off, t)| f(base + off, t)).collect()
+    });
+    nested.into_iter().flatten().collect()
+}
+
 /// Split `0..n` into at most `k` contiguous, near-equal, non-empty ranges
 /// covering every index exactly once. Returns an empty list for `n == 0`.
 pub fn chunk_ranges(n: usize, k: usize) -> Vec<(usize, usize)> {
@@ -418,6 +457,40 @@ mod tests {
             r.iter().sum::<u64>()
         });
         let expect: Vec<u64> = (0..4u64).map(|x| (0..3).map(|i| x * 10 + i).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn map_mut_chunked_matches_sequential_at_any_width() {
+        let base: Vec<u64> = (0..13).collect();
+        let mut seq = base.clone();
+        let want = parallel_map_mut_chunked(&mut seq, 1, |i, s| {
+            *s += 7;
+            *s * 100 + i as u64
+        });
+        for workers in [2usize, 3, 8, 64] {
+            let mut slots = base.clone();
+            let got = parallel_map_mut_chunked(&mut slots, workers, |i, s| {
+                *s += 7;
+                *s * 100 + i as u64
+            });
+            assert_eq!(got, want, "workers = {workers}");
+            assert_eq!(slots, seq, "workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn map_mut_chunked_empty_and_nested() {
+        let mut empty: Vec<u32> = Vec::new();
+        let out: Vec<u32> = parallel_map_mut_chunked(&mut empty, 4, |_, s| *s);
+        assert!(out.is_empty());
+        // nested inside a pool worker: must not fan out again
+        let out = parallel_map_workers((0..4u64).collect(), 4, |x| {
+            let mut inner = vec![x; 5];
+            let r = parallel_map_mut_chunked(&mut inner, 8, |i, s| *s * 10 + i as u64);
+            r.iter().sum::<u64>()
+        });
+        let expect: Vec<u64> = (0..4u64).map(|x| (0..5).map(|i| x * 10 + i).sum()).collect();
         assert_eq!(out, expect);
     }
 

@@ -30,6 +30,7 @@ fn run_workloads(
             partitioner: a.as_ref(),
             seed: 1,
             workloads: workloads.clone(),
+            workers: 0,
         };
         let rep = run_job(&job, None);
         let times: Vec<f64> = rep.runs.iter().map(|r| r.sim_time).collect();

@@ -36,6 +36,7 @@ pub fn table1(ctx: &ExpCtx) -> String {
                 Workload::Sssp { source: 0 },
                 Workload::Bfs { source: 0 },
             ],
+            workers: 0,
         };
         let rep = run_job(&job, None);
         vec![
@@ -207,6 +208,7 @@ pub fn table10(ctx: &ExpCtx) -> String {
             partitioner: a.as_ref(),
             seed: 1,
             workloads: vec![Workload::PageRank { iters: 10 }],
+            workers: 0,
         };
         let rep = run_job(&job, None);
         vec![

@@ -612,6 +612,22 @@ pub fn is_binary_cache<P: AsRef<Path>>(path: P) -> Result<bool> {
     Ok(word == BIN_MAGIC_V1 || word == BIN_MAGIC_V2 || word == BIN_MAGIC_V3)
 }
 
+/// True when `path` is a v3 cache — the only format [`StorageMode::Auto`]
+/// opens zero-copy mapped. Callers that must materialize in RAM anyway
+/// (the BSP simulator) use this to tell the user why `auto` would not
+/// help, instead of silently double-loading.
+pub fn is_mappable_cache<P: AsRef<Path>>(path: P) -> Result<bool> {
+    let display = path.as_ref().display().to_string();
+    let mut f = File::open(&path).with_context(|| format!("open {display}"))?;
+    let mut head = Vec::with_capacity(4);
+    f.by_ref().take(4).read_to_end(&mut head)?;
+    if head.len() < 4 {
+        return Ok(false);
+    }
+    let word = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    Ok(word == BIN_MAGIC_V3)
+}
+
 /// Load a graph from `path`, sniffing the format: binary caches
 /// (v1/v2/v3 magic) go through [`read_binary`], anything else is parsed
 /// as SNAP text by the parallel ingest pipeline with auto remap for

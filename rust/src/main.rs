@@ -18,7 +18,9 @@ use windgp::machines::Cluster;
 use windgp::partition::Metrics;
 #[cfg(feature = "pjrt")]
 use windgp::runtime::{PjrtBackend, PjrtEngine};
+use windgp::simulator::algorithms::superstep_workers;
 use windgp::simulator::ell::PureBackend;
+use windgp::simulator::simd::SimdBackend;
 use windgp::util::table;
 
 fn main() {
@@ -105,7 +107,14 @@ fn print_help() {
                       answer assign/replicas/metrics/batch queries as\n\
                       newline-delimited JSON over stdin/stdout or TCP\n\
            simulate   --graph NAME --algo NAME --workload pagerank|sssp|bfs|triangle|wcc\n\
-                      [--pjrt] [--iters N]  run a distributed workload\n\
+                      [--pjrt] [--iters N] [--workers N] [--storage ram]\n\
+                      run a distributed workload through the BSP engine\n\
+                      (--workers: per-superstep compute fan, 0 = auto;\n\
+                       byte-identical output at any worker count;\n\
+                       WINDGP_SIMD=auto|avx2|scalar picks the CPU kernel,\n\
+                       also bitwise-identical across paths;\n\
+                       --storage ram is the only mode: the workloads\n\
+                       walk raw adjacency, so the graph is materialized)\n\
            bench      [--shrink N] [--samples N] [--out FILE] [--storage auto|ram|mapped]\n\
                       run the hot-path suite, write BENCH_hotpath.json\n\
            gen        --graph NAME --out FILE [--format txt|bin]\n\
@@ -380,11 +389,35 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let ctx = ctx_from(flags)?;
-    if flags.contains_key("storage") {
-        bail!("simulate always materializes the graph in RAM; --storage is not supported here");
+    // the BSP workloads walk raw adjacency slices, so even a v3 cache path
+    // must be fully materialized: ram (the default) is the only storage
+    // mode that makes sense here. Accept an explicit --storage ram, and
+    // explain rather than silently ignore the modes that would map.
+    match storage_mode(flags)? {
+        windgp::graph::StorageMode::Ram => {}
+        windgp::graph::StorageMode::Mapped => {
+            bail!(
+                "simulate materializes the graph in RAM (the workloads walk raw \
+                 adjacency slices); --storage mapped is not supported here — \
+                 drop the flag or pass --storage ram"
+            );
+        }
+        windgp::graph::StorageMode::Auto => {
+            // only reject auto when it was explicit *and* would have mapped
+            if flags.contains_key("storage") {
+                let name = flags.get("graph").map(String::as_str).unwrap_or("");
+                if std::path::Path::new(name).exists()
+                    && windgp::graph::io::is_mappable_cache(name)?
+                {
+                    bail!(
+                        "simulate materializes the graph in RAM, but --storage auto \
+                         on the v3 cache '{name}' would open it mapped — pass \
+                         --storage ram (or drop the flag) to load it into memory"
+                    );
+                }
+            }
+        }
     }
-    // the reference workloads walk raw adjacency slices, so even a v3
-    // cache path must be fully materialized here
     let (g, cluster) = graph_and_cluster_mode(flags, &ctx, windgp::graph::StorageMode::Ram)?;
     let algo_name = flags.get("algo").map(String::as_str).unwrap_or("windgp");
     let algo = common::partitioner_by_name(algo_name)
@@ -398,13 +431,16 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         "wcc" => Workload::Wcc,
         other => bail!("unknown workload '{other}'"),
     };
+    let workers: usize = flags.get("workers").map_or(Ok(0), |s| s.parse())?;
     let job = Job {
         g: &g,
         cluster: &cluster,
         partitioner: algo.as_ref(),
         seed: flags.get("seed").map_or(Ok(1), |s| s.parse())?,
         workloads: vec![w],
+        workers,
     };
+    let eff_workers = superstep_workers(cluster.machines.len(), workers);
     let use_pjrt = flags.contains_key("pjrt");
     #[cfg(not(feature = "pjrt"))]
     if use_pjrt {
@@ -420,15 +456,27 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         let mut be = PjrtBackend::new(engine);
         let rep = run_job(&job, Some(&mut be));
         println!(
-            "backend: PJRT ({} kernel calls, {} pure fallbacks)",
+            "backend: PJRT ({} kernel calls, {} pure fallbacks); \
+             superstep workers: {eff_workers} (kernel fan sequential: \
+             device buffers cannot fork)",
             be.pjrt_calls, be.fallback_calls
         );
         rep
     } else {
-        run_job(&job, Some(&mut PureBackend))
+        // strict env parse: a WINDGP_SIMD typo should fail loudly here,
+        // not silently fall back to auto-detection
+        let mut be = SimdBackend::from_env()?;
+        let rep = run_job(&job, Some(&mut be));
+        println!("backend: cpu ({}); superstep workers: {eff_workers}", be.active());
+        rep
     };
     #[cfg(not(feature = "pjrt"))]
-    let rep = run_job(&job, Some(&mut PureBackend));
+    let rep = {
+        let mut be = SimdBackend::from_env()?;
+        let rep = run_job(&job, Some(&mut be));
+        println!("backend: cpu ({}); superstep workers: {eff_workers}", be.active());
+        rep
+    };
     println!(
         "{} partition: TC={} ({:.3}s wall)",
         rep.partitioner,
@@ -456,7 +504,9 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
     use windgp::coordinator::parallel_map;
     use windgp::graph::rmat::{generate, RmatParams};
     use windgp::partition::{CostTracker, EdgePartition, Partitioner};
-    use windgp::simulator::ell::{EllBackend, EllBlock};
+    use windgp::simulator::algorithms::pagerank::{pagerank_with_plan_workers, PagerankPlan};
+    use windgp::simulator::ell::{EllBackend, EllBlock, INF};
+    use windgp::simulator::simd::SimdMode;
     use windgp::simulator::SimGraph;
     use windgp::util::bench::{bench, BenchStats};
     use windgp::util::json::Json;
@@ -649,12 +699,25 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
         assert!(r.tc > 0.0);
     }));
 
-    // --- pure ELL kernel ---
+    // --- BSP simulator kernels: pure scalar oracle, the SimdBackend's
+    //     branchless scalar path, and (where AVX2 is up) the SIMD path —
+    //     all three produce bitwise-identical vectors, so the deltas here
+    //     are pure kernel speed. Plus one full PageRank superstep, scalar
+    //     sequential vs simd + parallel fan, to see end-to-end effect. ---
     let sg = SimGraph::build(&g, &cluster, &wind_ep);
     let l = &sg.locals[0];
     let blk = EllBlock::build(l, 16, None, |_, _| 0.5);
     let x = blk.fill_x(&vec![1.0; blk.verts], 0.0);
+    let x_inf = blk.fill_x(&vec![1.0; blk.verts], INF);
     let mut pure = PureBackend;
+    let mut scalar_be = SimdBackend::new(SimdMode::Scalar);
+    let mut simd_be = SimdBackend::new(SimdMode::Auto);
+    eprintln!(
+        "sim kernels: {} rows x {} lanes, simd path = {}",
+        blk.rows,
+        blk.k,
+        simd_be.active()
+    );
     results.push(bench(
         &format!("ell/spmv pure ({} rows x {})", blk.rows, blk.k),
         samples.max(5),
@@ -663,6 +726,31 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
             assert_eq!(y.len(), blk.rows);
         },
     ));
+    results.push(bench("sim/spmv", samples.max(5), || {
+        let y = scalar_be.spmv(0, &blk, &x);
+        assert_eq!(y.len(), blk.rows);
+    }));
+    results.push(bench("sim/spmv-simd", samples.max(5), || {
+        let y = simd_be.spmv(0, &blk, &x);
+        assert_eq!(y.len(), blk.rows);
+    }));
+    results.push(bench("sim/minplus", samples.max(5), || {
+        let y = scalar_be.minplus(0, &blk, &x_inf);
+        assert_eq!(y.len(), blk.rows);
+    }));
+    results.push(bench("sim/minplus-simd", samples.max(5), || {
+        let y = simd_be.minplus(0, &blk, &x_inf);
+        assert_eq!(y.len(), blk.rows);
+    }));
+    let pr_plan = PagerankPlan::new(&sg, &|_| (16, None));
+    results.push(bench("sim/pagerank-superstep", samples, || {
+        let (r, _) = pagerank_with_plan_workers(&sg, 1, &mut scalar_be, &pr_plan, 1);
+        assert_eq!(r.len(), g.num_vertices());
+    }));
+    results.push(bench("sim/pagerank-superstep-simd", samples, || {
+        let (r, _) = pagerank_with_plan_workers(&sg, 1, &mut simd_be, &pr_plan, 0);
+        assert_eq!(r.len(), g.num_vertices());
+    }));
 
     // --- experiment fan-out: parallel_map vs the sequential reference ---
     results.push(bench("pool/parallel_map 4x partition+report", samples, || {

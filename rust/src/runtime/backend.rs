@@ -76,15 +76,15 @@ impl PjrtBackend {
             return Ok(());
         }
         let dims = [blk.rows, blk.k];
-        let cols = self.engine.upload(&blk.cols, &dims)?;
+        let cols = self.engine.upload(&blk.cols[..], &dims)?;
         let (a, b, scal) = if kind == KIND_PR {
-            let vals = self.engine.upload(&blk.vals, &dims)?;
+            let vals = self.engine.upload(&blk.vals[..], &dims)?;
             let d = self.engine.upload(&[1.0f32], &[])?;
             let t = self.engine.upload(&[0.0f32], &[])?;
             (vals, None, vec![d, t])
         } else {
-            let wts = self.engine.upload(&blk.vals, &dims)?;
-            let mask = self.engine.upload(&blk.mask, &dims)?;
+            let wts = self.engine.upload(&blk.vals[..], &dims)?;
+            let mask = self.engine.upload(&blk.mask[..], &dims)?;
             (wts, Some(mask), vec![])
         };
         self.cache.insert((machine, kind), Operands { cols, a, b, scal });

@@ -3,44 +3,87 @@
 //! the same sparse cost model as SSSP: compute ∝ local frontier size +
 //! frontier edges, communication only for newly-discovered replicas.
 
+use crate::coordinator::pool::parallel_map_mut_chunked;
 use crate::graph::VId;
 use crate::simulator::{CostClock, SimGraph, SimReport};
 
+/// Per-machine scratch reused across supersteps: discovery candidates
+/// plus a level-stamped local dedup marker (so one machine never reports
+/// the same vertex twice in a superstep, matching the sequential loop
+/// where the first touch sets `dist`).
+struct Scratch {
+    cand: Vec<VId>,
+    seen: Vec<u32>,
+}
+
 pub fn bfs(sg: &SimGraph, source: VId) -> (Vec<u32>, SimReport) {
+    bfs_workers(sg, source, 0)
+}
+
+/// [`bfs`] with an explicit superstep worker count (0 = auto); results
+/// are byte-identical for any `workers`.
+///
+/// Parallel-merge argument: sequentially, machine `i` skips a neighbor
+/// already discovered (by itself or machines `< i`) this superstep. In
+/// the fan each machine records *candidates* (locally deduped), and the
+/// merge replays them in machine order against `dist` — a candidate from
+/// machine `i` survives iff no machine `< i` (or an earlier frontier
+/// vertex on `i` itself) discovered it first, which is exactly the
+/// sequential acceptance test, so `discovered` (and with it the com
+/// charge order and the next frontier) comes out identical.
+pub fn bfs_workers(sg: &SimGraph, source: VId, workers: usize) -> (Vec<u32>, SimReport) {
     let n = sg.g.num_vertices();
     let p = sg.p;
     let mut dist = vec![u32::MAX; n];
     dist[source as usize] = 0;
     let mut frontier: Vec<VId> = vec![source];
     let mut clock = CostClock::new(p);
-    let mut cal = vec![0.0f64; p];
     let mut com = vec![0.0f64; p];
     let mut level = 0u32;
 
+    let w = super::superstep_workers(p, workers);
+    let mut slots: Vec<Scratch> = sg
+        .locals
+        .iter()
+        .map(|l| Scratch { cand: Vec::new(), seen: vec![0; l.num_verts()] })
+        .collect();
+
     while !frontier.is_empty() {
         level += 1;
-        cal.iter_mut().for_each(|c| *c = 0.0);
         com.iter_mut().for_each(|c| *c = 0.0);
-        let mut discovered: Vec<VId> = Vec::new();
-        // each machine expands the part of the frontier it holds
-        for i in 0..p {
+        // each machine expands the part of the frontier it holds; the
+        // fan only reads `dist`/`frontier` and writes its own scratch
+        let dist_ref = &dist;
+        let frontier_ref = &frontier;
+        let cal: Vec<f64> = parallel_map_mut_chunked(&mut slots, w, |i, s| {
             let l = &sg.locals[i];
+            s.cand.clear();
             let mut f_nodes = 0u64;
             let mut f_edges = 0u64;
-            for &u in &frontier {
+            for &u in frontier_ref {
                 let Some(&lu) = l.lidx.get(&u) else { continue };
                 f_nodes += 1;
                 for &lv in l.neighbors(lu) {
                     f_edges += 1;
                     let gv = l.verts[lv as usize];
-                    if dist[gv as usize] == u32::MAX {
-                        dist[gv as usize] = level;
-                        discovered.push(gv);
+                    if dist_ref[gv as usize] == u32::MAX && s.seen[lv as usize] != level {
+                        s.seen[lv as usize] = level;
+                        s.cand.push(gv);
                     }
                 }
             }
             let m = &sg.cluster.machines[i];
-            cal[i] = m.c_node * f_nodes as f64 + m.c_edge * f_edges as f64;
+            m.c_node * f_nodes as f64 + m.c_edge * f_edges as f64
+        });
+        // merge: replay candidates in machine index order (see above)
+        let mut discovered: Vec<VId> = Vec::new();
+        for s in &slots {
+            for &gv in &s.cand {
+                if dist[gv as usize] == u32::MAX {
+                    dist[gv as usize] = level;
+                    discovered.push(gv);
+                }
+            }
         }
         // sync newly discovered replicated vertices
         for &v in &discovered {

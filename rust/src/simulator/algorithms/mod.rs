@@ -6,14 +6,108 @@
 //! *answer* (verified against [`super::reference`] in tests) and a
 //! [`SimReport`] with the simulated distributed running time.
 
+//! Parallel supersteps: machines are independent within a superstep by
+//! the BSP model, so every driver fans its per-machine compute phase over
+//! the worker pool ([`crate::coordinator::pool::parallel_map_mut_chunked`])
+//! and merges results *in machine index order* — reproducing the
+//! sequential loop's float/integer operation order exactly, so output is
+//! byte-identical at any `WINDGP_WORKERS` (same guarantee as the parallel
+//! expansion/SLS engines). Per-superstep allocations (`fill_x`, kernel
+//! `y`, folds) live in per-machine scratch reused across supersteps.
+
 pub mod bfs;
 pub mod pagerank;
 pub mod sssp;
 pub mod triangle;
 pub mod wcc;
 
-pub use bfs::bfs;
-pub use pagerank::pagerank;
-pub use sssp::sssp;
-pub use triangle::triangles;
-pub use wcc::wcc;
+pub use bfs::{bfs, bfs_workers};
+pub use pagerank::{pagerank, pagerank_workers};
+pub use sssp::{sssp, sssp_workers};
+pub use triangle::{triangles, triangles_workers};
+pub use wcc::{wcc, wcc_workers};
+
+use crate::coordinator::pool::{effective_workers, in_pool_worker, parallel_map_mut_chunked};
+use crate::simulator::ell::EllBackend;
+
+/// Effective worker count for the per-machine compute fan of one
+/// superstep: `requested` (0 = auto: `WINDGP_WORKERS` / available cores),
+/// clamped to the machine count; forced to 1 inside a pool worker (an
+/// experiment fan-out above already saturates the cores).
+pub fn superstep_workers(p: usize, requested: usize) -> usize {
+    if p <= 1 || in_pool_worker() {
+        return 1;
+    }
+    let w = if requested == 0 { effective_workers(p) } else { requested };
+    w.clamp(1, p)
+}
+
+/// Per-machine superstep executor for the kernel-backed drivers
+/// (pagerank, sssp): owns one scratch `S` per machine, and — when the
+/// backend can fork and more than one worker is in play — one forked
+/// backend per machine so the compute closures can run concurrently.
+/// Results always come back in machine index order.
+pub(crate) enum BackendFan<S> {
+    /// caller's backend, machines walked sequentially on this thread
+    Seq(Vec<S>),
+    /// forked backends, fanned over `workers` pool threads
+    Par(Vec<ParSlot<S>>, usize),
+}
+
+pub(crate) struct ParSlot<S> {
+    scratch: S,
+    backend: Box<dyn EllBackend + Send>,
+}
+
+impl<S: Send> BackendFan<S> {
+    /// `workers` must already be resolved via [`superstep_workers`]. A
+    /// backend that cannot fork (PJRT: device-buffer cache) keeps the
+    /// sequential path regardless of `workers`.
+    pub fn new(
+        p: usize,
+        backend: &dyn EllBackend,
+        workers: usize,
+        mut mk: impl FnMut(usize) -> S,
+    ) -> Self {
+        if workers > 1 && p > 1 {
+            let forks: Option<Vec<_>> = (0..p).map(|_| backend.fork()).collect();
+            if let Some(forks) = forks {
+                let slots = forks
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, backend)| ParSlot { scratch: mk(i), backend })
+                    .collect();
+                return BackendFan::Par(slots, workers);
+            }
+        }
+        BackendFan::Seq((0..p).map(mk).collect())
+    }
+
+    /// Run `f` once per machine (compute phase of one superstep); returns
+    /// per-machine results in machine order. `f` must not touch shared
+    /// mutable state — merges happen in the caller, in machine order.
+    pub fn run<R, F>(&mut self, caller: &mut dyn EllBackend, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, &mut dyn EllBackend, &mut S) -> R + Sync,
+    {
+        match self {
+            BackendFan::Seq(slots) => {
+                slots.iter_mut().enumerate().map(|(i, s)| f(i, &mut *caller, s)).collect()
+            }
+            BackendFan::Par(slots, workers) => {
+                parallel_map_mut_chunked(slots, *workers, |i, slot| {
+                    f(i, slot.backend.as_mut(), &mut slot.scratch)
+                })
+            }
+        }
+    }
+
+    /// Machine `i`'s scratch, for the (sequential) merge phase.
+    pub fn scratch(&self, i: usize) -> &S {
+        match self {
+            BackendFan::Seq(slots) => &slots[i],
+            BackendFan::Par(slots, _) => &slots[i].scratch,
+        }
+    }
+}

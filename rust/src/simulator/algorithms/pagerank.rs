@@ -41,14 +41,36 @@ impl PagerankPlan {
     }
 }
 
-/// Run `iters` supersteps; returns (global ranks, report).
+/// Per-machine scratch reused across supersteps (gather buffer, kernel
+/// operand/result vectors, folded partials).
+#[derive(Default)]
+struct Scratch {
+    values: Vec<f32>,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    partial: Vec<f32>,
+}
+
+/// Run `iters` supersteps; returns (global ranks, report). Auto worker
+/// count for the per-machine compute fan (see [`super::superstep_workers`]).
 pub fn pagerank(
     sg: &SimGraph,
     iters: usize,
     backend: &mut dyn EllBackend,
 ) -> (Vec<f32>, SimReport) {
+    pagerank_workers(sg, iters, backend, 0)
+}
+
+/// [`pagerank`] with an explicit superstep worker count (0 = auto);
+/// results are byte-identical for any `workers`.
+pub fn pagerank_workers(
+    sg: &SimGraph,
+    iters: usize,
+    backend: &mut dyn EllBackend,
+    workers: usize,
+) -> (Vec<f32>, SimReport) {
     let plan = PagerankPlan::new(sg, &|_| (16, None));
-    pagerank_with_plan(sg, iters, backend, &plan)
+    pagerank_with_plan_workers(sg, iters, backend, &plan, workers)
 }
 
 pub fn pagerank_with_plan(
@@ -56,6 +78,16 @@ pub fn pagerank_with_plan(
     iters: usize,
     backend: &mut dyn EllBackend,
     plan: &PagerankPlan,
+) -> (Vec<f32>, SimReport) {
+    pagerank_with_plan_workers(sg, iters, backend, plan, 0)
+}
+
+pub fn pagerank_with_plan_workers(
+    sg: &SimGraph,
+    iters: usize,
+    backend: &mut dyn EllBackend,
+    plan: &PagerankPlan,
+    workers: usize,
 ) -> (Vec<f32>, SimReport) {
     let n = sg.g.num_vertices();
     let nf = n as f32;
@@ -68,27 +100,31 @@ pub fn pagerank_with_plan(
         .filter(|&v| sg.global_deg[v as usize] == 0)
         .collect();
 
-    let mut cal = vec![0.0f64; p];
     let mut com = vec![0.0f64; p];
-    let mut partials: Vec<Vec<f32>> = sg.locals.iter().map(|l| vec![0.0; l.num_verts()]).collect();
+    let w = super::superstep_workers(p, workers);
+    let mut fan = super::BackendFan::new(p, &*backend, w, |_| Scratch::default());
 
     for _ in 0..iters {
-        cal.iter_mut().for_each(|c| *c = 0.0);
         com.iter_mut().for_each(|c| *c = 0.0);
         let dmass: f32 = dangling.iter().map(|&v| rank[v as usize]).sum();
         let teleport = (1.0 - DAMPING) / nf + DAMPING * dmass / nf;
 
-        // 1. local compute (dense: all local vertices and edges active)
-        for i in 0..p {
+        // 1. local compute (dense: all local vertices and edges active).
+        // Machines are independent: each writes only its own scratch, so
+        // the fan is safe and the merge below (machine order) keeps the
+        // result byte-identical to the sequential loop.
+        let rank_ref = &rank;
+        let cal: Vec<f64> = fan.run(backend, |i, be, s: &mut Scratch| {
             let l = &sg.locals[i];
             let blk = &plan.blocks[i];
-            let values: Vec<f32> = l.verts.iter().map(|&gv| rank[gv as usize]).collect();
-            let x = blk.fill_x(&values, 0.0);
-            let y = backend.spmv(i, blk, &x);
-            partials[i] = blk.fold_sum(&y);
+            s.values.clear();
+            s.values.extend(l.verts.iter().map(|&gv| rank_ref[gv as usize]));
+            blk.fill_x_into(&s.values, 0.0, &mut s.x);
+            be.spmv_into(i, blk, &s.x, &mut s.y);
+            blk.fold_sum_into(&s.y, &mut s.partial);
             let m = &sg.cluster.machines[i];
-            cal[i] = m.c_node * l.num_verts() as f64 + m.c_edge * l.num_edges() as f64;
-        }
+            m.c_node * l.num_verts() as f64 + m.c_edge * l.num_edges() as f64
+        });
 
         // 2. master aggregation + 3. mirror broadcast
         for v in 0..n as VId {
@@ -100,7 +136,7 @@ pub fn pagerank_with_plan(
             let mut acc = 0.0f32;
             for &i in reps {
                 let l = &sg.locals[i as usize];
-                acc += partials[i as usize][l.lidx[&v] as usize];
+                acc += fan.scratch(i as usize).partial[l.lidx[&v] as usize];
             }
             rank[v as usize] = DAMPING * acc + teleport;
             sg.charge_sync(v, &mut com);

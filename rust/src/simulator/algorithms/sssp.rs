@@ -32,10 +32,30 @@ impl SsspPlan {
     }
 }
 
+/// Per-machine scratch reused across supersteps.
+#[derive(Default)]
+struct Scratch {
+    values: Vec<f32>,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    folded: Vec<f32>,
+}
+
 /// Run to convergence from `source`; returns (distances, report).
 pub fn sssp(sg: &SimGraph, source: VId, backend: &mut dyn EllBackend) -> (Vec<f32>, SimReport) {
+    sssp_workers(sg, source, backend, 0)
+}
+
+/// [`sssp`] with an explicit superstep worker count (0 = auto);
+/// results are byte-identical for any `workers`.
+pub fn sssp_workers(
+    sg: &SimGraph,
+    source: VId,
+    backend: &mut dyn EllBackend,
+    workers: usize,
+) -> (Vec<f32>, SimReport) {
     let plan = SsspPlan::new(sg, &|_| (16, None));
-    sssp_with_plan(sg, source, backend, &plan)
+    sssp_with_plan_workers(sg, source, backend, &plan, workers)
 }
 
 pub fn sssp_with_plan(
@@ -44,50 +64,81 @@ pub fn sssp_with_plan(
     backend: &mut dyn EllBackend,
     plan: &SsspPlan,
 ) -> (Vec<f32>, SimReport) {
+    sssp_with_plan_workers(sg, source, backend, plan, 0)
+}
+
+pub fn sssp_with_plan_workers(
+    sg: &SimGraph,
+    source: VId,
+    backend: &mut dyn EllBackend,
+    plan: &SsspPlan,
+    workers: usize,
+) -> (Vec<f32>, SimReport) {
     let n = sg.g.num_vertices();
     let p = sg.p;
     let mut dist = vec![f32::INFINITY; n];
     dist[source as usize] = 0.0;
     let mut clock = CostClock::new(p);
-    let mut cal = vec![0.0f64; p];
     let mut com = vec![0.0f64; p];
     // frontier: vertices whose distance changed last superstep
     let mut active = vec![false; n];
     active[source as usize] = true;
     let mut any_active = true;
 
+    let w = super::superstep_workers(p, workers);
+    let mut fan = super::BackendFan::new(p, &*backend, w, |_| Scratch::default());
+    let mut new_dist = vec![0.0f32; n];
+
     while any_active {
-        cal.iter_mut().for_each(|c| *c = 0.0);
         com.iter_mut().for_each(|c| *c = 0.0);
 
-        // local relaxation on machines whose local copy set intersects the
-        // frontier
-        let mut new_dist = dist.clone();
-        for i in 0..p {
+        // local relaxation on machines whose local copy set intersects
+        // the frontier; machines only read `dist`/`active` and write
+        // their own scratch, so the compute fan is safe
+        let dist_ref = &dist;
+        let active_ref = &active;
+        let stats: Vec<(f64, bool)> = fan.run(backend, |i, be, s: &mut Scratch| {
             let l = &sg.locals[i];
             // frontier stats for the cost model
             let mut f_nodes = 0u64;
             let mut f_edges = 0u64;
             for (lv, &gv) in l.verts.iter().enumerate() {
-                if active[gv as usize] {
+                if active_ref[gv as usize] {
                     f_nodes += 1;
                     f_edges += l.neighbors(lv as u32).len() as u64;
                 }
             }
             if f_nodes == 0 {
-                continue;
+                return (0.0, false);
             }
             let m = &sg.cluster.machines[i];
-            cal[i] = m.c_node * f_nodes as f64 + m.c_edge * f_edges as f64;
+            let cal = m.c_node * f_nodes as f64 + m.c_edge * f_edges as f64;
             let blk = &plan.blocks[i];
-            let values: Vec<f32> = l
-                .verts
-                .iter()
-                .map(|&gv| if dist[gv as usize].is_finite() { dist[gv as usize] } else { INF })
-                .collect();
-            let x = blk.fill_x(&values, INF);
-            let y = backend.minplus(i, blk, &x);
-            let folded = blk.fold_min(&y);
+            s.values.clear();
+            s.values.extend(l.verts.iter().map(|&gv| {
+                let d = dist_ref[gv as usize];
+                if d.is_finite() {
+                    d
+                } else {
+                    INF
+                }
+            }));
+            blk.fill_x_into(&s.values, INF, &mut s.x);
+            be.minplus_into(i, blk, &s.x, &mut s.y);
+            blk.fold_min_into(&s.y, &mut s.folded);
+            (cal, true)
+        });
+        let cal: Vec<f64> = stats.iter().map(|&(c, _)| c).collect();
+
+        // merge folded distances in machine index order — identical
+        // float comparisons, in the order the sequential loop made them
+        new_dist.copy_from_slice(&dist);
+        for (i, &(_, ran)) in stats.iter().enumerate() {
+            if !ran {
+                continue;
+            }
+            let l = &sg.locals[i];
+            let folded = &fan.scratch(i).folded;
             for (lv, &gv) in l.verts.iter().enumerate() {
                 let d = folded[lv];
                 if d < INF / 2.0 && d < new_dist[gv as usize] {

@@ -8,56 +8,89 @@
 //! ships its neighbor list — charge_sync per replica) followed by one
 //! compute superstep (C_edge per adjacency-intersection candidate probe).
 
+use crate::coordinator::pool::{chunk_ranges, parallel_map_mut};
 use crate::simulator::{CostClock, SimGraph, SimReport};
 
 pub fn triangles(sg: &SimGraph) -> (u64, SimReport) {
+    triangles_workers(sg, 0)
+}
+
+/// [`triangles`] with an explicit superstep worker count (0 = auto);
+/// results are byte-identical for any `workers` — per-machine counts are
+/// u64 (exact) and the membership marker is cleaned after every edge, so
+/// machines share nothing; totals are summed in machine index order.
+pub fn triangles_workers(sg: &SimGraph, workers: usize) -> (u64, SimReport) {
     let g = sg.g;
     let p = sg.p;
     let mut clock = CostClock::new(p);
 
     // superstep 1: adjacency exchange for replicated vertices
-    let mut cal = vec![0.0f64; p];
     let mut com = vec![0.0f64; p];
     for v in 0..g.num_vertices() as u32 {
         sg.charge_sync(v, &mut com);
     }
-    clock.superstep(&cal, &com);
+    clock.superstep(&vec![0.0f64; p], &com);
 
-    // superstep 2: local counting with a global membership marker
+    // superstep 2: local counting, fanned over worker chunks. The O(n)
+    // membership marker is per *chunk*, not per machine: machines inside a
+    // chunk run sequentially and each edge restores the marker it set, so
+    // sharing is safe and memory stays O(workers * n).
     com.iter_mut().for_each(|c| *c = 0.0);
+    let w = super::superstep_workers(p, workers);
+    let mut chunks: Vec<((usize, usize), Vec<u32>)> = chunk_ranges(p, w)
+        .into_iter()
+        .map(|r| (r, vec![u32::MAX; g.num_vertices()]))
+        .collect();
+    let per_machine: Vec<(f64, u64)> = parallel_map_mut(&mut chunks, |_, ((a, b), marker)| {
+        (*a..*b).map(|i| count_machine(sg, i, marker)).collect::<Vec<_>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+
+    let mut cal = vec![0.0f64; p];
     let mut total3 = 0u64; // 3 x triangle count
-    let mut marker = vec![u32::MAX; g.num_vertices()]; // marks N(u) with u
-    for i in 0..p {
-        let l = &sg.locals[i];
-        let mut probes = 0u64;
-        for &(lu, lv) in &l.edges {
-            let (mut gu, mut gv) = (l.verts[lu as usize], l.verts[lv as usize]);
-            // scan the smaller adjacency
-            if g.degree(gu) > g.degree(gv) {
-                std::mem::swap(&mut gu, &mut gv);
-            }
-            // mark N(gu)
-            for &w in g.neighbors(gu) {
-                marker[w as usize] = gu;
-            }
-            for &w in g.neighbors(gv) {
-                probes += 1;
-                if w != gu && w != gv && marker[w as usize] == gu {
-                    total3 += 1;
-                }
-            }
-            // unmark (cheap: marker keyed by gu, next edge overwrites)
-            for &w in g.neighbors(gu) {
-                if marker[w as usize] == gu {
-                    marker[w as usize] = u32::MAX;
-                }
-            }
-        }
-        let m = &sg.cluster.machines[i];
-        cal[i] = m.c_edge * probes as f64;
+    for (i, (c, t3)) in per_machine.into_iter().enumerate() {
+        cal[i] = c;
+        total3 += t3;
     }
     clock.superstep(&cal, &com);
     (total3 / 3, SimReport::from_clock("Triangle", clock))
+}
+
+/// Count one machine's edge-iterator probes. `marker` marks N(gu) with gu
+/// (size = global vertex count) and is left as it was found — all
+/// u32::MAX — after every edge.
+fn count_machine(sg: &SimGraph, i: usize, marker: &mut [u32]) -> (f64, u64) {
+    let g = sg.g;
+    let l = &sg.locals[i];
+    let mut probes = 0u64;
+    let mut total3 = 0u64;
+    for &(lu, lv) in &l.edges {
+        let (mut gu, mut gv) = (l.verts[lu as usize], l.verts[lv as usize]);
+        // scan the smaller adjacency
+        if g.degree(gu) > g.degree(gv) {
+            std::mem::swap(&mut gu, &mut gv);
+        }
+        // mark N(gu)
+        for &w in g.neighbors(gu) {
+            marker[w as usize] = gu;
+        }
+        for &w in g.neighbors(gv) {
+            probes += 1;
+            if w != gu && w != gv && marker[w as usize] == gu {
+                total3 += 1;
+            }
+        }
+        // unmark (cheap: marker keyed by gu, next edge overwrites)
+        for &w in g.neighbors(gu) {
+            if marker[w as usize] == gu {
+                marker[w as usize] = u32::MAX;
+            }
+        }
+    }
+    let m = &sg.cluster.machines[i];
+    (m.c_edge * probes as f64, total3)
 }
 
 #[cfg(test)]

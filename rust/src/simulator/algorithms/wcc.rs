@@ -2,42 +2,68 @@
 //! an extra workload beyond the paper's four, used by the examples and
 //! failure-injection tests. Frontier-sparse like SSSP.
 
+use crate::coordinator::pool::parallel_map_mut_chunked;
 use crate::graph::VId;
 use crate::simulator::{CostClock, SimGraph, SimReport};
 
 pub fn wcc(sg: &SimGraph) -> (Vec<VId>, SimReport) {
+    wcc_workers(sg, 0)
+}
+
+/// [`wcc`] with an explicit superstep worker count (0 = auto); results
+/// are byte-identical for any `workers` — label propagation is an
+/// integer min, so per-machine candidate minima merged in any order give
+/// the sequential answer; we still merge in machine order.
+pub fn wcc_workers(sg: &SimGraph, workers: usize) -> (Vec<VId>, SimReport) {
     let n = sg.g.num_vertices();
     let p = sg.p;
     let mut label: Vec<VId> = (0..n as VId).collect();
     let mut active = vec![true; n];
     let mut clock = CostClock::new(p);
-    let mut cal = vec![0.0f64; p];
     let mut com = vec![0.0f64; p];
+    let mut new_label = vec![0 as VId; n];
+
+    let w = super::superstep_workers(p, workers);
+    // per-machine candidate-label scratch over local vertices, reused
+    // across supersteps (VId::MAX = no candidate: labels are < n)
+    let mut slots: Vec<Vec<VId>> =
+        sg.locals.iter().map(|l| vec![VId::MAX; l.num_verts()]).collect();
 
     loop {
-        cal.iter_mut().for_each(|c| *c = 0.0);
         com.iter_mut().for_each(|c| *c = 0.0);
-        let mut new_label = label.clone();
-        for i in 0..p {
+        let label_ref = &label;
+        let active_ref = &active;
+        let cal: Vec<f64> = parallel_map_mut_chunked(&mut slots, w, |i, cand| {
             let l = &sg.locals[i];
+            cand.fill(VId::MAX);
             let mut f_nodes = 0u64;
             let mut f_edges = 0u64;
             for (lu, &gu) in l.verts.iter().enumerate() {
-                if !active[gu as usize] {
+                if !active_ref[gu as usize] {
                     continue;
                 }
                 f_nodes += 1;
+                let lu_label = label_ref[gu as usize];
                 for &lv in l.neighbors(lu as u32) {
                     f_edges += 1;
-                    let gv = l.verts[lv as usize];
-                    let lu_label = label[gu as usize];
-                    if lu_label < new_label[gv as usize] {
-                        new_label[gv as usize] = lu_label;
+                    if lu_label < cand[lv as usize] {
+                        cand[lv as usize] = lu_label;
                     }
                 }
             }
             let m = &sg.cluster.machines[i];
-            cal[i] = m.c_node * f_nodes as f64 + m.c_edge * f_edges as f64;
+            m.c_node * f_nodes as f64 + m.c_edge * f_edges as f64
+        });
+        // min-merge candidates in machine index order
+        new_label.copy_from_slice(&label);
+        for (i, cand) in slots.iter().enumerate() {
+            let l = &sg.locals[i];
+            for (lv, &cl) in cand.iter().enumerate() {
+                let gv = l.verts[lv] as usize;
+                if cl < new_label[gv] {
+                    new_label[gv] = cl;
+                }
+            }
         }
         let mut any = false;
         for v in 0..n {

@@ -14,20 +14,34 @@
 //!   - x entries in the continuation/padding region are driver-filled
 //!     (0 for SpMV folds, +INF for min-plus folds) and never read through
 //!     `cols`.
+//!   - `k` is rounded up to a multiple of [`LANES`] and the operand
+//!     arrays live in 32-byte-aligned storage ([`AVec`]), so the SIMD
+//!     backend ([`super::simd`]) can assume aligned, lane-multiple rows;
+//!     the extra lanes are inert padding like padded rows.
 
 use super::LocalGraph;
+use crate::util::AVec;
 
 /// Padding sentinel matching python/compile/kernels/ref.py::INF.
 pub const INF: f32 = 3.0e38;
+
+/// SIMD lane width the layout is padded for: `build` rounds the requested
+/// `k` up to a multiple of this, so a 32-byte-aligned base address (the
+/// [`AVec`] guarantee) makes every row of `cols`/`vals`/`mask` aligned
+/// too. Extra lanes are inert padding (vals 0, mask 0, cols 0), exactly
+/// like padded rows, so fold/`fill_x` contracts are unchanged.
+pub const LANES: usize = 8;
 
 #[derive(Clone, Debug)]
 pub struct EllBlock {
     /// padded row count == x length fed to the kernel
     pub rows: usize,
+    /// lane width actually laid out (the requested width rounded up to a
+    /// multiple of [`LANES`])
     pub k: usize,
-    pub cols: Vec<i32>,
-    pub vals: Vec<f32>,
-    pub mask: Vec<f32>,
+    pub cols: AVec<i32>,
+    pub vals: AVec<f32>,
+    pub mask: AVec<f32>,
     /// real row -> local vertex (len = real_rows; rows 0..verts identity)
     pub row_vertex: Vec<u32>,
     /// number of local vertices (the x prefix holding real values)
@@ -52,18 +66,22 @@ impl EllBlock {
 
     /// Build a block. `pad_to` rounds `rows` up (to an AOT variant size);
     /// `weight(local_row_vertex, local_neighbor)` supplies edge values.
+    /// The requested `k` is rounded up to a multiple of [`LANES`]; hub
+    /// rows split at the *padded* width, so a wider-than-requested lane
+    /// count only merges continuation rows (never splits more).
     pub fn build<F: Fn(u32, u32) -> f32>(
         local: &LocalGraph,
         k: usize,
         pad_to: Option<usize>,
         weight: F,
     ) -> EllBlock {
+        let k = k.max(1).next_multiple_of(LANES);
         let nv = local.num_verts();
         let needed = Self::rows_needed(local, k);
         let rows = pad_to.map_or(needed, |p| p.max(needed));
-        let mut cols = vec![0i32; rows * k];
-        let mut vals = vec![0f32; rows * k];
-        let mut mask = vec![0f32; rows * k];
+        let mut cols: AVec<i32> = AVec::zeroed(rows * k);
+        let mut vals: AVec<f32> = AVec::zeroed(rows * k);
+        let mut mask: AVec<f32> = AVec::zeroed(rows * k);
         let mut row_vertex: Vec<u32> = (0..nv as u32).collect();
         let mut next_row = nv;
         for v in 0..nv {
@@ -97,49 +115,104 @@ impl EllBlock {
 
     /// Fill an x vector for this block from per-local-vertex values.
     pub fn fill_x(&self, values: &[f32], pad_value: f32) -> Vec<f32> {
-        debug_assert_eq!(values.len(), self.verts);
-        let mut x = vec![pad_value; self.rows];
-        x[..self.verts].copy_from_slice(values);
+        let mut x = Vec::new();
+        self.fill_x_into(values, pad_value, &mut x);
         x
+    }
+
+    /// [`Self::fill_x`] into a caller-owned buffer (per-superstep scratch
+    /// reuse — same contents, no allocation after the first superstep).
+    pub fn fill_x_into(&self, values: &[f32], pad_value: f32, x: &mut Vec<f32>) {
+        debug_assert_eq!(values.len(), self.verts);
+        x.clear();
+        x.resize(self.rows, pad_value);
+        x[..self.verts].copy_from_slice(values);
     }
 
     /// Fold a kernel output back to per-vertex values by summation
     /// (SpMV/PageRank: continuation rows add into their vertex).
     pub fn fold_sum(&self, y: &[f32]) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.verts];
+        let mut out = Vec::new();
+        self.fold_sum_into(y, &mut out);
+        out
+    }
+
+    /// [`Self::fold_sum`] into a caller-owned buffer.
+    pub fn fold_sum_into(&self, y: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.verts, 0.0f32);
         for (r, &v) in self.row_vertex.iter().enumerate() {
             out[v as usize] += y[r];
         }
-        out
     }
 
     /// Fold by minimum (min-plus/SSSP). Continuation rows carry the
     /// pad_value (INF) self-term, so the min is safe.
     pub fn fold_min(&self, y: &[f32]) -> Vec<f32> {
-        let mut out = vec![INF; self.verts];
+        let mut out = Vec::new();
+        self.fold_min_into(y, &mut out);
+        out
+    }
+
+    /// [`Self::fold_min`] into a caller-owned buffer.
+    pub fn fold_min_into(&self, y: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.verts, INF);
         for (r, &v) in self.row_vertex.iter().enumerate() {
             out[v as usize] = out[v as usize].min(y[r]);
         }
-        out
     }
 }
 
-/// Compute backend over ELL blocks: the pure reference below, or the PJRT
-/// executor in [`crate::runtime`].
+/// Compute backend over ELL blocks: the pure reference below, the SIMD
+/// backend in [`super::simd`], or the PJRT executor in [`crate::runtime`].
 pub trait EllBackend {
     /// y[r] = Σ_j vals[r,j] · x[cols[r,j]]
     fn spmv(&mut self, machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32>;
     /// y[r] = min(x[r], min_j masked(vals[r,j] + x[cols[r,j]]))
     fn minplus(&mut self, machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32>;
+
+    /// [`Self::spmv`] into a caller-owned buffer (per-superstep scratch).
+    /// Same contents as `spmv` for any backend.
+    fn spmv_into(&mut self, machine: usize, blk: &EllBlock, x: &[f32], y: &mut Vec<f32>) {
+        *y = self.spmv(machine, blk, x);
+    }
+
+    /// [`Self::minplus`] into a caller-owned buffer.
+    fn minplus_into(&mut self, machine: usize, blk: &EllBlock, x: &[f32], y: &mut Vec<f32>) {
+        *y = self.minplus(machine, blk, x);
+    }
+
+    /// An independent handle usable from another thread, for the parallel
+    /// per-machine superstep fan. `None` (the default) keeps the caller on
+    /// the sequential path — the PJRT backend stays `None` because its
+    /// device-buffer cache is not shareable.
+    fn fork(&self) -> Option<Box<dyn EllBackend + Send>> {
+        None
+    }
 }
 
-/// Straightforward CPU implementation (and the oracle for the PJRT path).
-#[derive(Default)]
+/// Straightforward CPU implementation: the bitwise oracle the SIMD and
+/// PJRT paths are differentially tested against.
+#[derive(Clone, Default)]
 pub struct PureBackend;
 
 impl EllBackend for PureBackend {
-    fn spmv(&mut self, _machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32> {
-        let mut y = vec![0.0f32; blk.rows];
+    fn spmv(&mut self, machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32> {
+        let mut y = Vec::new();
+        self.spmv_into(machine, blk, x, &mut y);
+        y
+    }
+
+    fn minplus(&mut self, machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32> {
+        let mut y = Vec::new();
+        self.minplus_into(machine, blk, x, &mut y);
+        y
+    }
+
+    fn spmv_into(&mut self, _machine: usize, blk: &EllBlock, x: &[f32], y: &mut Vec<f32>) {
+        y.clear();
+        y.resize(blk.rows, 0.0f32);
         for r in 0..blk.real_rows {
             let mut acc = 0.0f32;
             for j in 0..blk.k {
@@ -148,11 +221,11 @@ impl EllBackend for PureBackend {
             }
             y[r] = acc;
         }
-        y
     }
 
-    fn minplus(&mut self, _machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32> {
-        let mut y = vec![INF; blk.rows];
+    fn minplus_into(&mut self, _machine: usize, blk: &EllBlock, x: &[f32], y: &mut Vec<f32>) {
+        y.clear();
+        y.resize(blk.rows, INF);
         for r in 0..blk.real_rows {
             let mut best = x[r];
             for j in 0..blk.k {
@@ -166,7 +239,10 @@ impl EllBackend for PureBackend {
             }
             y[r] = best;
         }
-        y
+    }
+
+    fn fork(&self) -> Option<Box<dyn EllBackend + Send>> {
+        Some(Box::new(PureBackend))
     }
 }
 
@@ -234,12 +310,61 @@ mod tests {
         let l = local_of(&g);
         let blk = EllBlock::build(&l, 4, Some(64), |_, _| 1.0);
         assert_eq!(blk.rows, 64);
-        assert_eq!(blk.cols.len(), 64 * 4);
+        assert_eq!(blk.k, LANES); // requested k=4 padded to the lane width
+        assert_eq!(blk.cols.len(), 64 * blk.k);
         // padded rows produce zero under spmv
         let x = blk.fill_x(&vec![1.0; blk.verts], 0.0);
         let y = PureBackend.spmv(0, &blk, &x);
         for r in blk.real_rows..64 {
             assert_eq!(y[r], 0.0);
         }
+    }
+
+    #[test]
+    fn layout_is_lane_padded_and_aligned() {
+        let g = gen::star(20);
+        let l = local_of(&g);
+        for req_k in [1usize, 3, 5, 8, 11, 16] {
+            let blk = EllBlock::build(&l, req_k, None, |_, _| 1.0);
+            assert_eq!(blk.k % LANES, 0, "k={req_k}");
+            assert!(blk.k >= req_k);
+            // 32-byte base + row stride k*4 (a multiple of 32) => every
+            // row of every operand is 32-byte aligned
+            for ptr in [blk.vals.as_ptr() as usize, blk.mask.as_ptr() as usize] {
+                assert_eq!(ptr % 32, 0);
+            }
+            assert_eq!(blk.cols.as_ptr() as usize % 32, 0);
+            assert_eq!(blk.k * 4 % 32, 0);
+            // padding lanes are inert for both folds
+            let x = blk.fill_x(&vec![1.0; blk.verts], 0.0);
+            let folded = blk.fold_sum(&PureBackend.spmv(0, &blk, &x));
+            assert_eq!(folded[l.lidx[&0] as usize], 19.0, "k={req_k}");
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_calls_and_reuse_scratch() {
+        let g = gen::star(20);
+        let l = local_of(&g);
+        let blk = EllBlock::build(&l, 4, None, |_, _| 1.0);
+        let vals = vec![1.0f32; blk.verts];
+        let x = blk.fill_x(&vals, 0.0);
+        let mut x2 = vec![9.9f32; 3]; // dirty scratch must be overwritten
+        blk.fill_x_into(&vals, 0.0, &mut x2);
+        assert_eq!(x, x2);
+        let mut be = PureBackend;
+        let y = be.spmv(0, &blk, &x);
+        let mut y2 = vec![7.7f32; 1000];
+        be.spmv_into(0, &blk, &x, &mut y2);
+        assert_eq!(y, y2);
+        let mut folded2 = vec![5.5f32; 2];
+        blk.fold_sum_into(&y2, &mut folded2);
+        assert_eq!(blk.fold_sum(&y), folded2);
+        let mut ym = vec![0.0f32; 1];
+        be.minplus_into(0, &blk, &x, &mut ym);
+        assert_eq!(be.minplus(0, &blk, &x), ym);
+        let mut fm = Vec::new();
+        blk.fold_min_into(&ym, &mut fm);
+        assert_eq!(blk.fold_min(&ym), fm);
     }
 }

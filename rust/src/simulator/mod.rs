@@ -19,6 +19,7 @@
 pub mod algorithms;
 pub mod ell;
 pub mod reference;
+pub mod simd;
 
 use std::collections::HashMap;
 

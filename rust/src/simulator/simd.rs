@@ -1,0 +1,450 @@
+//! SIMD ELL kernels: a CPU [`EllBackend`] that is **bitwise identical**
+//! to [`super::ell::PureBackend`] but vectorized with stable `std::arch` AVX2
+//! intrinsics (runtime-detected), with a lane-unrolled branchless scalar
+//! fallback on other targets.
+//!
+//! Bitwise-equality strategy: the kernels vectorize *across rows*
+//! (8 rows per register, one lane per row) and walk the `k` lanes of each
+//! row sequentially, so every row's float reduction happens in exactly
+//! the order the scalar oracle uses. Two rules keep the rounding equal:
+//!
+//!  - **No FMA contraction.** `_mm256_fmadd_ps` rounds once where
+//!    `mul` + `add` round twice; rustc never contracts scalar `a*b + c`
+//!    on its own, so the vector path must also use separate
+//!    `_mm256_mul_ps` / `_mm256_add_ps` or the two paths drift.
+//!  - **Branch → select with oracle tie semantics.** `minplus` keeps
+//!    `best` unchanged unless `mask > 0 && cand < best`; the vector form
+//!    `blendv(best, min_ps(cand, best), mask > 0)` reproduces that
+//!    exactly because `_mm256_min_ps(a, b)` returns `b` (the second
+//!    operand) on ties and NaNs, matching the scalar `if cand < best`.
+//!
+//! Layout assumptions (upheld by [`EllBlock::build`]): `k` is a multiple
+//! of [`super::ell::LANES`], operand arrays are 32-byte aligned with `rows * k`
+//! entries, and every `cols` entry is in `[0, rows)`. The entry points
+//! validate the cheap invariants always and the O(rows·k) `cols` bound
+//! in debug builds (the differential tests run in debug, so the unsafe
+//! gather/`get_unchecked` contract is exercised checked there).
+
+use anyhow::{bail, Result};
+
+use super::ell::{EllBackend, EllBlock, INF};
+
+/// Kernel selection parsed from `WINDGP_SIMD`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// AVX2 when the CPU has it, scalar fallback otherwise (the default).
+    Auto,
+    /// Require AVX2; falls back to scalar (with the same results) only
+    /// when the CPU lacks it.
+    Avx2,
+    /// Force the branchless scalar fallback (CI runs the test suite in
+    /// this mode so the non-x86 path cannot rot on AVX2 runners).
+    Scalar,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> Result<SimdMode> {
+        match s.trim().to_lowercase().as_str() {
+            "auto" | "" => Ok(SimdMode::Auto),
+            "avx2" => Ok(SimdMode::Avx2),
+            "scalar" => Ok(SimdMode::Scalar),
+            other => bail!("WINDGP_SIMD expects auto|avx2|scalar, got '{other}'"),
+        }
+    }
+
+    /// Read `WINDGP_SIMD` (unset = Auto). Errors on an unparseable value
+    /// so CLI entry points can reject typos loudly.
+    pub fn from_env() -> Result<SimdMode> {
+        match std::env::var("WINDGP_SIMD") {
+            Ok(v) => Self::parse(&v),
+            Err(_) => Ok(SimdMode::Auto),
+        }
+    }
+}
+
+/// Which kernel the backend actually dispatches to after CPU detection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum KernelPath {
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    Scalar,
+}
+
+/// SIMD CPU backend. Stateless apart from the resolved kernel path, so
+/// [`EllBackend::fork`] is a cheap clone and the parallel superstep fan
+/// can hand every machine its own handle.
+#[derive(Clone, Debug)]
+pub struct SimdBackend {
+    path: KernelPath,
+}
+
+impl Default for SimdBackend {
+    fn default() -> Self {
+        Self::new(SimdMode::Auto)
+    }
+}
+
+impl SimdBackend {
+    pub fn new(mode: SimdMode) -> SimdBackend {
+        let path = match mode {
+            SimdMode::Scalar => KernelPath::Scalar,
+            SimdMode::Auto | SimdMode::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    if is_x86_feature_detected!("avx2") {
+                        KernelPath::Avx2
+                    } else {
+                        KernelPath::Scalar
+                    }
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    KernelPath::Scalar
+                }
+            }
+        };
+        SimdBackend { path }
+    }
+
+    /// Strict env-driven construction (`WINDGP_SIMD`); errors on typos.
+    pub fn from_env() -> Result<SimdBackend> {
+        Ok(Self::new(SimdMode::from_env()?))
+    }
+
+    /// Env-driven construction that treats an unparseable `WINDGP_SIMD`
+    /// as Auto — for library defaults that cannot surface an error.
+    pub fn from_env_lenient() -> SimdBackend {
+        Self::new(SimdMode::from_env().unwrap_or(SimdMode::Auto))
+    }
+
+    /// The kernel path actually in use ("avx2" or "scalar") — reported by
+    /// `windgp simulate` / `windgp bench` so perf numbers are attributable.
+    pub fn active(&self) -> &'static str {
+        match self.path {
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => "avx2",
+            KernelPath::Scalar => "scalar",
+        }
+    }
+
+    /// Cheap invariants checked on every call; the O(rows·k) `cols`
+    /// bound check runs in debug builds only (see module docs).
+    fn check(blk: &EllBlock, x: &[f32]) {
+        assert_eq!(x.len(), blk.rows, "x length must equal blk.rows");
+        assert!(blk.real_rows <= blk.rows);
+        let need = blk.rows * blk.k;
+        assert!(
+            blk.vals.len() == need && blk.mask.len() == need && blk.cols.len() == need,
+            "operand arrays must be rows*k"
+        );
+        debug_assert!(
+            blk.cols.iter().all(|&c| c >= 0 && (c as usize) < blk.rows),
+            "cols out of bounds for x"
+        );
+        debug_assert!(
+            blk.rows.checked_mul(blk.k).is_some_and(|n| n <= i32::MAX as usize),
+            "block too large for i32 gather offsets"
+        );
+    }
+}
+
+impl EllBackend for SimdBackend {
+    fn spmv(&mut self, machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32> {
+        let mut y = Vec::new();
+        self.spmv_into(machine, blk, x, &mut y);
+        y
+    }
+
+    fn minplus(&mut self, machine: usize, blk: &EllBlock, x: &[f32]) -> Vec<f32> {
+        let mut y = Vec::new();
+        self.minplus_into(machine, blk, x, &mut y);
+        y
+    }
+
+    fn spmv_into(&mut self, _machine: usize, blk: &EllBlock, x: &[f32], y: &mut Vec<f32>) {
+        Self::check(blk, x);
+        y.clear();
+        y.resize(blk.rows, 0.0f32);
+        let mut done = 0usize;
+        #[cfg(target_arch = "x86_64")]
+        if self.path == KernelPath::Avx2 {
+            // Safety: AVX2 verified at construction; layout invariants
+            // verified by `check` above.
+            done = unsafe { avx2::spmv(blk, x, y) };
+        }
+        // tail rows (and the whole block on the scalar path)
+        unsafe { scalar::spmv_rows(blk, x, y, done, blk.real_rows) };
+    }
+
+    fn minplus_into(&mut self, _machine: usize, blk: &EllBlock, x: &[f32], y: &mut Vec<f32>) {
+        Self::check(blk, x);
+        y.clear();
+        y.resize(blk.rows, INF);
+        let mut done = 0usize;
+        #[cfg(target_arch = "x86_64")]
+        if self.path == KernelPath::Avx2 {
+            // Safety: as in `spmv_into`.
+            done = unsafe { avx2::minplus(blk, x, y) };
+        }
+        unsafe { scalar::minplus_rows(blk, x, y, done, blk.real_rows) };
+    }
+
+    fn fork(&self) -> Option<Box<dyn EllBackend + Send>> {
+        Some(Box::new(self.clone()))
+    }
+}
+
+/// Branchless lane-unrolled scalar kernels: the fallback path, bitwise
+/// identical to [`crate::simulator::ell::PureBackend`] (same per-row
+/// accumulation order; the `minplus` mask branch becomes a conditional
+/// move).
+mod scalar {
+    use super::EllBlock;
+
+    /// # Safety
+    /// Caller guarantees `x.len() == blk.rows`, operand arrays hold
+    /// `rows * k` entries, every `cols` entry indexes into `x`, and
+    /// `lo <= hi <= blk.rows <= y.len()`.
+    pub unsafe fn spmv_rows(blk: &EllBlock, x: &[f32], y: &mut [f32], lo: usize, hi: usize) {
+        let k = blk.k;
+        let vals: &[f32] = &blk.vals;
+        let cols: &[i32] = &blk.cols;
+        for r in lo..hi {
+            let base = r * k;
+            let mut acc = 0.0f32;
+            let mut j = 0usize;
+            // 4-lane unroll with a single sequential accumulator: the
+            // adds stay in oracle order, only loop overhead is removed
+            while j + 4 <= k {
+                let i0 = base + j;
+                acc += *vals.get_unchecked(i0) * *x.get_unchecked(*cols.get_unchecked(i0) as usize);
+                acc += *vals.get_unchecked(i0 + 1)
+                    * *x.get_unchecked(*cols.get_unchecked(i0 + 1) as usize);
+                acc += *vals.get_unchecked(i0 + 2)
+                    * *x.get_unchecked(*cols.get_unchecked(i0 + 2) as usize);
+                acc += *vals.get_unchecked(i0 + 3)
+                    * *x.get_unchecked(*cols.get_unchecked(i0 + 3) as usize);
+                j += 4;
+            }
+            while j < k {
+                let idx = base + j;
+                acc += *vals.get_unchecked(idx)
+                    * *x.get_unchecked(*cols.get_unchecked(idx) as usize);
+                j += 1;
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// # Safety
+    /// Same contract as [`spmv_rows`].
+    pub unsafe fn minplus_rows(blk: &EllBlock, x: &[f32], y: &mut [f32], lo: usize, hi: usize) {
+        let k = blk.k;
+        let vals: &[f32] = &blk.vals;
+        let mask: &[f32] = &blk.mask;
+        let cols: &[i32] = &blk.cols;
+        for r in lo..hi {
+            let base = r * k;
+            let mut best = x[r];
+            for j in 0..k {
+                let idx = base + j;
+                let cand = *vals.get_unchecked(idx)
+                    + *x.get_unchecked(*cols.get_unchecked(idx) as usize);
+                // branchless select, same predicate as the oracle's
+                // `mask > 0 && cand < best` (NaN cand compares false and
+                // is kept out, like the oracle)
+                let take = *mask.get_unchecked(idx) > 0.0 && cand < best;
+                best = if take { cand } else { best };
+            }
+            y[r] = best;
+        }
+    }
+}
+
+/// AVX2 kernels: 8 rows per register (one row per 32-bit lane), lanes of
+/// each row walked sequentially — see module docs for why this ordering
+/// is what makes the results bitwise equal to the oracle.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use crate::simulator::ell::{EllBlock, LANES};
+    use std::arch::x86_64::*;
+
+    /// Gather offsets for one operand lane across 8 consecutive rows:
+    /// element `l` reads `base + l*k`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn row_strides(k: usize) -> __m256i {
+        let k = k as i32;
+        _mm256_setr_epi32(0, k, 2 * k, 3 * k, 4 * k, 5 * k, 6 * k, 7 * k)
+    }
+
+    /// Vectorized rows `[0, ret)` of the SpMV; returns the number of rows
+    /// handled (the largest multiple of 8 ≤ `real_rows`). The caller
+    /// finishes the remainder with the scalar kernel.
+    ///
+    /// # Safety
+    /// AVX2 must be available; layout contract as in `scalar::spmv_rows`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn spmv(blk: &EllBlock, x: &[f32], y: &mut [f32]) -> usize {
+        let k = blk.k;
+        let full = blk.real_rows - blk.real_rows % LANES;
+        let vals = blk.vals.as_ptr();
+        let cols = blk.cols.as_ptr();
+        let xp = x.as_ptr();
+        let stride = row_strides(k);
+        let mut r = 0usize;
+        while r < full {
+            let vbase = vals.add(r * k);
+            let cbase = cols.add(r * k);
+            let mut acc = _mm256_setzero_ps();
+            for j in 0..k {
+                let v = _mm256_i32gather_ps::<4>(vbase.add(j), stride);
+                let c = _mm256_i32gather_epi32::<4>(cbase.add(j), stride);
+                let xv = _mm256_i32gather_ps::<4>(xp, c);
+                // mul + add, NOT fmadd: FMA's single rounding would
+                // diverge from the scalar oracle (module docs)
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(v, xv));
+            }
+            _mm256_storeu_ps(y.as_mut_ptr().add(r), acc);
+            r += LANES;
+        }
+        full
+    }
+
+    /// Vectorized rows `[0, ret)` of the masked min-plus product.
+    ///
+    /// # Safety
+    /// As in [`spmv`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn minplus(blk: &EllBlock, x: &[f32], y: &mut [f32]) -> usize {
+        let k = blk.k;
+        let full = blk.real_rows - blk.real_rows % LANES;
+        let vals = blk.vals.as_ptr();
+        let mask = blk.mask.as_ptr();
+        let cols = blk.cols.as_ptr();
+        let xp = x.as_ptr();
+        let stride = row_strides(k);
+        let zero = _mm256_setzero_ps();
+        let mut r = 0usize;
+        while r < full {
+            let vbase = vals.add(r * k);
+            let mbase = mask.add(r * k);
+            let cbase = cols.add(r * k);
+            let mut best = _mm256_loadu_ps(xp.add(r));
+            for j in 0..k {
+                let w = _mm256_i32gather_ps::<4>(vbase.add(j), stride);
+                let m = _mm256_i32gather_ps::<4>(mbase.add(j), stride);
+                let c = _mm256_i32gather_epi32::<4>(cbase.add(j), stride);
+                let xv = _mm256_i32gather_ps::<4>(xp, c);
+                let cand = _mm256_add_ps(w, xv);
+                // min_ps returns the SECOND operand on ties/NaN, so
+                // `min(cand, best)` == scalar `if cand < best { cand }`
+                let mn = _mm256_min_ps(cand, best);
+                let take = _mm256_cmp_ps::<_CMP_GT_OQ>(m, zero);
+                best = _mm256_blendv_ps(best, mn, take);
+            }
+            _mm256_storeu_ps(y.as_mut_ptr().add(r), best);
+            r += LANES;
+        }
+        full
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::machines::Cluster;
+    use crate::partition::EdgePartition;
+    use crate::simulator::ell::PureBackend;
+    use crate::simulator::{LocalGraph, SimGraph};
+    use crate::util::SplitMix64;
+
+    fn local_of(g: &crate::graph::Graph) -> LocalGraph {
+        let cluster = Cluster::homogeneous(1, u64::MAX / 8);
+        let ep = EdgePartition::from_assignment(1, vec![0; g.num_edges()]);
+        let sg = SimGraph::build(g, &cluster, &ep);
+        sg.locals.into_iter().next().unwrap()
+    }
+
+    fn assert_bitwise_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: row {i}: {x} vs {y}");
+        }
+    }
+
+    /// The differential matrix: hub-split continuation rows, `pad_to`
+    /// row padding, INF lanes in x, and requested k values that are not
+    /// multiples of the SIMD width — SimdBackend must match PureBackend
+    /// bit for bit on every cell, for both kernels, on both paths.
+    #[test]
+    fn differential_matrix_vs_pure_oracle() {
+        let graphs: Vec<(&str, crate::graph::Graph)> = vec![
+            ("star25", gen::star(25)), // hub degree 24: continuation rows at every k
+            ("clique7", gen::clique(7)),
+            ("er", gen::erdos_renyi(120, 700, 7)),
+            ("path9", gen::path(9)),
+        ];
+        let mut rng = SplitMix64::new(42);
+        for (gname, g) in &graphs {
+            let l = local_of(g);
+            for req_k in [3usize, 5, 8, 16] {
+                for pad in [None, Some(256)] {
+                    let blk = EllBlock::build(&l, req_k, pad, |u, v| {
+                        0.25 + ((u as f32) * 0.37 + (v as f32) * 0.11).fract()
+                    });
+                    // x mixing finite values with INF sentinels
+                    let values: Vec<f32> = (0..blk.verts)
+                        .map(|_| {
+                            if rng.next_usize(5) == 0 {
+                                INF
+                            } else {
+                                rng.next_usize(1000) as f32 * 0.013
+                            }
+                        })
+                        .collect();
+                    let x0 = blk.fill_x(&values, 0.0);
+                    let xinf = blk.fill_x(&values, INF);
+                    let want_spmv = PureBackend.spmv(0, &blk, &x0);
+                    let want_minplus = PureBackend.minplus(0, &blk, &xinf);
+                    for mode in [SimdMode::Scalar, SimdMode::Auto] {
+                        let mut be = SimdBackend::new(mode);
+                        let case = format!("{gname} k={req_k} pad={pad:?} {}", be.active());
+                        let got = be.spmv(0, &blk, &x0);
+                        assert_bitwise_eq(&want_spmv, &got, &format!("spmv {case}"));
+                        let got = be.minplus(0, &blk, &xinf);
+                        assert_bitwise_eq(&want_minplus, &got, &format!("minplus {case}"));
+                        // scratch reuse: a dirty buffer must not leak
+                        let mut y = vec![123.0f32; 9];
+                        be.spmv_into(0, &blk, &x0, &mut y);
+                        assert_bitwise_eq(&want_spmv, &y, &format!("spmv_into {case}"));
+                        be.minplus_into(0, &blk, &xinf, &mut y);
+                        assert_bitwise_eq(&want_minplus, &y, &format!("minplus_into {case}"));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(SimdMode::parse("auto").unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse("AVX2").unwrap(), SimdMode::Avx2);
+        assert_eq!(SimdMode::parse(" scalar ").unwrap(), SimdMode::Scalar);
+        assert!(SimdMode::parse("neon").is_err());
+        let be = SimdBackend::new(SimdMode::Scalar);
+        assert_eq!(be.active(), "scalar");
+    }
+
+    #[test]
+    fn fork_is_independent_and_identical() {
+        let g = gen::erdos_renyi(60, 200, 3);
+        let l = local_of(&g);
+        let blk = EllBlock::build(&l, 4, None, |_, _| 0.5);
+        let x = blk.fill_x(&vec![1.0; blk.verts], 0.0);
+        let mut be = SimdBackend::default();
+        let mut forked = be.fork().expect("simd backend must fork");
+        assert_bitwise_eq(&be.spmv(0, &blk, &x), &forked.spmv(0, &blk, &x), "fork spmv");
+    }
+}

@@ -1,0 +1,113 @@
+//! 32-byte-aligned contiguous storage for SIMD kernel operands.
+//!
+//! `Vec<T>` only guarantees `align_of::<T>()`, but the AVX2 ELL kernels
+//! ([`crate::simulator::simd`]) want every operand array to start on a
+//! 32-byte boundary so row strides that are a multiple of the lane width
+//! keep *every row* aligned. Over-aligning a `Vec<f32>` in place is not
+//! possible without unsafe allocator plumbing (rebuilding via
+//! `Vec::from_raw_parts` with a different layout is UB on dealloc), so
+//! [`AVec`] owns a `Vec` of 32-byte chunks and exposes the payload as a
+//! `[T]` slice via `Deref`/`DerefMut` — call sites index it exactly like
+//! the `Vec<T>` it replaces.
+
+use std::marker::PhantomData;
+use std::ops::{Deref, DerefMut};
+
+/// Alignment guarantee of [`AVec`]'s base pointer, in bytes (one AVX2
+/// register).
+pub const ALIGN: usize = 32;
+
+/// 4-byte plain-old-data scalars storable in an [`AVec`]: every bit
+/// pattern must be a valid value (so zero-initialized chunks are valid
+/// payloads) and the size must divide [`ALIGN`].
+pub trait Pod4: Copy + 'static {}
+impl Pod4 for f32 {}
+impl Pod4 for i32 {}
+impl Pod4 for u32 {}
+
+#[derive(Clone, Copy)]
+#[repr(C, align(32))]
+struct Chunk([u8; ALIGN]);
+
+/// Fixed-length zero-initialized array of `T` whose base address is
+/// 32-byte aligned. Grows only by reconstruction ([`AVec::zeroed`]) —
+/// the ELL builder sizes it once up front.
+#[derive(Clone)]
+pub struct AVec<T: Pod4> {
+    chunks: Vec<Chunk>,
+    len: usize,
+    _marker: PhantomData<T>,
+}
+
+impl<T: Pod4> AVec<T> {
+    /// Allocate `len` zeroed elements (all-zero bytes are a valid `T` by
+    /// the [`Pod4`] contract).
+    pub fn zeroed(len: usize) -> Self {
+        const {
+            assert!(std::mem::size_of::<T>() == 4);
+            assert!(std::mem::align_of::<T>() <= ALIGN);
+        }
+        let per_chunk = ALIGN / std::mem::size_of::<T>();
+        let chunks = vec![Chunk([0u8; ALIGN]); len.div_ceil(per_chunk)];
+        Self { chunks, len, _marker: PhantomData }
+    }
+}
+
+impl<T: Pod4> Deref for AVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        // Safety: the chunk buffer holds at least `len * 4` bytes, the
+        // base is 32-byte (>= 4) aligned, and any bit pattern is a valid
+        // `T` (Pod4). Lifetime is tied to `&self`.
+        unsafe { std::slice::from_raw_parts(self.chunks.as_ptr() as *const T, self.len) }
+    }
+}
+
+impl<T: Pod4> DerefMut for AVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        // Safety: as in `deref`, plus exclusive access via `&mut self`.
+        unsafe { std::slice::from_raw_parts_mut(self.chunks.as_mut_ptr() as *mut T, self.len) }
+    }
+}
+
+impl<T: Pod4 + std::fmt::Debug> std::fmt::Debug for AVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.iter()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_pointer_is_32_byte_aligned() {
+        for len in [0usize, 1, 7, 8, 9, 31, 64, 1000] {
+            let v: AVec<f32> = AVec::zeroed(len);
+            assert_eq!(v.len(), len);
+            assert_eq!(v.as_ptr() as usize % ALIGN, 0, "len {len}");
+            assert!(v.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn indexing_and_slicing_work_like_vec() {
+        let mut v: AVec<i32> = AVec::zeroed(10);
+        for i in 0..10 {
+            v[i] = i as i32 * 3;
+        }
+        assert_eq!(v[7], 21);
+        assert_eq!(&v[2..4], &[6, 9]);
+        let s: &[i32] = &v;
+        assert_eq!(s.iter().sum::<i32>(), 135);
+    }
+
+    #[test]
+    fn clone_copies_payload_and_stays_aligned() {
+        let mut v: AVec<u32> = AVec::zeroed(33);
+        v[32] = 0xDEAD;
+        let c = v.clone();
+        assert_eq!(c[32], 0xDEAD);
+        assert_eq!(c.as_ptr() as usize % ALIGN, 0);
+    }
+}

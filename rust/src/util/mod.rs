@@ -5,11 +5,13 @@
 //! tabular printers, property-test harnesses) are implemented here from
 //! scratch and unit-tested in place.
 
+pub mod aligned;
 pub mod bench;
 pub mod json;
 pub mod rng;
 pub mod table;
 
+pub use aligned::AVec;
 pub use rng::SplitMix64;
 
 /// Greatest common divisor (used by the §2.1 machine-resource

@@ -114,9 +114,135 @@ fn bench_emits_valid_json() {
         "sls/destroy-repair",
         "sls/full",
         "serve/query-batch",
+        "sim/spmv",
+        "sim/spmv-simd",
+        "sim/minplus",
+        "sim/minplus-simd",
+        "sim/pagerank-superstep",
+        "sim/pagerank-superstep-simd",
     ] {
         assert!(names.contains(&want), "missing bench entry {want} in {names:?}");
     }
+}
+
+#[test]
+fn simulate_accepts_storage_ram_and_rejects_mapped() {
+    let ok = bin()
+        .args([
+            "simulate", "--graph", "rn-s", "--algo", "ne", "--workload", "bfs", "--shrink", "4",
+            "--storage", "ram",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        ok.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&ok.stderr)
+    );
+    let bad = bin()
+        .args([
+            "simulate", "--graph", "rn-s", "--algo", "ne", "--workload", "bfs", "--shrink", "4",
+            "--storage", "mapped",
+        ])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    let err = String::from_utf8_lossy(&bad.stderr);
+    assert!(err.contains("materializes"), "unhelpful error: {err}");
+}
+
+#[test]
+fn simulate_rejects_explicit_auto_on_v3_cache() {
+    let dir = std::env::temp_dir().join("windgp_cli_sim_auto_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache = dir.join("rn.bin");
+    let gen = bin()
+        .args([
+            "gen", "--graph", "rn-s", "--shrink", "4", "--format", "bin", "--out",
+            cache.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(gen.status.success());
+    // explicit --storage auto on a mappable cache: refuse with an
+    // explanation rather than silently materializing
+    let bad = bin()
+        .args([
+            "simulate", "--graph", cache.to_str().unwrap(), "--algo", "ne", "--workload", "bfs",
+            "--shrink", "4", "--storage", "auto",
+        ])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("--storage ram"));
+    // but the same cache without the flag (or with ram) simulates fine
+    let ok = bin()
+        .args([
+            "simulate", "--graph", cache.to_str().unwrap(), "--algo", "ne", "--workload", "bfs",
+            "--shrink", "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        ok.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&ok.stderr)
+    );
+}
+
+/// The workload result lines (`<algo>: simulated time ... supersteps`)
+/// must be byte-identical across worker counts and kernel paths — the
+/// partition wall-clock line and the backend/workers banner differ, so
+/// only the workload lines are compared.
+#[test]
+fn simulate_output_invariant_across_simd_and_workers() {
+    fn workload_lines(env: &[(&str, &str)], workload: &str) -> String {
+        let mut c = bin();
+        c.args([
+            "simulate", "--graph", "rn-s", "--algo", "windgp", "--workload", workload,
+            "--shrink", "4", "--iters", "5",
+        ]);
+        for (k, v) in env {
+            c.env(k, v);
+        }
+        let out = c.output().unwrap();
+        assert!(
+            out.status.success(),
+            "{workload} {env:?} stderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout)
+            .lines()
+            .filter(|l| l.contains("simulated time"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+    for workload in ["pagerank", "sssp", "bfs", "triangle", "wcc"] {
+        let want = workload_lines(&[("WINDGP_SIMD", "scalar"), ("WINDGP_WORKERS", "1")], workload);
+        assert!(want.contains("simulated time"), "{workload}: no result line");
+        for env in [
+            [("WINDGP_SIMD", "scalar"), ("WINDGP_WORKERS", "2")],
+            [("WINDGP_SIMD", "scalar"), ("WINDGP_WORKERS", "8")],
+            [("WINDGP_SIMD", "auto"), ("WINDGP_WORKERS", "1")],
+            [("WINDGP_SIMD", "auto"), ("WINDGP_WORKERS", "8")],
+        ] {
+            let got = workload_lines(&env, workload);
+            assert_eq!(want, got, "{workload} drifted under {env:?}");
+        }
+    }
+}
+
+#[test]
+fn simulate_rejects_simd_typo() {
+    let out = bin()
+        .args([
+            "simulate", "--graph", "rn-s", "--algo", "ne", "--workload", "bfs", "--shrink", "4",
+        ])
+        .env("WINDGP_SIMD", "avx512")
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("WINDGP_SIMD"));
 }
 
 #[test]

@@ -55,6 +55,7 @@ fn full_pipeline_all_workloads_verify() {
             Workload::Triangle,
             Workload::Wcc,
         ],
+        workers: 0,
     };
     let rep = run_job(&job, None);
     assert!(rep.partition.is_complete());

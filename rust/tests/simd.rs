@@ -1,0 +1,162 @@
+//! End-to-end determinism matrix for the BSP simulator's perf knobs:
+//! every workload must produce **bitwise-identical** answers and cost
+//! reports across
+//!
+//!   - superstep worker counts (1 = the sequential reference, 2, 8), and
+//!   - compute backends (pure oracle, SimdBackend forced scalar,
+//!     SimdBackend auto — AVX2 where the host has it),
+//!
+//! because the parallel fan merges per-machine results in machine index
+//! order and the SIMD kernels keep the scalar float-operation order
+//! (vertical vectorization, no FMA). Any platform- or schedule-dependent
+//! drift is a bug, not tolerance noise.
+
+use windgp::graph::{gen, rmat};
+use windgp::machines::Cluster;
+use windgp::partition::Partitioner;
+use windgp::simulator::algorithms::{
+    bfs_workers, pagerank_workers, sssp_workers, triangles_workers, wcc_workers,
+};
+use windgp::simulator::ell::{EllBackend, PureBackend};
+use windgp::simulator::simd::{SimdBackend, SimdMode};
+use windgp::simulator::{SimGraph, SimReport};
+use windgp::windgp::WindGP;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn fixture() -> (windgp::Graph, Cluster) {
+    // rmat: hubs force ELL continuation rows; heterogeneous cluster keeps
+    // per-machine costs distinct so merge-order mistakes change sim_time
+    let g = rmat::generate(&rmat::RmatParams::graph500(9, 8), 5);
+    let cluster = Cluster::heterogeneous_small(2, 4, 0.01);
+    (g, cluster)
+}
+
+fn sim_graph<'a>(g: &'a windgp::Graph, cluster: &'a Cluster) -> SimGraph<'a> {
+    let ep = WindGP::default().partition(g, cluster, 1);
+    SimGraph::build(g, cluster, &ep)
+}
+
+/// Bitwise equality for f32 result vectors (NaN-free by construction; INF
+/// sentinels must also match exactly).
+fn assert_f32_bits(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: slot {i}: {x} vs {y}");
+    }
+}
+
+/// Bitwise equality of the full cost report — a wrong merge order shows
+/// up here even when the answer happens to agree.
+fn assert_report_bits(a: &SimReport, b: &SimReport, what: &str) {
+    assert_eq!(a.supersteps, b.supersteps, "{what}: supersteps");
+    assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{what}: sim_time");
+    for (i, (x, y)) in a.total_cal.iter().zip(&b.total_cal).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: cal[{i}]");
+    }
+    for (i, (x, y)) in a.total_com.iter().zip(&b.total_com).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: com[{i}]");
+    }
+}
+
+/// The kernel-backed workloads: full backend x workers matrix against the
+/// (pure, workers=1) reference.
+#[test]
+fn pagerank_bitwise_across_backends_and_workers() {
+    let (g, cluster) = fixture();
+    let sg = sim_graph(&g, &cluster);
+    let (want, want_rep) = pagerank_workers(&sg, 12, &mut PureBackend, 1);
+    let mut backends: Vec<(&str, Box<dyn EllBackend>)> = vec![
+        ("pure", Box::new(PureBackend)),
+        ("scalar", Box::new(SimdBackend::new(SimdMode::Scalar))),
+        ("auto", Box::new(SimdBackend::new(SimdMode::Auto))),
+    ];
+    for (name, be) in backends.iter_mut() {
+        for w in WORKER_COUNTS {
+            let (got, rep) = pagerank_workers(&sg, 12, be.as_mut(), w);
+            let what = format!("pagerank[{name}, w={w}]");
+            assert_f32_bits(&want, &got, &what);
+            assert_report_bits(&want_rep, &rep, &what);
+        }
+    }
+}
+
+#[test]
+fn sssp_bitwise_across_backends_and_workers() {
+    let (g, cluster) = fixture();
+    let sg = sim_graph(&g, &cluster);
+    let (want, want_rep) = sssp_workers(&sg, 0, &mut PureBackend, 1);
+    let mut backends: Vec<(&str, Box<dyn EllBackend>)> = vec![
+        ("pure", Box::new(PureBackend)),
+        ("scalar", Box::new(SimdBackend::new(SimdMode::Scalar))),
+        ("auto", Box::new(SimdBackend::new(SimdMode::Auto))),
+    ];
+    for (name, be) in backends.iter_mut() {
+        for w in WORKER_COUNTS {
+            let (got, rep) = sssp_workers(&sg, 0, be.as_mut(), w);
+            let what = format!("sssp[{name}, w={w}]");
+            assert_f32_bits(&want, &got, &what);
+            assert_report_bits(&want_rep, &rep, &what);
+        }
+    }
+}
+
+/// SSSP with unreachable vertices: the merge's INF handling must not
+/// differ between worker counts.
+#[test]
+fn sssp_disconnected_bitwise_across_workers() {
+    let mut b = windgp::graph::GraphBuilder::new();
+    b.add_edge(0, 1);
+    b.add_edge(1, 2);
+    b.add_edge(2, 3);
+    b.add_edge(10, 11); // island
+    let g = b.build(16);
+    let cluster = Cluster::homogeneous(3, 1_000);
+    let sg = sim_graph(&g, &cluster);
+    let (want, want_rep) = sssp_workers(&sg, 0, &mut PureBackend, 1);
+    for w in WORKER_COUNTS {
+        let (got, rep) = sssp_workers(&sg, 0, &mut SimdBackend::new(SimdMode::Auto), w);
+        let what = format!("sssp-disc[w={w}]");
+        assert_f32_bits(&want, &got, &what);
+        assert_report_bits(&want_rep, &rep, &what);
+    }
+}
+
+/// The integer workloads take no backend: only the workers axis applies.
+#[test]
+fn bfs_bitwise_across_workers() {
+    let (g, cluster) = fixture();
+    let sg = sim_graph(&g, &cluster);
+    let (want, want_rep) = bfs_workers(&sg, 0, 1);
+    for w in WORKER_COUNTS {
+        let (got, rep) = bfs_workers(&sg, 0, w);
+        assert_eq!(want, got, "bfs[w={w}]");
+        assert_report_bits(&want_rep, &rep, &format!("bfs[w={w}]"));
+    }
+}
+
+#[test]
+fn wcc_bitwise_across_workers() {
+    // sparse graph with many components exercises the frontier logic
+    let g = gen::erdos_renyi(300, 350, 4);
+    let cluster = Cluster::heterogeneous_small(1, 2, 0.01);
+    let sg = sim_graph(&g, &cluster);
+    let (want, want_rep) = wcc_workers(&sg, 1);
+    for w in WORKER_COUNTS {
+        let (got, rep) = wcc_workers(&sg, w);
+        assert_eq!(want, got, "wcc[w={w}]");
+        assert_report_bits(&want_rep, &rep, &format!("wcc[w={w}]"));
+    }
+}
+
+#[test]
+fn triangle_bitwise_across_workers() {
+    let (g, cluster) = fixture();
+    let sg = sim_graph(&g, &cluster);
+    let (want, want_rep) = triangles_workers(&sg, 1);
+    for w in WORKER_COUNTS {
+        let (got, rep) = triangles_workers(&sg, w);
+        assert_eq!(want, got, "triangle[w={w}]");
+        assert_report_bits(&want_rep, &rep, &format!("triangle[w={w}]"));
+    }
+}
