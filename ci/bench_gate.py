@@ -46,6 +46,8 @@ ASSERTED = [
     "sim/minplus-simd",
     "sim/pagerank-superstep",
     "sim/pagerank-superstep-simd",
+    "incremental/update-batch",
+    "incremental/update-vs-full",
 ]
 
 

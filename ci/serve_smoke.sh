@@ -48,12 +48,15 @@ assert sum(mm["edges"] for mm in m["machines"]) == m["graph"]["edges"]
 print(f"  manifest ok: {m['graph']['edges']} edges over {len(m['machines'])} shards")
 EOF
 
-echo "== serve (stdin session, WINDGP_WORKERS=1 vs 8) =="
+echo "== serve (stdin session incl. update verb, WINDGP_WORKERS=1 vs 8) =="
 cat > "$WORK/session.ndjson" <<'EOF'
 {"op":"assign","u":0,"v":1}
 {"op":"replicas","v":0}
 {"op":"metrics"}
 {"op":"batch","requests":[{"op":"metrics"},{"op":"replicas","v":1}]}
+{"op":"bogus"}
+{"op":"update","inserts":[[0,2],[1,3]],"deletes":[[0,1]]}
+{"op":"metrics"}
 {"op":"shutdown"}
 EOF
 WINDGP_WORKERS=1 "$BIN" serve --graph "$WORK/g.bin" --export "$WORK/export" \
@@ -65,16 +68,55 @@ cmp "$WORK/out.w1" "$WORK/out.w8" \
 python3 - "$WORK/out.w1" <<'EOF'
 import json, sys
 lines = [json.loads(l) for l in open(sys.argv[1]) if l.strip()]
-assert len(lines) == 5, f"expected 5 responses, got {len(lines)}"
+assert len(lines) == 8, f"expected 8 responses, got {len(lines)}"
+assert all(l["schema"] == "windgp-serve-v2" for l in lines), "schema stamp missing"
 ops = [l.get("op") for l in lines]
-assert ops == ["assign", "replicas", "metrics", "batch", "shutdown"], ops
+assert ops == ["assign", "replicas", "metrics", "batch", None, "update", "metrics", "shutdown"], ops
 # (0,1) may or may not be an edge of the generated graph; either answer is
 # a well-formed assign response and both must be deterministic
-assert all(l["ok"] for l in lines[1:]), lines
+assert all(l["ok"] for i, l in enumerate(lines[1:], 1) if i != 4), lines
 assert lines[1]["machines"], "vertex 0 must have at least one replica"
 assert lines[2]["tc"] > 0
 assert lines[3]["count"] == 2
+# unknown verbs return the v2 structured error object, not a teardown
+assert lines[4]["ok"] is False and lines[4]["error"]["code"] == "unknown_op", lines[4]
+assert lines[4]["error"]["op"] == "bogus", lines[4]
+# the update verb mutates the served state in place; metrics afterwards
+# reflect the post-batch partition
+assert lines[5]["edges"] > 0 and lines[5]["tc"] > 0, lines[5]
+assert lines[6]["tc"] > 0
 print(f"  serve ok: {len(lines)} responses, byte-identical at workers 1 and 8")
 EOF
+
+echo "== update (CLI round-trip: partition -> update -> export, WINDGP_WORKERS=1 vs 8) =="
+cat > "$WORK/edits.txt" <<'EOF'
+# smoke batch: add two edges, drop one
++ 0 2
++ 1 3
+- 0 1
+EOF
+for w in 1 8; do
+    WINDGP_WORKERS=$w "$BIN" update --graph "$WORK/g.bin" --cluster "$WORK/cluster.json" \
+        --state "$WORK/part.bin" --batch "$WORK/edits.txt" \
+        --out "$WORK/part.w$w.bin" --out-graph "$WORK/g2.w$w.bin" \
+        --json > "$WORK/update.w$w.json"
+done
+cmp "$WORK/part.w1.bin" "$WORK/part.w8.bin" \
+    || { echo "FAIL: updated assignments differ across WINDGP_WORKERS"; exit 1; }
+cmp "$WORK/g2.w1.bin" "$WORK/g2.w8.bin" \
+    || { echo "FAIL: updated graph caches differ across WINDGP_WORKERS"; exit 1; }
+python3 - "$WORK/update.w1.json" <<'EOF'
+import json, sys
+r = json.load(open(sys.argv[1]))
+assert r["op"] == "update", r
+assert r["tc_after"] > 0, r
+assert r["edges"] > 0, r
+print(f"  update ok: +{r['inserted']} -{r['deleted']} edges, tc {r['tc_before']:.2f} -> {r['tc_after']:.2f}")
+EOF
+# the saved state binds to the updated graph: export re-validates the pair
+"$BIN" export --graph "$WORK/g2.w1.bin" --cluster "$WORK/cluster.json" \
+    --partition "$WORK/part.w1.bin" --out "$WORK/export2"
+test -f "$WORK/export2/manifest.json" \
+    || { echo "FAIL: updated state did not export"; exit 1; }
 
 echo "serve smoke OK"

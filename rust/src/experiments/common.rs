@@ -4,15 +4,12 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use crate::baselines::{
-    Cpp49, Dbh, Ebv, GrapHLike, HaSGP, Haep, Hdrf, MetisLike, NeighborExpansion, PowerGraphGreedy,
-    RandomHash,
-};
+use crate::baselines::{Cpp49, Ebv, GrapHLike, HaSGP, Haep, Hdrf, MetisLike, NeighborExpansion};
 use crate::coordinator::parallel_map;
 use crate::graph::{gen, Graph};
 use crate::machines::Cluster;
 use crate::partition::Partitioner;
-use crate::windgp::{Variant, WindGP};
+use crate::windgp::WindGP;
 
 /// Paper edge counts (Table 3 / §5.4) used to scale stand-in cluster
 /// memory so memory *pressure* matches the original experiments.
@@ -156,27 +153,10 @@ pub fn hetero_partitioners() -> Vec<Box<dyn Partitioner + Sync + Send>> {
     ]
 }
 
-/// Everything (used by CLI `partition --algo`).
+/// Everything (used by CLI `partition --method` and tests); thin shim over
+/// the authoritative [`crate::partition::registry`].
 pub fn partitioner_by_name(name: &str) -> Option<Box<dyn Partitioner + Sync + Send>> {
-    let b: Box<dyn Partitioner + Sync + Send> = match name.to_lowercase().as_str() {
-        "hash" => Box::new(RandomHash),
-        "dbh" => Box::new(Dbh),
-        "greedy" => Box::new(PowerGraphGreedy),
-        "hdrf" => Box::new(Hdrf::default()),
-        "ne" => Box::new(NeighborExpansion::default()),
-        "ebv" => Box::new(Ebv::default()),
-        "metis" => Box::new(MetisLike::default()),
-        "cpp49" | "cpp" => Box::new(Cpp49),
-        "graph" | "graph-h" => Box::new(GrapHLike),
-        "hasgp" => Box::new(HaSGP),
-        "haep" => Box::new(Haep),
-        "windgp" => Box::new(WindGP::default()),
-        "windgp-" => Box::new(WindGP::variant(Variant::Naive)),
-        "windgp*" => Box::new(WindGP::variant(Variant::Capacity)),
-        "windgp+" => Box::new(WindGP::variant(Variant::BestFirst)),
-        _ => return None,
-    };
-    Some(b)
+    crate::partition::registry::make(name)
 }
 
 /// The six §5.2 graphs in presentation order (paper: TW CO LJ PO CP RN).

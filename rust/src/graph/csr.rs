@@ -97,6 +97,7 @@ impl Graph {
     }
 
     /// Neighbor slice of `u`. **Owned storage only** — panics on mapped.
+    #[deprecated(note = "owned-storage only; use adj_range + neighbor_at, which work on any storage")]
     #[inline]
     pub fn neighbors(&self, u: VId) -> &[VId] {
         match &self.storage {
@@ -108,8 +109,9 @@ impl Graph {
         }
     }
 
-    /// Canonical-edge ids incident to `u`, parallel to [`Self::neighbors`].
+    /// Canonical-edge ids incident to `u`, parallel to the neighbor slots.
     /// **Owned storage only** — panics on mapped.
+    #[deprecated(note = "owned-storage only; use adj_range + incident_at, which work on any storage")]
     #[inline]
     pub fn incident_edges(&self, u: VId) -> &[EId] {
         match &self.storage {
@@ -123,6 +125,7 @@ impl Graph {
 
     /// The canonical edge array. **Owned storage only** — panics on mapped
     /// (use [`Self::edges_iter`] / [`Self::edges_vec`]).
+    #[deprecated(note = "owned-storage only; use edge/edges_iter/edges_vec, which work on any storage")]
     #[inline]
     pub fn edges(&self) -> &[(VId, VId)] {
         match &self.storage {
@@ -297,7 +300,9 @@ impl Graph {
             return Err("edge array not strictly sorted".into());
         }
         for u in 0..n {
-            for (&nb, &e) in self.neighbors(u).iter().zip(self.incident_edges(u)) {
+            let (a0, b0) =
+                (owned.offsets[u as usize] as usize, owned.offsets[u as usize + 1] as usize);
+            for (&nb, &e) in owned.neighbors[a0..b0].iter().zip(&owned.incident[a0..b0]) {
                 let (a, b) = self.edge(e);
                 let ok = (a == u && b == nb) || (a == nb && b == u);
                 if !ok {
@@ -419,6 +424,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn builds_triangle() {
         let g = triangle();
         assert_eq!(g.num_vertices(), 3);
@@ -442,6 +448,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn incident_ids_roundtrip() {
         let g = triangle();
         for u in 0..3u32 {
@@ -453,6 +460,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn indexed_accessors_match_slices() {
         let g = triangle();
         for u in 0..3u32 {
@@ -471,6 +479,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn find_edge_both_orders() {
         let g = triangle();
         for (e, &(u, v)) in g.edges().iter().enumerate() {

@@ -813,7 +813,7 @@ mod tests {
         let seq = b.build(12);
         for workers in [1usize, 2, 4, 8] {
             let par = build_parallel(raw.clone(), 12, workers);
-            assert_eq!(par.edges(), seq.edges(), "workers={workers}");
+            assert_eq!(par.edges_vec(), seq.edges_vec(), "workers={workers}");
             assert_eq!(par.offsets(), seq.offsets(), "workers={workers}");
             assert_eq!(par.copy_adjacency(), seq.copy_adjacency(), "workers={workers}");
         }
@@ -848,7 +848,7 @@ mod tests {
         .unwrap();
         assert_eq!(ing.vertex_ids, Some(vec![5, 7, 4_000_000]));
         assert_eq!(ing.graph.num_vertices(), 3);
-        assert_eq!(ing.graph.edges(), vec![(0, 1), (0, 2), (1, 2)]);
+        assert_eq!(ing.graph.edges_vec(), vec![(0, 1), (0, 2), (1, 2)]);
         ing.graph.validate().unwrap();
         // Auto fires for this id space too (max_id >> 8m)
         let auto = ingest_text(text, IngestOptions { workers: 2, remap: Remap::Auto }).unwrap();

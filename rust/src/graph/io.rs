@@ -732,7 +732,7 @@ mod tests {
         let p = tdir("windgp_io_test").join("g.txt");
         write_edge_list(&g, &p).unwrap();
         let g2 = read_edge_list(&p).unwrap();
-        assert_eq!(g.edges(), g2.edges());
+        assert_eq!(g.edges_vec(), g2.edges_vec());
         assert_eq!(g.num_vertices(), g2.num_vertices());
     }
 
@@ -743,7 +743,7 @@ mod tests {
         write_binary(&g, &p).unwrap();
         let g2 = read_binary(&p).unwrap();
         assert_graphs_equal(&g, &g2);
-        assert_eq!(g.edges(), g2.edges());
+        assert_eq!(g.edges_vec(), g2.edges_vec());
         g2.validate().unwrap();
     }
 
@@ -753,7 +753,7 @@ mod tests {
         let p = tdir("windgp_io_test").join("g_v1.bin");
         write_binary_v1(&g, &p).unwrap();
         let g2 = read_binary(&p).unwrap();
-        assert_eq!(g.edges(), g2.edges());
+        assert_eq!(g.edges_vec(), g2.edges_vec());
         assert_eq!(g.num_vertices(), g2.num_vertices());
     }
 
@@ -919,7 +919,7 @@ mod tests {
             load_or_generate(&p, || rmat::generate(&rmat::RmatParams::graph500(7, 4), 3)).unwrap();
         assert!(p.exists());
         let g2 = load_or_generate(&p, || panic!("should hit cache")).unwrap();
-        assert_eq!(g1.edges(), g2.edges());
+        assert_eq!(g1.edges_vec(), g2.edges_vec());
     }
 
     #[test]
@@ -927,11 +927,10 @@ mod tests {
         let g = rmat::generate(&rmat::RmatParams::graph500(7, 4), 9);
         let p = tdir("windgp_io_test_shard").join("shard_0000.bin");
         let edges: Vec<(EId, VId, VId)> = g
-            .edges()
-            .iter()
+            .edges_iter()
             .enumerate()
             .filter(|(e, _)| e % 3 == 0)
-            .map(|(e, &(u, v))| (e as EId, u, v))
+            .map(|(e, (u, v))| (e as EId, u, v))
             .collect();
         let shard = Shard {
             machine: 0,
@@ -976,11 +975,11 @@ mod tests {
         let bp = dir.join("g.bin");
         write_binary(&g, &bp).unwrap();
         let from_bin = load_path(&bp).unwrap();
-        assert_eq!(from_bin.graph.edges_vec(), g.edges());
+        assert_eq!(from_bin.graph.edges_vec(), g.edges_vec());
         let tp = dir.join("g.txt");
         write_edge_list(&g, &tp).unwrap();
         let from_txt = load_path(&tp).unwrap();
-        assert_eq!(from_txt.graph.edges(), g.edges());
+        assert_eq!(from_txt.graph.edges_vec(), g.edges_vec());
         assert_eq!(from_txt.graph.num_vertices(), g.num_vertices());
     }
 }

@@ -52,7 +52,7 @@ mod tests {
     #[test]
     fn deterministic() {
         let p = MeshParams::road_like(32, 32);
-        assert_eq!(generate(&p, 1).edges(), generate(&p, 1).edges());
+        assert_eq!(generate(&p, 1).edges_vec(), generate(&p, 1).edges_vec());
     }
 
     #[test]

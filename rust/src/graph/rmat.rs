@@ -88,9 +88,9 @@ mod tests {
         let p = RmatParams::graph500(10, 8);
         let g1 = generate(&p, 5);
         let g2 = generate(&p, 5);
-        assert_eq!(g1.edges(), g2.edges());
+        assert_eq!(g1.edges_vec(), g2.edges_vec());
         let g3 = generate(&p, 6);
-        assert_ne!(g1.edges(), g3.edges());
+        assert_ne!(g1.edges_vec(), g3.edges_vec());
     }
 
     #[test]

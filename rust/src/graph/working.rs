@@ -149,6 +149,68 @@ impl WorkingGraph {
         }
     }
 
+    /// An empty working graph over `num_vertices` isolated vertices — the
+    /// incremental-update path's *unplaced-edge frontier*: inserted (and
+    /// destroyed) edges enter via [`Self::insert_slot`] and leave via
+    /// [`Self::remove_slot`] as the bounded repair pass places them.
+    pub fn empty(num_vertices: usize, policy: CompactPolicy) -> Self {
+        Self {
+            starts: vec![0; num_vertices],
+            neighbors: Vec::new(),
+            incident: Vec::new(),
+            live_len: vec![0; num_vertices],
+            dead: vec![0; num_vertices],
+            policy,
+            compactions: 0,
+            compacted_slots: 0,
+        }
+    }
+
+    /// Append one live slot `(nb, e)` to `v`'s window (dynamic-graph edge
+    /// insert; callers add both directions). If `v`'s window is not already
+    /// at the array tail it is relocated there first — O(live_len) once,
+    /// then O(1) amortized for repeated inserts on the same vertex. Old
+    /// slots keep their relative order, so scans stay deterministic.
+    pub fn insert_slot(&mut self, v: VId, nb: VId, e: EId) {
+        let vi = v as usize;
+        let start = self.starts[vi];
+        let len = self.live_len[vi] as usize;
+        if start + len != self.neighbors.len() {
+            let new_start = self.neighbors.len();
+            for i in start..start + len {
+                let n2 = self.neighbors[i];
+                let e2 = self.incident[i];
+                self.neighbors.push(n2);
+                self.incident.push(e2);
+            }
+            self.starts[vi] = new_start;
+        }
+        self.neighbors.push(nb);
+        self.incident.push(e);
+        self.live_len[vi] += 1;
+    }
+
+    /// Drop the live slot of `v` carrying edge `e` (the repair pass placed
+    /// it, or a dynamic delete retired it). Later slots shift left — the
+    /// stable-order counterpart of [`Self::insert_slot`]. Returns whether
+    /// the slot existed.
+    pub fn remove_slot(&mut self, v: VId, e: EId) -> bool {
+        let vi = v as usize;
+        let start = self.starts[vi];
+        let end = start + self.live_len[vi] as usize;
+        for i in start..end {
+            if self.incident[i] == e {
+                for j in i..end - 1 {
+                    self.neighbors[j] = self.neighbors[j + 1];
+                    self.incident[j] = self.incident[j + 1];
+                }
+                self.live_len[vi] -= 1;
+                return true;
+            }
+        }
+        false
+    }
+
     /// Bounds of `v`'s live window, for indexed scans via
     /// [`Self::neighbor_at`] / [`Self::incident_at`].
     #[inline]
@@ -287,11 +349,9 @@ mod tests {
 
     /// Reference: full static-CSR scan skipping assigned slots.
     fn scan_static(g: &Graph, v: VId, assigned: &[bool]) -> Vec<(VId, EId)> {
-        g.neighbors(v)
-            .iter()
-            .zip(g.incident_edges(v))
-            .filter(|&(_, &e)| !assigned[e as usize])
-            .map(|(&nb, &e)| (nb, e))
+        g.adj_range(v)
+            .map(|i| (g.neighbor_at(i), g.incident_at(i)))
+            .filter(|&(_, e)| !assigned[e as usize])
             .collect()
     }
 
@@ -419,6 +479,61 @@ mod tests {
             assert_eq!(scan(&wg, v, &assigned), scan_static(&g, v, &assigned));
             assert_eq!(wg.remaining_degree(v) as usize, scan_static(&g, v, &assigned).len());
         }
+    }
+
+    #[test]
+    fn insert_and_remove_slots_track_a_dynamic_frontier() {
+        // the incremental-update frontier: start empty, insert both
+        // directions of a few edges, remove them as "placed"
+        let mut wg = WorkingGraph::empty(5, CompactPolicy::Never);
+        for v in 0..5 {
+            assert_eq!(wg.live_len(v), 0);
+        }
+        // edges: 0:(1,2)  1:(2,3)  2:(1,4)
+        let edges: [(VId, VId); 3] = [(1, 2), (2, 3), (1, 4)];
+        for (e, &(u, v)) in edges.iter().enumerate() {
+            wg.insert_slot(u, v, e as EId);
+            wg.insert_slot(v, u, e as EId);
+        }
+        assert_eq!(wg.remaining_degree(1), 2);
+        assert_eq!(wg.remaining_degree(2), 2);
+        let (s, t) = wg.live_range(1);
+        let got: Vec<(VId, EId)> =
+            (s..t).map(|i| (wg.neighbor_at(i), wg.incident_at(i))).collect();
+        assert_eq!(got, vec![(2, 0), (4, 2)], "insert order preserved");
+        // remove edge 0 from both endpoints
+        assert!(wg.remove_slot(1, 0));
+        assert!(wg.remove_slot(2, 0));
+        assert!(!wg.remove_slot(1, 0), "second removal finds nothing");
+        assert_eq!(wg.remaining_degree(1), 1);
+        let (s, t) = wg.live_range(1);
+        let got: Vec<(VId, EId)> =
+            (s..t).map(|i| (wg.neighbor_at(i), wg.incident_at(i))).collect();
+        assert_eq!(got, vec![(4, 2)], "later slots shift left stably");
+        // interleaved reinsert after removal still lands at the tail
+        wg.insert_slot(1, 2, 7);
+        let (s, t) = wg.live_range(1);
+        let got: Vec<(VId, EId)> =
+            (s..t).map(|i| (wg.neighbor_at(i), wg.incident_at(i))).collect();
+        assert_eq!(got, vec![(4, 2), (2, 7)]);
+    }
+
+    #[test]
+    fn insert_slot_relocates_mid_array_windows() {
+        // interleave inserts across vertices so windows are forced to
+        // relocate to the tail; scans must stay in insertion order
+        let mut wg = WorkingGraph::empty(3, CompactPolicy::Never);
+        wg.insert_slot(0, 1, 0);
+        wg.insert_slot(1, 0, 0); // vertex 0's window is no longer at the tail
+        wg.insert_slot(0, 2, 1); // forces relocation of vertex 0
+        wg.insert_slot(2, 0, 1);
+        assert_eq!(wg.remaining_degree(0), 2);
+        let (s, t) = wg.live_range(0);
+        let got: Vec<(VId, EId)> =
+            (s..t).map(|i| (wg.neighbor_at(i), wg.incident_at(i))).collect();
+        assert_eq!(got, vec![(1, 0), (2, 1)]);
+        assert_eq!(wg.remaining_degree(1), 1);
+        assert_eq!(wg.remaining_degree(2), 1);
     }
 
     #[test]

@@ -2,11 +2,16 @@
 //!
 //! Subcommands (hand-rolled arg parsing; the offline crate set has no clap):
 //!   experiment --id <id|all> [--seeds N] [--shrink K] [--out DIR]
-//!   partition  --graph NAME --algo NAME [--seed N] [--cluster FILE]
-//!   simulate   --graph NAME --algo NAME --workload W [--pjrt] [--iters N]
+//!   partition  --graph NAME --method NAME [--seed N] [--cluster FILE]
+//!   update     --graph NAME --state FILE --batch FILE [--out FILE]
+//!   simulate   --graph NAME --method NAME --workload W [--pjrt] [--iters N]
 //!   gen        --graph NAME --out FILE
 //!   smoke      (PJRT artifact round-trip check)
-//!   list       (datasets, algorithms, experiments)
+//!   list       (datasets, methods, experiments)
+//!
+//! Every partitioning method resolves through the one
+//! [`windgp::partition::registry`]; `--algo` stays as an alias of
+//! `--method` for old scripts.
 
 use std::collections::HashMap;
 
@@ -65,6 +70,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "experiment" => cmd_experiment(&flags),
         "partition" => cmd_partition(&flags),
+        "update" => cmd_update(&flags),
         "export" => cmd_export(&flags),
         "serve" => cmd_serve(&flags),
         "simulate" => cmd_simulate(&flags),
@@ -90,31 +96,44 @@ fn print_help() {
          COMMANDS:\n\
            experiment --id <id|all> [--seeds N] [--shrink K] [--out DIR]\n\
                       regenerate a paper table/figure (see DESIGN.md §5)\n\
-           partition  --graph NAME --algo NAME [--seed N] [--cluster FILE] [--workers N]\n\
+           partition  --graph NAME --method NAME [--seed N] [--cluster FILE] [--workers N]\n\
                       [--out FILE] [--json] [--storage auto|ram|mapped]\n\
                       partition a dataset and print the quality report\n\
-                      (--workers: round-based parallel expansion, 0 = auto;\n\
+                      (--method: any registry name, see 'list'; --algo is\n\
+                       an accepted alias of --method;\n\
+                       --workers: round-based parallel expansion, 0 = auto;\n\
                        byte-identical output at any worker count;\n\
-                       --out: save the assignment for export/serve;\n\
+                       --out: save the assignment for export/serve/update;\n\
                        --json: machine-readable report on stdout;\n\
                        --storage: v3 cache files can be served from disk\n\
                        through a bounded page cache instead of RAM)\n\
+           update     --graph NAME --state FILE --batch FILE [--cluster FILE]\n\
+                      [--out FILE] [--out-graph FILE] [--rounds N] [--workers N] [--json]\n\
+                      apply an edge insert/delete batch ('+ u v' / '- u v'\n\
+                      lines) to a saved assignment incrementally: warm-start\n\
+                      the cost tracker, place inserts, retire deletes, and\n\
+                      re-stabilize only the touched region (--rounds trades\n\
+                      quality vs latency; 0 skips re-stabilization).\n\
+                      --out defaults to --state (updated in place);\n\
+                      --out-graph writes the post-batch graph as a v3 cache\n\
            export     --graph NAME --partition FILE --out DIR [--cluster FILE]\n\
                       write engine-consumable artifacts: per-machine edge\n\
                       shards, replica table, manifest.json\n\
            serve      --graph NAME (--export DIR | --partition FILE)\n\
                       [--cluster FILE] [--listen ADDR] [--storage auto|ram|mapped]\n\
-                      answer assign/replicas/metrics/batch queries as\n\
+                      answer assign/replicas/metrics/batch/update queries as\n\
                       newline-delimited JSON over stdin/stdout or TCP\n\
-           simulate   --graph NAME --algo NAME --workload pagerank|sssp|bfs|triangle|wcc\n\
-                      [--pjrt] [--iters N] [--workers N] [--storage ram]\n\
+                      (protocol windgp-serve-v2; 'update' applies an edit\n\
+                      batch to the served partition in place)\n\
+           simulate   --graph NAME --method NAME --workload pagerank|sssp|bfs|triangle|wcc\n\
+                      [--pjrt] [--iters N] [--workers N] [--storage auto|ram|mapped]\n\
                       run a distributed workload through the BSP engine\n\
                       (--workers: per-superstep compute fan, 0 = auto;\n\
                        byte-identical output at any worker count;\n\
                        WINDGP_SIMD=auto|avx2|scalar picks the CPU kernel,\n\
                        also bitwise-identical across paths;\n\
-                       --storage ram is the only mode: the workloads\n\
-                       walk raw adjacency, so the graph is materialized)\n\
+                       --storage mapped runs the reference workloads\n\
+                       against a file-backed v3 cache)\n\
            bench      [--shrink N] [--samples N] [--out FILE] [--storage auto|ram|mapped]\n\
                       run the hot-path suite, write BENCH_hotpath.json\n\
            gen        --graph NAME --out FILE [--format txt|bin]\n\
@@ -124,7 +143,7 @@ fn print_help() {
                       spilled as sorted runs and merged under the memory\n\
                       budget; legacy v1/v2 caches are rewritten as v3\n\
            smoke      verify the PJRT artifact round trip\n\
-           list       datasets / algorithms / experiment ids"
+           list       datasets / partitioning methods / experiment ids"
     );
 }
 
@@ -220,24 +239,30 @@ fn graph_and_cluster_mode(
     Ok((g, cluster))
 }
 
-fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
-    let ctx = ctx_from(flags)?;
-    let (g, cluster) = graph_and_cluster(flags, &ctx)?;
-    let algo_name = flags.get("algo").ok_or_else(|| anyhow!("--algo required"))?;
-    // --workers N switches the WindGP family onto the round-based parallel
-    // expansion engine with N speculation slots (0 = auto). Output is
-    // byte-identical to the sequential engine — only wall-clock changes.
-    let algo = match flags.get("workers") {
+/// `--method NAME` selects a registry entry; `--algo` is its accepted
+/// alias (older scripts). Passing both is an error, not a precedence rule.
+fn method_flag(flags: &HashMap<String, String>) -> Result<Option<&String>> {
+    match (flags.get("method"), flags.get("algo")) {
+        (Some(_), Some(_)) => bail!("pass --method or --algo (its alias), not both"),
+        (m, a) => Ok(m.or(a)),
+    }
+}
+
+/// Resolve a method through the registry, honoring the WindGP-only
+/// `--workers` knob (round-based parallel engine with N speculation
+/// slots, 0 = auto; output is byte-identical to sequential).
+fn method_from_flags(
+    flags: &HashMap<String, String>,
+    name: &str,
+) -> Result<windgp::partition::BoxedPartitioner> {
+    let entry = windgp::partition::registry::find(name)
+        .ok_or_else(|| anyhow!("unknown method '{name}' (see 'list')"))?;
+    match flags.get("workers") {
         Some(w) => {
-            use windgp::windgp::{ParallelMode, Variant, WindGP, WindGPConfig};
+            use windgp::windgp::{ParallelMode, WindGP, WindGPConfig};
             let workers: usize = w.parse().map_err(|_| anyhow!("--workers expects a number"))?;
-            // same case-insensitive name handling as partitioner_by_name
-            let variant = match algo_name.to_lowercase().as_str() {
-                "windgp" => Variant::Full,
-                "windgp-" => Variant::Naive,
-                "windgp*" => Variant::Capacity,
-                "windgp+" => Variant::BestFirst,
-                other => bail!("--workers applies to the windgp family, not '{other}'"),
+            let Some(variant) = entry.windgp_variant else {
+                bail!("--workers applies to the windgp family, not '{}'", entry.name);
             };
             let cfg = WindGPConfig {
                 variant,
@@ -245,11 +270,17 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
                 workers,
                 ..Default::default()
             };
-            Box::new(WindGP::new(cfg)) as Box<dyn windgp::partition::Partitioner + Sync + Send>
+            Ok(Box::new(WindGP::new(cfg)))
         }
-        None => common::partitioner_by_name(algo_name)
-            .ok_or_else(|| anyhow!("unknown algorithm '{algo_name}' (see 'list')"))?,
-    };
+        None => Ok(entry.make()),
+    }
+}
+
+fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
+    let ctx = ctx_from(flags)?;
+    let (g, cluster) = graph_and_cluster(flags, &ctx)?;
+    let algo_name = method_flag(flags)?.ok_or_else(|| anyhow!("--method required"))?;
+    let algo = method_from_flags(flags, algo_name)?;
     let seed: u64 = flags.get("seed").map_or(Ok(1), |s| s.parse())?;
     let t0 = std::time::Instant::now();
     let ep = algo.partition(&g, &cluster, seed);
@@ -317,6 +348,99 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `windgp update` — apply an edge insert/delete batch to a saved
+/// assignment incrementally: warm-start the tracker from the saved state,
+/// place inserts through the repair ladder, retire deletes with exact
+/// rollbacks, re-stabilize the touched region, and save the result.
+fn cmd_update(flags: &HashMap<String, String>) -> Result<()> {
+    use windgp::windgp::incremental::{apply_batch, EditBatch, UpdateParams};
+    let ctx = ctx_from(flags)?;
+    let (g, cluster) = graph_and_cluster(flags, &ctx)?;
+    let state_path = flags
+        .get("state")
+        .ok_or_else(|| anyhow!("--state required (a file from 'partition --out')"))?;
+    let batch_path = flags
+        .get("batch")
+        .ok_or_else(|| anyhow!("--batch required (edit file: '+ u v' / '- u v' lines)"))?;
+    let ep = windgp::serve::read_assignment(state_path)?.into_partition(&g)?;
+    let text = std::fs::read_to_string(batch_path)
+        .map_err(|e| anyhow!("read batch file {batch_path}: {e}"))?;
+    let batch = EditBatch::parse(&text)?;
+    let mut params = UpdateParams::default();
+    if let Some(r) = flags.get("rounds") {
+        params.repair_rounds = r.parse().map_err(|_| anyhow!("--rounds expects a number"))?;
+    }
+    if let Some(w) = flags.get("workers") {
+        params.workers = w.parse().map_err(|_| anyhow!("--workers expects a number"))?;
+    }
+    let tracker = windgp::partition::CostTracker::new(&g, &cluster, &ep);
+    let t0 = std::time::Instant::now();
+    let out = apply_batch(&tracker, &batch, &params)?;
+    let secs = t0.elapsed().as_secs_f64();
+    drop(tracker);
+    let out_path = flags.get("out").unwrap_or(state_path);
+    windgp::serve::write_assignment(out_path, &out.graph, &out.partition)?;
+    if let Some(gpath) = flags.get("out-graph") {
+        windgp::graph::io::write_binary(&out.graph, gpath)?;
+        eprintln!("wrote updated graph cache to {gpath}");
+    }
+    let s = &out.stats;
+    if s.inserted + s.deleted > 0 && !flags.contains_key("out-graph") {
+        eprintln!(
+            "note: the batch changed the edge set; the saved assignment binds to the \
+             *updated* graph (write it with --out-graph to reload this state later)"
+        );
+    }
+    if flags.contains_key("json") {
+        use windgp::util::json::{obj, Json};
+        let report = obj(vec![
+            ("op", Json::Str("update".into())),
+            ("inserted", Json::Num(s.inserted as f64)),
+            ("deleted", Json::Num(s.deleted as f64)),
+            ("insert_noops", Json::Num(s.insert_noops as f64)),
+            ("delete_noops", Json::Num(s.delete_noops as f64)),
+            ("moves", Json::Num(s.moves as f64)),
+            ("rounds", Json::Num(s.rounds as f64)),
+            ("touched_vertices", Json::Num(s.touched_vertices as f64)),
+            ("vertices", Json::Num(out.graph.num_vertices() as f64)),
+            ("edges", Json::Num(out.graph.num_edges() as f64)),
+            ("seconds", Json::Num(secs)),
+            ("tc_before", Json::Num(s.tc_before)),
+            ("tc_after", Json::Num(s.tc_after)),
+            ("rf_before", Json::Num(s.rf_before)),
+            ("rf_after", Json::Num(s.rf_after)),
+        ]);
+        println!("{}", report.dump());
+        return Ok(());
+    }
+    println!(
+        "update: +{} -{} edges ({} insert noops, {} delete noops) in {secs:.3}s",
+        s.inserted, s.deleted, s.insert_noops, s.delete_noops
+    );
+    println!(
+        "{}",
+        table::render(
+            &["metric", "before", "after"],
+            &[
+                vec!["TC".into(), table::human(s.tc_before), table::human(s.tc_after)],
+                vec!["RF".into(), format!("{:.3}", s.rf_before), format!("{:.3}", s.rf_after)],
+                vec![
+                    "edges".into(),
+                    format!("{}", g.num_edges()),
+                    format!("{}", out.graph.num_edges()),
+                ],
+                vec![
+                    "repair".into(),
+                    "-".into(),
+                    format!("{} moves / {} rounds", s.moves, s.rounds),
+                ],
+            ]
+        )
+    );
+    eprintln!("saved updated assignment to {out_path}");
+    Ok(())
+}
+
 /// `windgp export` — turn a saved assignment into the engine-consumable
 /// artifact set (per-machine edge shards, replica table, manifest).
 fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
@@ -374,54 +498,34 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
              (from 'partition --out')"
         ),
     };
-    let state = windgp::serve::ServeState::new(&g, &cluster, &ep)?;
     eprintln!(
-        "windgp serve: ready (|V|={} |E|={} p={})",
+        "windgp serve: ready (|V|={} |E|={} p={}, protocol {})",
         g.num_vertices(),
         g.num_edges(),
-        cluster.len()
+        cluster.len(),
+        windgp::serve::SERVE_SCHEMA
     );
+    // the session owns its graph so `update` can swap generations; the
+    // stand-in cache may hold another Arc, so fall back to a clone
+    let g = std::sync::Arc::try_unwrap(g).unwrap_or_else(|arc| (*arc).clone());
+    let mut sess = windgp::serve::ServeSession::new(g, cluster, ep)?;
     match flags.get("listen") {
-        Some(addr) => windgp::serve::serve_tcp(&state, addr),
-        None => windgp::serve::serve_stdio(&state),
+        Some(addr) => windgp::serve::serve_session_tcp(&mut sess, addr),
+        None => windgp::serve::serve_session_stdio(&mut sess),
     }
 }
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let ctx = ctx_from(flags)?;
-    // the BSP workloads walk raw adjacency slices, so even a v3 cache path
-    // must be fully materialized: ram (the default) is the only storage
-    // mode that makes sense here. Accept an explicit --storage ram, and
-    // explain rather than silently ignore the modes that would map.
-    match storage_mode(flags)? {
-        windgp::graph::StorageMode::Ram => {}
-        windgp::graph::StorageMode::Mapped => {
-            bail!(
-                "simulate materializes the graph in RAM (the workloads walk raw \
-                 adjacency slices); --storage mapped is not supported here — \
-                 drop the flag or pass --storage ram"
-            );
-        }
-        windgp::graph::StorageMode::Auto => {
-            // only reject auto when it was explicit *and* would have mapped
-            if flags.contains_key("storage") {
-                let name = flags.get("graph").map(String::as_str).unwrap_or("");
-                if std::path::Path::new(name).exists()
-                    && windgp::graph::io::is_mappable_cache(name)?
-                {
-                    bail!(
-                        "simulate materializes the graph in RAM, but --storage auto \
-                         on the v3 cache '{name}' would open it mapped — pass \
-                         --storage ram (or drop the flag) to load it into memory"
-                    );
-                }
-            }
-        }
-    }
-    let (g, cluster) = graph_and_cluster_mode(flags, &ctx, windgp::graph::StorageMode::Ram)?;
-    let algo_name = flags.get("algo").map(String::as_str).unwrap_or("windgp");
+    // Every workload path is storage-agnostic now (the reference oracles
+    // and the triangle counter walk adjacency through the indexed
+    // accessors), so a v3 cache can stay mapped end to end: partitioning,
+    // SimGraph construction, and verification all touch it through the
+    // bounded page cache.
+    let (g, cluster) = graph_and_cluster(flags, &ctx)?;
+    let algo_name = method_flag(flags)?.map(String::as_str).unwrap_or("windgp");
     let algo = common::partitioner_by_name(algo_name)
-        .ok_or_else(|| anyhow!("unknown algorithm '{algo_name}'"))?;
+        .ok_or_else(|| anyhow!("unknown method '{algo_name}'"))?;
     let iters: usize = flags.get("iters").map_or(Ok(10), |s| s.parse())?;
     let w = match flags.get("workload").map(String::as_str).unwrap_or("pagerank") {
         "pagerank" => Workload::PageRank { iters },
@@ -699,6 +803,42 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
         assert!(r.tc > 0.0);
     }));
 
+    // --- incremental updates (windgp update / serve 'update'): one mixed
+    //     batch applied against the warm WindGP state, vs. the cost an
+    //     engine pays without the incremental path — a full re-partition
+    //     of the updated graph. The pair is what makes the "scales with
+    //     batch size, not |E|" claim checkable across PRs. ---
+    {
+        use windgp::windgp::incremental::{apply_batch, EditBatch, UpdateParams};
+        let n = g.num_vertices();
+        let nb = 512.min(m / 4).max(1);
+        let stride = (m / nb).max(1);
+        let deletes: Vec<(u32, u32)> =
+            (0..nb).map(|i| g.edge(((i * stride) % m) as u32)).collect();
+        let mut brng = SplitMix64::new(77);
+        let mut inserts = Vec::with_capacity(nb);
+        while inserts.len() < nb {
+            let u = brng.next_usize(n) as u32;
+            let v = brng.next_usize(n) as u32;
+            if u != v {
+                inserts.push((u, v));
+            }
+        }
+        let batch = EditBatch::new(inserts, deletes)?;
+        let params = UpdateParams::default();
+        let inc_tracker = CostTracker::new(&g, &cluster, &wind_ep);
+        println!("incremental batch: ~{nb} inserts + ~{nb} deletes");
+        results.push(bench("incremental/update-batch", samples, || {
+            let out = apply_batch(&inc_tracker, &batch, &params).unwrap();
+            assert_eq!(out.graph.num_edges() + out.stats.deleted, m + out.stats.inserted);
+        }));
+        let updated = apply_batch(&inc_tracker, &batch, &params)?;
+        results.push(bench("incremental/update-vs-full", samples, || {
+            let ep2 = WindGP::default().partition(&updated.graph, &cluster, 1);
+            assert!(ep2.is_complete());
+        }));
+    }
+
     // --- BSP simulator kernels: pure scalar oracle, the SimdBackend's
     //     branchless scalar path, and (where AVX2 is up) the SIMD path —
     //     all three produce bitwise-identical vectors, so the deltas here
@@ -966,9 +1106,15 @@ fn cmd_smoke() -> Result<()> {
 
 fn cmd_list() -> Result<()> {
     println!("datasets: {:?} + {:?}", common::SIX, &common::BIG[1..]);
-    println!(
-        "algorithms: hash dbh greedy hdrf ne ebv metis cpp49 graph-h hasgp haep windgp windgp- windgp* windgp+"
-    );
+    println!("methods (--method NAME; aliases in parens):");
+    for e in windgp::partition::registry::entries() {
+        let aliases = if e.aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" ({})", e.aliases.join(", "))
+        };
+        println!("  {:<8}{aliases:<14} {}", e.name, e.summary);
+    }
     println!("experiments: {:?}", experiments::ALL);
     Ok(())
 }

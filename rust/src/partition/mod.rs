@@ -9,9 +9,11 @@
 //! candidate move.
 
 pub mod metrics;
+pub mod registry;
 pub mod tracker;
 
 pub use metrics::{CostReport, Metrics};
+pub use registry::{BoxedPartitioner, RegistryEntry};
 pub use tracker::{CostTracker, RepairArbiter, RepairProposal, RepairScratch};
 
 use crate::graph::{EId, Graph};

@@ -1,0 +1,218 @@
+//! Name → [`Partitioner`] registry: the one authoritative list of every
+//! partitioning algorithm in the library.
+//!
+//! The CLI (`windgp partition --method`, `windgp list`), the experiment
+//! drivers and the tests all dispatch through [`find`]/[`make`] instead of
+//! hand-rolled match arms, so adding an algorithm is one [`RegistryEntry`]
+//! — the name resolves everywhere at once, with its aliases and its
+//! one-line summary.
+
+use crate::baselines::{
+    Cpp49, Dbh, Ebv, GrapHLike, HaSGP, Haep, Hdrf, MetisLike, NeighborExpansion, PowerGraphGreedy,
+    RandomHash,
+};
+use crate::windgp::{Variant, WindGP};
+
+use super::Partitioner;
+
+/// A boxed, thread-shareable partitioner (the experiment drivers fan
+/// seeds across workers).
+pub type BoxedPartitioner = Box<dyn Partitioner + Sync + Send>;
+
+/// One registered algorithm.
+pub struct RegistryEntry {
+    /// canonical CLI name (`partition --method <name>`)
+    pub name: &'static str,
+    /// accepted alternative spellings
+    pub aliases: &'static [&'static str],
+    /// one-line description for `windgp list`
+    pub summary: &'static str,
+    /// `Some(v)` when the entry is a WindGP ablation variant — those
+    /// accept the WindGP-specific CLI knobs (`--workers`), which are
+    /// meaningless for the baselines
+    pub windgp_variant: Option<Variant>,
+    make: fn() -> BoxedPartitioner,
+}
+
+impl RegistryEntry {
+    /// Construct a fresh instance of this entry's partitioner.
+    pub fn make(&self) -> BoxedPartitioner {
+        (self.make)()
+    }
+
+    /// Does `name` (case-insensitively) denote this entry?
+    pub fn matches(&self, name: &str) -> bool {
+        self.name.eq_ignore_ascii_case(name)
+            || self.aliases.iter().any(|a| a.eq_ignore_ascii_case(name))
+    }
+}
+
+static ENTRIES: [RegistryEntry; 15] = [
+    RegistryEntry {
+        name: "hash",
+        aliases: &["random"],
+        summary: "random hash edge placement (lower bound on quality)",
+        windgp_variant: None,
+        make: || Box::new(RandomHash),
+    },
+    RegistryEntry {
+        name: "dbh",
+        aliases: &[],
+        summary: "degree-based hashing (cut the higher-degree endpoint)",
+        windgp_variant: None,
+        make: || Box::new(Dbh),
+    },
+    RegistryEntry {
+        name: "greedy",
+        aliases: &[],
+        summary: "PowerGraph greedy streaming placement",
+        windgp_variant: None,
+        make: || Box::new(PowerGraphGreedy),
+    },
+    RegistryEntry {
+        name: "hdrf",
+        aliases: &[],
+        summary: "high-degree replicated first streaming partitioner",
+        windgp_variant: None,
+        make: || Box::new(Hdrf::default()),
+    },
+    RegistryEntry {
+        name: "ne",
+        aliases: &[],
+        summary: "neighbor-expansion partitioner",
+        windgp_variant: None,
+        make: || Box::new(NeighborExpansion::default()),
+    },
+    RegistryEntry {
+        name: "ebv",
+        aliases: &[],
+        summary: "edge balanced vertex-cut partitioner",
+        windgp_variant: None,
+        make: || Box::new(Ebv::default()),
+    },
+    RegistryEntry {
+        name: "metis",
+        aliases: &["metis-like", "metis_like"],
+        summary: "METIS-like multilevel partitioner",
+        windgp_variant: None,
+        make: || Box::new(MetisLike::default()),
+    },
+    RegistryEntry {
+        name: "cpp49",
+        aliases: &["cpp"],
+        summary: "heterogeneity-aware CPP49 baseline",
+        windgp_variant: None,
+        make: || Box::new(Cpp49),
+    },
+    RegistryEntry {
+        name: "graph-h",
+        aliases: &["graph"],
+        summary: "GrapH-like heterogeneity-aware baseline",
+        windgp_variant: None,
+        make: || Box::new(GrapHLike),
+    },
+    RegistryEntry {
+        name: "hasgp",
+        aliases: &[],
+        summary: "HaSGP heterogeneity-aware baseline",
+        windgp_variant: None,
+        make: || Box::new(HaSGP),
+    },
+    RegistryEntry {
+        name: "haep",
+        aliases: &[],
+        summary: "HAEP heterogeneity-aware baseline",
+        windgp_variant: None,
+        make: || Box::new(Haep),
+    },
+    RegistryEntry {
+        name: "windgp",
+        aliases: &[],
+        summary: "full WindGP: capacities + best-first expansion + SLS",
+        windgp_variant: Some(Variant::Full),
+        make: || Box::new(WindGP::default()),
+    },
+    RegistryEntry {
+        name: "windgp-",
+        aliases: &[],
+        summary: "WindGP- ablation: NE-style expansion only",
+        windgp_variant: Some(Variant::Naive),
+        make: || Box::new(WindGP::variant(Variant::Naive)),
+    },
+    RegistryEntry {
+        name: "windgp*",
+        aliases: &[],
+        summary: "WindGP* ablation: + capacity preprocessing",
+        windgp_variant: Some(Variant::Capacity),
+        make: || Box::new(WindGP::variant(Variant::Capacity)),
+    },
+    RegistryEntry {
+        name: "windgp+",
+        aliases: &[],
+        summary: "WindGP+ ablation: + best-first search",
+        windgp_variant: Some(Variant::BestFirst),
+        make: || Box::new(WindGP::variant(Variant::BestFirst)),
+    },
+];
+
+/// Every registered algorithm, presentation order.
+pub fn entries() -> &'static [RegistryEntry] {
+    &ENTRIES
+}
+
+/// Resolve a (case-insensitive) name or alias.
+pub fn find(name: &str) -> Option<&'static RegistryEntry> {
+    ENTRIES.iter().find(|e| e.matches(name))
+}
+
+/// Resolve + construct in one step (the `partitioner_by_name` surface).
+pub fn make(name: &str) -> Option<BoxedPartitioner> {
+    find(name).map(|e| e.make())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::machines::Cluster;
+
+    #[test]
+    fn every_entry_constructs_and_partitions() {
+        let g = gen::erdos_renyi(60, 200, 1);
+        let cluster = Cluster::heterogeneous_small(2, 3, 0.01);
+        for e in entries() {
+            let p = e.make();
+            let ep = p.partition(&g, &cluster, 1);
+            assert!(ep.is_complete(), "{} left edges unassigned", e.name);
+            assert_eq!(ep.p, cluster.len(), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn aliases_and_case_resolve_to_the_same_entry() {
+        assert_eq!(find("METIS").unwrap().name, "metis");
+        assert_eq!(find("metis-like").unwrap().name, "metis");
+        assert_eq!(find("cpp").unwrap().name, "cpp49");
+        assert_eq!(find("graph").unwrap().name, "graph-h");
+        assert_eq!(find("WindGP*").unwrap().name, "windgp*");
+        assert!(find("bogus").is_none());
+    }
+
+    #[test]
+    fn windgp_variants_are_flagged() {
+        assert_eq!(find("windgp").unwrap().windgp_variant, Some(Variant::Full));
+        assert_eq!(find("windgp-").unwrap().windgp_variant, Some(Variant::Naive));
+        assert!(find("hdrf").unwrap().windgp_variant.is_none());
+    }
+
+    #[test]
+    fn names_and_aliases_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for e in entries() {
+            assert!(seen.insert(e.name.to_ascii_lowercase()), "dup name {}", e.name);
+            for a in e.aliases {
+                assert!(seen.insert(a.to_ascii_lowercase()), "dup alias {a}");
+            }
+        }
+    }
+}

@@ -167,6 +167,18 @@ impl<'a> CostTracker<'a> {
         t
     }
 
+    /// The graph this tracker's bookkeeping is keyed to.
+    #[inline]
+    pub fn graph(&self) -> &'a Graph {
+        self.g
+    }
+
+    /// The cluster whose Definition-4 coefficients the aggregates use.
+    #[inline]
+    pub fn cluster(&self) -> &'a Cluster {
+        self.cluster
+    }
+
     #[inline]
     fn c_com(&self, i: PartId) -> f64 {
         self.cluster.machines[i as usize].c_com
@@ -303,6 +315,73 @@ impl<'a> CostTracker<'a> {
         self.bump_vertex(u, part, -1);
         self.bump_vertex(v, part, -1);
         part
+    }
+
+    /// Recompute `T_i^com` from the replica tables in the canonical
+    /// accumulation order of [`Self::new`]: zero, then for v = 0..n add
+    /// each member's com term in sorted-member order. After any sequence
+    /// of moves, this leaves `t_com` **bit-identical** to a fresh tracker
+    /// built from the current assignment — the float-canonicalization
+    /// step the incremental update path runs after every batch so a warm
+    /// state is indistinguishable from a cold reload. Integer aggregates
+    /// (replica sets, counts, `n_{i,j}`) roll back exactly on their own
+    /// and are untouched. O(n · RF).
+    pub fn rebuild_t_com(&mut self) {
+        self.t_com.iter_mut().for_each(|t| *t = 0.0);
+        for v in 0..self.g.num_vertices() as u32 {
+            let s = std::mem::take(&mut self.replicas[v as usize]);
+            {
+                let sl = s.as_slice();
+                for &(i, _) in sl {
+                    self.t_com[i as usize] += self.com_term(sl, i);
+                }
+            }
+            self.replicas[v as usize] = s;
+        }
+    }
+
+    /// Retire a batch of assigned edges (dynamic-graph deletions): exact
+    /// integer rollbacks per edge, then [`Self::rebuild_t_com`] so the
+    /// surviving state is bit-identical to a fresh tracker over the
+    /// remaining assignment.
+    pub fn retire_edges(&mut self, edges: &[EId]) {
+        for &e in edges {
+            self.remove_edge(e);
+        }
+        self.rebuild_t_com();
+    }
+
+    /// Re-key this tracker's bookkeeping to a structurally-updated graph
+    /// (the incremental merge: same vertex ids, possibly more vertices,
+    /// edge ids remapped by the caller into `assignment`). The carried
+    /// aggregates must already describe exactly the edges `assignment`
+    /// assigns — i.e. call [`Self::retire_edges`] first and map every
+    /// surviving edge's machine through the old→new id remap, leaving
+    /// inserted edges `UNASSIGNED`. Replica sets are keyed by vertex id,
+    /// which the merge preserves, so they carry verbatim (new vertices
+    /// start empty).
+    pub fn carry_to<'b>(
+        &self,
+        g: &'b Graph,
+        cluster: &'b Cluster,
+        assignment: Vec<PartId>,
+    ) -> CostTracker<'b> {
+        debug_assert_eq!(assignment.len(), g.num_edges());
+        debug_assert!(g.num_vertices() >= self.g.num_vertices());
+        debug_assert_eq!(cluster.machines.len(), self.p);
+        let mut replicas = self.replicas.clone();
+        replicas.resize(g.num_vertices(), ReplicaSet::default());
+        CostTracker {
+            g,
+            cluster,
+            p: self.p,
+            assignment,
+            replicas,
+            v_count: self.v_count.clone(),
+            e_count: self.e_count.clone(),
+            t_com: self.t_com.clone(),
+            nij: self.nij.clone(),
+        }
     }
 
     /// Move an edge between partitions.
@@ -1242,6 +1321,104 @@ mod tests {
             assert!(prop.reads_v.contains(&u) && prop.reads_v.contains(&v));
             assert!(prop.writes_m.contains(&tgt));
         }
+    }
+
+    #[test]
+    fn retire_edges_is_bit_exact_to_fresh_tracker() {
+        // the incremental-update contract: delete rollbacks + the
+        // canonical t_com rebuild leave a warm tracker indistinguishable
+        // from a cold one built over the surviving assignment
+        let g = gen::erdos_renyi(70, 260, 17);
+        let cluster = Cluster::new(vec![
+            Machine::new(1_000_000, 1.0, 2.0, 1.0),
+            Machine::new(500_000, 2.0, 3.0, 2.0),
+            Machine::new(250_000, 0.5, 1.0, 4.0),
+        ]);
+        let mut rng = SplitMix64::new(7);
+        let mut ep = EdgePartition::unassigned(&g, 3);
+        for e in 0..g.num_edges() {
+            ep.assignment[e] = rng.next_usize(3) as PartId;
+        }
+        let mut t = CostTracker::new(&g, &cluster, &ep);
+        let retired: Vec<EId> =
+            (0..g.num_edges() as EId).filter(|e| e % 7 == 0).collect();
+        t.retire_edges(&retired);
+
+        let mut ep2 = ep.clone();
+        for &e in &retired {
+            ep2.assignment[e as usize] = UNASSIGNED;
+        }
+        let fresh = CostTracker::new(&g, &cluster, &ep2);
+        assert_eq!(t.assignment, fresh.assignment);
+        assert_eq!(t.v_count, fresh.v_count);
+        assert_eq!(t.e_count, fresh.e_count);
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(t.replica_entries(v), fresh.replica_entries(v), "S({v})");
+        }
+        for i in 0..3 {
+            assert_eq!(
+                t.t_com(i).to_bits(),
+                fresh.t_com(i).to_bits(),
+                "t_com[{i}] must replay the canonical accumulation bit-for-bit"
+            );
+            for j in 0..3 {
+                assert_eq!(t.nij(i, j), fresh.nij(i, j));
+            }
+        }
+        check_consistency(&g, &cluster, &t);
+    }
+
+    #[test]
+    fn rebuild_t_com_canonicalizes_after_churn() {
+        let g = gen::erdos_renyi(50, 180, 23);
+        let cluster = Cluster::new(vec![
+            Machine::new(1_000_000, 1.0, 2.0, 1.0),
+            Machine::new(500_000, 2.0, 3.0, 2.0),
+        ]);
+        let mut rng = SplitMix64::new(41);
+        let mut ep = EdgePartition::unassigned(&g, 2);
+        for e in 0..g.num_edges() {
+            ep.assignment[e] = rng.next_usize(2) as PartId;
+        }
+        let mut t = CostTracker::new(&g, &cluster, &ep);
+        for _ in 0..300 {
+            let e = rng.next_usize(g.num_edges()) as EId;
+            t.move_edge(e, rng.next_usize(2) as PartId);
+        }
+        t.rebuild_t_com();
+        let fresh = CostTracker::new(&g, &cluster, &t.to_partition());
+        for i in 0..2 {
+            assert_eq!(t.t_com(i).to_bits(), fresh.t_com(i).to_bits(), "t_com[{i}]");
+        }
+    }
+
+    #[test]
+    fn carry_to_preserves_state_and_extends_vertices() {
+        let g = gen::erdos_renyi(40, 150, 3);
+        let cluster = Cluster::new(vec![
+            Machine::new(1_000_000, 1.0, 2.0, 1.0),
+            Machine::new(500_000, 2.0, 3.0, 2.0),
+        ]);
+        let mut rng = SplitMix64::new(13);
+        let mut ep = EdgePartition::unassigned(&g, 2);
+        for e in 0..g.num_edges() {
+            ep.assignment[e] = rng.next_usize(2) as PartId;
+        }
+        let t = CostTracker::new(&g, &cluster, &ep);
+        // identity carry: same graph, same assignment — identical state
+        let c = t.carry_to(&g, &cluster, t.assignment.clone());
+        assert_eq!(c.tc().to_bits(), t.tc().to_bits());
+        check_consistency(&g, &cluster, &c);
+        // carry onto a vertex-extended rebuild of the same edge set
+        let mut b = crate::graph::GraphBuilder::new();
+        for (u, v) in g.edges_iter() {
+            b.add_edge(u, v);
+        }
+        let g2 = b.build(g.num_vertices() + 5);
+        let c2 = t.carry_to(&g2, &cluster, t.assignment.clone());
+        assert_eq!(c2.tc().to_bits(), t.tc().to_bits());
+        assert_eq!(c2.replica_count(g.num_vertices() as u32 + 2), 0);
+        check_consistency(&g2, &cluster, &c2);
     }
 
     #[test]

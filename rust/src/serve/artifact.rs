@@ -35,6 +35,8 @@ use crate::machines::Cluster;
 use crate::partition::{CostTracker, EdgePartition, PartId, UNASSIGNED};
 use crate::util::json::{self, obj, Json};
 
+use super::protocol::SERVE_SCHEMA;
+
 /// `windgp partition --out` format (v1): magic, p, |E|, graph hash, then
 /// one u32 machine id per canonical edge (`UNASSIGNED` allowed, so
 /// partial assignments survive a save/load round trip).
@@ -370,6 +372,7 @@ pub fn export_artifacts<P: AsRef<Path>>(
     let manifest = obj(vec![
         ("schema", Json::Str(EXPORT_SCHEMA.into())),
         ("format_version", Json::Num(EXPORT_FORMAT_VERSION as f64)),
+        ("serve_protocol", Json::Str(SERVE_SCHEMA.into())),
         (
             "graph",
             obj(vec![
@@ -418,6 +421,9 @@ pub struct Manifest {
     pub rf: f64,
     pub replicas_file: String,
     pub assignment_file: String,
+    /// the serve-protocol version the exporting build spoke; manifests
+    /// written before versioning existed read back as `windgp-serve-v1`
+    pub serve_protocol: String,
 }
 
 /// Read and validate an export manifest (schema + format version gate,
@@ -493,6 +499,11 @@ pub fn read_manifest<P: AsRef<Path>>(path: P) -> Result<Manifest> {
     let totals = field("totals")?;
     let tc = totals.get("tc").and_then(Json::as_f64).unwrap_or(f64::NAN);
     let rf = totals.get("rf").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let serve_protocol = j
+        .get("serve_protocol")
+        .and_then(Json::as_str)
+        .unwrap_or("windgp-serve-v1")
+        .to_string();
     let files = field("files")?;
     let replicas_file = files
         .get("replicas")
@@ -516,6 +527,7 @@ pub fn read_manifest<P: AsRef<Path>>(path: P) -> Result<Manifest> {
         rf,
         replicas_file,
         assignment_file,
+        serve_protocol,
     })
 }
 
@@ -625,6 +637,22 @@ mod tests {
             assert_eq!(table.machines(v), expect, "vertex {v}");
             assert_eq!(table.master(v), tracker.master_of(v), "vertex {v}");
         }
+    }
+
+    #[test]
+    fn manifest_records_the_serve_protocol() {
+        let (g, cluster, ep) = setup();
+        let dir = std::env::temp_dir().join("windgp_artifact_test_proto");
+        let paths = export_artifacts(&dir, &g, &cluster, &ep).unwrap();
+        let m = read_manifest(&paths.manifest).unwrap();
+        assert_eq!(m.serve_protocol, SERVE_SCHEMA);
+        // a pre-versioning (v1) manifest reads back with the v1 default
+        let text = std::fs::read_to_string(&paths.manifest).unwrap();
+        let stripped = text.replace(",\"serve_protocol\":\"windgp-serve-v2\"", "");
+        assert!(stripped.len() < text.len(), "field not found to strip");
+        std::fs::write(&paths.manifest, stripped).unwrap();
+        let m = read_manifest(&paths.manifest).unwrap();
+        assert_eq!(m.serve_protocol, "windgp-serve-v1");
     }
 
     #[test]

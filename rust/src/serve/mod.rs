@@ -10,13 +10,19 @@
 //!   (vertex → owning machines, master flagged), the saved-assignment
 //!   warm-start format behind `windgp partition --out`, and a
 //!   `manifest.json` tying the set together (graph content hash, cluster
-//!   spec, per-machine |E|/|V|/T_i, format version).
-//! - [`protocol`]: the newline-delimited JSON request surface —
-//!   `assign` / `replicas` / `metrics` / `batch` / `shutdown`.
+//!   spec, per-machine |E|/|V|/T_i, format version, serve-protocol
+//!   version).
+//! - [`protocol`]: the newline-delimited JSON request surface, version
+//!   [`protocol::SERVE_SCHEMA`] — `assign` / `replicas` / `metrics` /
+//!   `batch` / `update` / `shutdown`, every response stamped with the
+//!   schema and unparseable lines answered with structured error objects.
 //! - [`server`]: the long-running loop over stdin/stdout or a TCP
-//!   listener. Batched requests fan out over
-//!   [`crate::coordinator::pool::parallel_map`] with an order-preserving
-//!   merge, so replies are byte-identical at any `WINDGP_WORKERS`.
+//!   listener. Read-only snapshots serve through [`ServeState`]; mutable
+//!   [`ServeSession`]s additionally accept `update` edit batches, applied
+//!   through [`crate::windgp::incremental`]. Batched requests fan out
+//!   over [`crate::coordinator::pool::parallel_map`] with an
+//!   order-preserving merge, so replies are byte-identical at any
+//!   `WINDGP_WORKERS`.
 
 pub mod artifact;
 pub mod protocol;
@@ -26,5 +32,7 @@ pub use artifact::{
     export_artifacts, partition_from_shards, read_assignment, read_manifest, read_replica_table,
     write_assignment, write_replica_table, ExportPaths, Manifest, ReplicaTable, SavedAssignment,
 };
-pub use protocol::Request;
-pub use server::{serve_stdio, serve_tcp, ServeState};
+pub use protocol::{ParseError, Request, SERVE_SCHEMA};
+pub use server::{
+    serve_session_stdio, serve_session_tcp, serve_stdio, serve_tcp, ServeSession, ServeState,
+};

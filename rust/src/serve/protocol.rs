@@ -1,14 +1,17 @@
 //! The newline-delimited JSON request protocol spoken by `windgp serve`.
 //!
-//! One request per line, one response line per request, in order. Every
-//! response object carries `"ok"`; errors add `"error"` (and `"op"` when
-//! the operation was recognized). Supported operations:
+//! Protocol version 2 (`windgp-serve-v2`). One request per line, one
+//! response line per request, in order. Every response object carries
+//! `"ok"` and `"schema"` (the protocol version). Supported operations:
 //!
 //! ```text
 //! {"op":"assign","u":0,"v":1}        -> owning machine of edge (u, v)
 //! {"op":"replicas","v":3}            -> machines holding v + its master
 //! {"op":"metrics"}                   -> Definition-4 cost report
 //! {"op":"batch","requests":[...]}    -> fan a request list over workers
+//! {"op":"update","inserts":[[0,9]],
+//!  "deletes":[[0,1]]}                -> apply an edit batch (v2; mutable
+//!                                       sessions only)
 //! {"op":"shutdown"}                  -> acknowledge and stop the server
 //! ```
 //!
@@ -16,8 +19,22 @@
 //! nested batches are errors — but errors are *responses*, never
 //! connection teardowns, so one bad line in a scripted session doesn't
 //! desynchronize the remaining request/response pairing.
+//!
+//! v1 ⇄ v2 compatibility: v1 clients keep working on the old verbs — the
+//! success shapes are unchanged except for the additive `"schema"` key,
+//! and semantic failures on recognized verbs still use the v1 string
+//! `"error"` (plus `"op"`). What v2 *changes* is the failure shape for
+//! lines that never resolve to a known verb: those now return a
+//! structured error object, `{"ok":false,"schema":"windgp-serve-v2",
+//! "error":{"code":"unknown_op"|"bad_request",...,"message":...}}`, so
+//! clients can distinguish "this server doesn't speak that verb" from
+//! "my request was malformed" without string-matching.
 
 use crate::util::json::{self, obj, Json};
+
+/// Protocol version stamped on every response (`"schema"` key) and
+/// recorded in export manifests.
+pub const SERVE_SCHEMA: &str = "windgp-serve-v2";
 
 /// A parsed request line.
 #[derive(Clone, Debug, PartialEq)]
@@ -30,64 +47,146 @@ pub enum Request {
     Metrics,
     /// Evaluate the inner requests concurrently, responses in input order.
     Batch(Vec<Request>),
+    /// Apply an edit batch to the served partition (v2). Only mutable
+    /// sessions accept this; read-only snapshots answer with an error.
+    Update { inserts: Vec<(u32, u32)>, deletes: Vec<(u32, u32)> },
     /// Acknowledge and stop serving.
     Shutdown,
 }
 
-/// Parse one request line. The error string is ready to embed in an
-/// [`error_response`].
-pub fn parse_request(line: &str) -> Result<Request, String> {
-    let j = json::parse(line).map_err(|e| e.to_string())?;
+/// Why a request line failed to parse; the two variants map to the v2
+/// structured error codes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParseError {
+    /// Well-formed JSON whose `op` names no verb this server speaks
+    /// (`code: "unknown_op"`).
+    UnknownOp(String),
+    /// Anything else — bad JSON, missing/ill-typed fields, nested batch
+    /// (`code: "bad_request"`).
+    Bad(String),
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::UnknownOp(op) => write!(f, "unknown op '{op}'"),
+            ParseError::Bad(msg) => f.write_str(msg),
+        }
+    }
+}
+
+/// Parse one request line. The error is ready to embed in a
+/// [`parse_error_response`].
+pub fn parse_request(line: &str) -> Result<Request, ParseError> {
+    let j = json::parse(line).map_err(|e| ParseError::Bad(e.to_string()))?;
     from_json(&j, false)
 }
 
-fn from_json(j: &Json, nested: bool) -> Result<Request, String> {
+fn from_json(j: &Json, nested: bool) -> Result<Request, ParseError> {
     let op = j
         .get("op")
         .and_then(Json::as_str)
-        .ok_or_else(|| "missing 'op' field".to_string())?;
+        .ok_or_else(|| ParseError::Bad("missing 'op' field".to_string()))?;
     match op {
         "assign" => Ok(Request::Assign { u: field_u32(j, "u")?, v: field_u32(j, "v")? }),
         "replicas" => Ok(Request::Replicas { v: field_u32(j, "v")? }),
         "metrics" => Ok(Request::Metrics),
         "shutdown" => Ok(Request::Shutdown),
+        "update" => {
+            if nested {
+                return Err(ParseError::Bad("'update' cannot appear inside a batch".to_string()));
+            }
+            Ok(Request::Update {
+                inserts: edge_list(j, "inserts")?,
+                deletes: edge_list(j, "deletes")?,
+            })
+        }
         "batch" => {
             if nested {
-                return Err("'batch' cannot nest inside a batch".to_string());
+                return Err(ParseError::Bad("'batch' cannot nest inside a batch".to_string()));
             }
             let reqs = j
                 .get("requests")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| "batch needs a 'requests' array".to_string())?;
-            let inner: Result<Vec<Request>, String> =
+                .ok_or_else(|| ParseError::Bad("batch needs a 'requests' array".to_string()))?;
+            let inner: Result<Vec<Request>, ParseError> =
                 reqs.iter().map(|r| from_json(r, true)).collect();
             Ok(Request::Batch(inner?))
         }
-        other => Err(format!("unknown op {other:?}")),
+        other => Err(ParseError::UnknownOp(other.to_string())),
     }
 }
 
-fn field_u32(j: &Json, name: &str) -> Result<u32, String> {
+fn field_u32(j: &Json, name: &str) -> Result<u32, ParseError> {
     let x = j
         .get(name)
         .and_then(Json::as_f64)
-        .ok_or_else(|| format!("missing numeric field '{name}'"))?;
+        .ok_or_else(|| ParseError::Bad(format!("missing numeric field '{name}'")))?;
+    num_u32(x, name)
+}
+
+fn num_u32(x: f64, name: &str) -> Result<u32, ParseError> {
     if !(0.0..=u32::MAX as f64).contains(&x) || x.fract() != 0.0 {
-        return Err(format!("field '{name}' must be a u32 (got {x})"));
+        return Err(ParseError::Bad(format!("field '{name}' must be a u32 (got {x})")));
     }
     Ok(x as u32)
 }
 
-/// `{"ok":false,"error":...}` — for lines that didn't parse far enough to
-/// know the operation.
-pub fn error_response(msg: &str) -> Json {
-    obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))])
+/// An optional `"inserts"`/`"deletes"` field: an array of two-element
+/// `[u, v]` arrays. Absent means empty.
+fn edge_list(j: &Json, name: &str) -> Result<Vec<(u32, u32)>, ParseError> {
+    let Some(field) = j.get(name) else {
+        return Ok(Vec::new());
+    };
+    let arr = field
+        .as_arr()
+        .ok_or_else(|| ParseError::Bad(format!("'{name}' must be an array of [u,v] pairs")))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for pair in arr {
+        let p = pair
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| ParseError::Bad(format!("'{name}' entries must be [u,v] pairs")))?;
+        let u = p[0]
+            .as_f64()
+            .ok_or_else(|| ParseError::Bad(format!("'{name}' entries must be numeric")))?;
+        let v = p[1]
+            .as_f64()
+            .ok_or_else(|| ParseError::Bad(format!("'{name}' entries must be numeric")))?;
+        out.push((num_u32(u, name)?, num_u32(v, name)?));
+    }
+    Ok(out)
 }
 
-/// An error response tagged with the operation that failed.
+fn schema_field() -> (&'static str, Json) {
+    ("schema", Json::Str(SERVE_SCHEMA.to_string()))
+}
+
+/// The v2 structured failure for a line that never resolved to a known
+/// verb: `"error"` is an object carrying `code` (`"unknown_op"` /
+/// `"bad_request"`), a human `message`, and — for unknown ops — the `op`
+/// that was attempted.
+pub fn parse_error_response(err: &ParseError) -> Json {
+    let body = match err {
+        ParseError::UnknownOp(op) => obj(vec![
+            ("code", Json::Str("unknown_op".to_string())),
+            ("op", Json::Str(op.clone())),
+            ("message", Json::Str(err.to_string())),
+        ]),
+        ParseError::Bad(msg) => obj(vec![
+            ("code", Json::Str("bad_request".to_string())),
+            ("message", Json::Str(msg.clone())),
+        ]),
+    };
+    obj(vec![("ok", Json::Bool(false)), schema_field(), ("error", body)])
+}
+
+/// A semantic error on a *recognized* verb — v1-compatible shape (string
+/// `"error"` tagged with `"op"`) plus the additive schema key.
 pub fn error_for(op: &str, msg: &str) -> Json {
     obj(vec![
         ("ok", Json::Bool(false)),
+        schema_field(),
         ("op", Json::Str(op.to_string())),
         ("error", Json::Str(msg.to_string())),
     ])
@@ -110,35 +209,65 @@ mod tests {
             parse_request(r#"{"op":"batch","requests":[{"op":"metrics"}]}"#),
             Ok(Request::Batch(vec![Request::Metrics]))
         );
+        assert_eq!(
+            parse_request(r#"{"op":"update","inserts":[[0,9],[2,7]],"deletes":[[0,1]]}"#),
+            Ok(Request::Update { inserts: vec![(0, 9), (2, 7)], deletes: vec![(0, 1)] })
+        );
+        // both edit lists are optional
+        assert_eq!(
+            parse_request(r#"{"op":"update"}"#),
+            Ok(Request::Update { inserts: vec![], deletes: vec![] })
+        );
     }
 
     #[test]
     fn rejects_malformed_requests() {
+        let bad = |line: &str| parse_request(line).unwrap_err().to_string();
         assert!(parse_request("not json").is_err());
-        assert!(parse_request(r#"{"u":1}"#).unwrap_err().contains("missing 'op'"));
-        assert!(parse_request(r#"{"op":"frobnicate"}"#).unwrap_err().contains("unknown op"));
-        assert!(parse_request(r#"{"op":"assign","u":1}"#).unwrap_err().contains("'v'"));
-        assert!(parse_request(r#"{"op":"assign","u":1.5,"v":2}"#)
-            .unwrap_err()
-            .contains("must be a u32"));
-        assert!(parse_request(r#"{"op":"assign","u":-1,"v":2}"#)
-            .unwrap_err()
-            .contains("must be a u32"));
-        assert!(parse_request(r#"{"op":"batch"}"#).unwrap_err().contains("requests"));
+        assert!(bad(r#"{"u":1}"#).contains("missing 'op'"));
+        assert!(bad(r#"{"op":"assign","u":1}"#).contains("'v'"));
+        assert!(bad(r#"{"op":"assign","u":1.5,"v":2}"#).contains("must be a u32"));
+        assert!(bad(r#"{"op":"assign","u":-1,"v":2}"#).contains("must be a u32"));
+        assert!(bad(r#"{"op":"batch"}"#).contains("requests"));
+        assert!(bad(r#"{"op":"update","inserts":[[1]]}"#).contains("[u,v] pairs"));
+        assert!(bad(r#"{"op":"update","deletes":[[1,-2]]}"#).contains("must be a u32"));
+        assert!(bad(r#"{"op":"update","inserts":3}"#).contains("[u,v] pairs"));
     }
 
     #[test]
-    fn nested_batch_is_rejected() {
+    fn unknown_op_is_its_own_error_class() {
+        assert_eq!(
+            parse_request(r#"{"op":"frobnicate"}"#),
+            Err(ParseError::UnknownOp("frobnicate".to_string()))
+        );
+        // ...while structural problems are bad_request
+        assert!(matches!(parse_request(r#"{"op":"assign","u":1}"#), Err(ParseError::Bad(_))));
+    }
+
+    #[test]
+    fn nested_batch_and_update_are_rejected() {
         let line = r#"{"op":"batch","requests":[{"op":"batch","requests":[]}]}"#;
-        assert!(parse_request(line).unwrap_err().contains("cannot nest"));
+        assert!(parse_request(line).unwrap_err().to_string().contains("cannot nest"));
+        let line = r#"{"op":"batch","requests":[{"op":"update"}]}"#;
+        assert!(parse_request(line).unwrap_err().to_string().contains("inside a batch"));
     }
 
     #[test]
-    fn error_responses_are_tagged() {
-        assert_eq!(error_response("boom").dump(), r#"{"error":"boom","ok":false}"#);
+    fn error_responses_are_tagged_and_versioned() {
         assert_eq!(
             error_for("assign", "no such edge").dump(),
-            r#"{"error":"no such edge","ok":false,"op":"assign"}"#
+            r#"{"error":"no such edge","ok":false,"op":"assign","schema":"windgp-serve-v2"}"#
+        );
+        assert_eq!(
+            parse_error_response(&ParseError::UnknownOp("frob".to_string())).dump(),
+            concat!(
+                r#"{"error":{"code":"unknown_op","message":"unknown op 'frob'","op":"frob"},"#,
+                r#""ok":false,"schema":"windgp-serve-v2"}"#
+            )
+        );
+        assert_eq!(
+            parse_error_response(&ParseError::Bad("boom".to_string())).dump(),
+            r#"{"error":{"code":"bad_request","message":"boom"},"ok":false,"schema":"windgp-serve-v2"}"#
         );
     }
 }

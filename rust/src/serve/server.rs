@@ -1,15 +1,24 @@
-//! The `windgp serve` evaluation engine: immutable partition state plus
-//! the request → response mapping, independent of any transport.
+//! The `windgp serve` evaluation engine: partition state plus the
+//! request → response mapping, independent of any transport.
 //!
-//! Every response is a pure function of (request, state): the state is
-//! never mutated after warm-up, so `batch` requests fan out over
-//! [`parallel_map`] with an order-preserving merge and the response
-//! stream is **byte-identical for any worker count** — the same contract
-//! the partitioner's parallel phases pin, extended to serving.
+//! Two layers:
 //!
-//! Transports: [`serve_stdio`] (newline-delimited JSON over
-//! stdin/stdout, for pipelines and the CI smoke test) and [`serve_tcp`]
-//! (same protocol over a socket, one connection at a time).
+//! - [`ServeState`] — an immutable snapshot. Every response is a pure
+//!   function of (request, state), so `batch` requests fan out over
+//!   [`parallel_map`] with an order-preserving merge and the response
+//!   stream is **byte-identical for any worker count** — the same
+//!   contract the partitioner's parallel phases pin, extended to serving.
+//! - [`ServeSession`] — an owning, mutable session for the v2 `update`
+//!   verb. Between updates it serves through an immutable [`ServeState`]
+//!   generation (same purity, same worker-count invariance); an `update`
+//!   request ends the generation, applies the edit batch through
+//!   [`crate::windgp::incremental::apply_batch`], and starts the next
+//!   generation on the updated graph + partition.
+//!
+//! Transports: [`serve_stdio`] / [`serve_session_stdio`]
+//! (newline-delimited JSON over stdin/stdout, for pipelines and the CI
+//! smoke test) and [`serve_tcp`] / [`serve_session_tcp`] (same protocol
+//! over a socket, one connection at a time).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
@@ -21,8 +30,13 @@ use crate::graph::{EId, Graph, VId};
 use crate::machines::Cluster;
 use crate::partition::{CostReport, CostTracker, EdgePartition, UNASSIGNED};
 use crate::util::json::{obj, Json};
+use crate::windgp::incremental::{apply_batch, EditBatch, UpdateParams, UpdateStats};
 
-use super::protocol::{error_for, error_response, parse_request, Request};
+use super::protocol::{error_for, parse_error_response, parse_request, Request, SERVE_SCHEMA};
+
+fn schema_field() -> (&'static str, Json) {
+    ("schema", Json::Str(SERVE_SCHEMA.to_string()))
+}
 
 /// Warm serving state: the graph, the cluster, a [`CostTracker`] built
 /// once from the saved assignment (replica tables, partial degrees), and
@@ -76,9 +90,15 @@ impl<'a> ServeState<'a> {
             Request::Assign { u, v } => self.assign(*u, *v),
             Request::Replicas { v } => self.replicas(*v),
             Request::Metrics => self.metrics(),
-            Request::Shutdown => {
-                obj(vec![("ok", Json::Bool(true)), ("op", Json::Str("shutdown".into()))])
-            }
+            Request::Shutdown => obj(vec![
+                ("ok", Json::Bool(true)),
+                schema_field(),
+                ("op", Json::Str("shutdown".into())),
+            ]),
+            Request::Update { .. } => error_for(
+                "update",
+                "this session serves a read-only snapshot; updates need a mutable session",
+            ),
             Request::Batch(reqs) => {
                 let idx: Vec<usize> = (0..reqs.len()).collect();
                 let run = |i: usize| self.handle_workers(&reqs[i], 1);
@@ -89,6 +109,7 @@ impl<'a> ServeState<'a> {
                 };
                 obj(vec![
                     ("ok", Json::Bool(true)),
+                    schema_field(),
                     ("op", Json::Str("batch".into())),
                     ("count", Json::Num(responses.len() as f64)),
                     ("responses", Json::Arr(responses)),
@@ -105,6 +126,7 @@ impl<'a> ServeState<'a> {
         let machine = if a == UNASSIGNED { Json::Null } else { Json::Num(a as f64) };
         obj(vec![
             ("ok", Json::Bool(true)),
+            schema_field(),
             ("op", Json::Str("assign".into())),
             ("u", Json::Num(u as f64)),
             ("v", Json::Num(v as f64)),
@@ -129,6 +151,7 @@ impl<'a> ServeState<'a> {
         };
         obj(vec![
             ("ok", Json::Bool(true)),
+            schema_field(),
             ("op", Json::Str("replicas".into())),
             ("v", Json::Num(v as f64)),
             ("machines", Json::Arr(machines)),
@@ -153,6 +176,7 @@ impl<'a> ServeState<'a> {
             .collect();
         obj(vec![
             ("ok", Json::Bool(true)),
+            schema_field(),
             ("op", Json::Str("metrics".into())),
             ("vertices", Json::Num(self.g.num_vertices() as f64)),
             ("edges", Json::Num(self.g.num_edges() as f64)),
@@ -173,7 +197,7 @@ impl<'a> ServeState<'a> {
                 let stop = matches!(req, Request::Shutdown);
                 (self.handle(&req), stop)
             }
-            Err(e) => (error_response(&e), false),
+            Err(e) => (parse_error_response(&e), false),
         }
     }
 
@@ -199,8 +223,122 @@ impl<'a> ServeState<'a> {
     }
 }
 
+/// An owning, mutable serving session: the current graph + partition
+/// generation, replaced wholesale by each applied `update` batch.
+pub struct ServeSession {
+    pub g: Graph,
+    pub cluster: Cluster,
+    pub ep: EdgePartition,
+    /// knobs for the incremental re-stabilization pass each update runs
+    pub params: UpdateParams,
+}
+
+impl ServeSession {
+    pub fn new(g: Graph, cluster: Cluster, ep: EdgePartition) -> Result<Self> {
+        if ep.p != cluster.len() {
+            bail!("partition has {} machines but the cluster has {}", ep.p, cluster.len());
+        }
+        if ep.assignment.len() != g.num_edges() {
+            bail!(
+                "partition covers {} edges but the graph has {}",
+                ep.assignment.len(),
+                g.num_edges()
+            );
+        }
+        Ok(Self { g, cluster, ep, params: UpdateParams::default() })
+    }
+
+    /// Apply one edit batch and swap in the next generation. On error the
+    /// current generation is left untouched.
+    pub fn apply_update(
+        &mut self,
+        inserts: &[(VId, VId)],
+        deletes: &[(VId, VId)],
+    ) -> Result<UpdateStats> {
+        let batch = EditBatch::new(inserts.to_vec(), deletes.to_vec())?;
+        let tracker = CostTracker::new(&self.g, &self.cluster, &self.ep);
+        let out = apply_batch(&tracker, &batch, &self.params)?;
+        drop(tracker);
+        self.g = out.graph;
+        self.ep = out.partition;
+        Ok(out.stats)
+    }
+
+    fn update_response(&self, stats: &UpdateStats) -> Json {
+        obj(vec![
+            ("ok", Json::Bool(true)),
+            schema_field(),
+            ("op", Json::Str("update".into())),
+            ("inserted", Json::Num(stats.inserted as f64)),
+            ("deleted", Json::Num(stats.deleted as f64)),
+            ("insert_noops", Json::Num(stats.insert_noops as f64)),
+            ("delete_noops", Json::Num(stats.delete_noops as f64)),
+            ("moves", Json::Num(stats.moves as f64)),
+            ("rounds", Json::Num(stats.rounds as f64)),
+            ("vertices", Json::Num(self.g.num_vertices() as f64)),
+            ("edges", Json::Num(self.g.num_edges() as f64)),
+            ("tc", Json::Num(stats.tc_after)),
+            ("rf", Json::Num(stats.rf_after)),
+        ])
+    }
+
+    /// Drive the full v2 protocol, `update` included, over a
+    /// line-oriented transport. Query verbs are answered by an immutable
+    /// [`ServeState`] generation; each `update` tears the generation down,
+    /// mutates the session, answers with the batch's [`UpdateStats`], and
+    /// rebuilds. Returns `true` on `shutdown`, `false` on EOF.
+    pub fn serve_lines<R: BufRead, W: Write>(
+        &mut self,
+        reader: R,
+        writer: &mut W,
+    ) -> Result<bool> {
+        let mut lines = reader.lines();
+        loop {
+            let state = ServeState::new(&self.g, &self.cluster, &self.ep)?;
+            let mut pending: Option<(Vec<(VId, VId)>, Vec<(VId, VId)>)> = None;
+            for line in lines.by_ref() {
+                let line = line.context("read request line")?;
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                match parse_request(line) {
+                    Ok(Request::Update { inserts, deletes }) => {
+                        pending = Some((inserts, deletes));
+                        break;
+                    }
+                    Ok(req) => {
+                        let stop = matches!(req, Request::Shutdown);
+                        writeln!(writer, "{}", state.handle(&req).dump())
+                            .context("write response")?;
+                        writer.flush().context("flush response")?;
+                        if stop {
+                            return Ok(true);
+                        }
+                    }
+                    Err(e) => {
+                        writeln!(writer, "{}", parse_error_response(&e).dump())
+                            .context("write response")?;
+                        writer.flush().context("flush response")?;
+                    }
+                }
+            }
+            drop(state);
+            let Some((inserts, deletes)) = pending else {
+                return Ok(false);
+            };
+            let resp = match self.apply_update(&inserts, &deletes) {
+                Ok(stats) => self.update_response(&stats),
+                Err(e) => error_for("update", &format!("{e:#}")),
+            };
+            writeln!(writer, "{}", resp.dump()).context("write response")?;
+            writer.flush().context("flush response")?;
+        }
+    }
+}
+
 /// Serve newline-delimited JSON over stdin/stdout until EOF or a
-/// `shutdown` request.
+/// `shutdown` request (read-only snapshot).
 pub fn serve_stdio(state: &ServeState<'_>) -> Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
@@ -221,6 +359,33 @@ pub fn serve_tcp(state: &ServeState<'_>, addr: &str) -> Result<()> {
         let reader = BufReader::new(stream.try_clone().context("clone connection")?);
         let mut writer = stream;
         match state.serve_lines(reader, &mut writer) {
+            Ok(true) => break,
+            Ok(false) => {}
+            Err(e) => eprintln!("windgp serve: connection error: {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+/// [`serve_stdio`] for a mutable session (accepts `update`).
+pub fn serve_session_stdio(sess: &mut ServeSession) -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    sess.serve_lines(stdin.lock(), &mut out)?;
+    Ok(())
+}
+
+/// [`serve_tcp`] for a mutable session: updates applied by one connection
+/// persist into the next (still one connection at a time).
+pub fn serve_session_tcp(sess: &mut ServeSession, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    eprintln!("windgp serve: listening on {}", listener.local_addr()?);
+    for stream in listener.incoming() {
+        let stream = stream.context("accept connection")?;
+        let reader = BufReader::new(stream.try_clone().context("clone connection")?);
+        let mut writer = stream;
+        match sess.serve_lines(reader, &mut writer) {
             Ok(true) => break,
             Ok(false) => {}
             Err(e) => eprintln!("windgp serve: connection error: {e:#}"),
@@ -301,6 +466,46 @@ mod tests {
     }
 
     #[test]
+    fn every_response_carries_the_schema_version() {
+        let (g, cluster, ep) = setup();
+        let s = ServeState::new(&g, &cluster, &ep).unwrap();
+        let reqs = [
+            Request::Assign { u: 0, v: 1 },
+            Request::Assign { u: 0, v: 5 }, // semantic error
+            Request::Replicas { v: 2 },
+            Request::Metrics,
+            Request::Shutdown,
+            Request::Batch(vec![Request::Metrics]),
+            Request::Update { inserts: vec![], deletes: vec![] }, // read-only error
+        ];
+        for req in &reqs {
+            let r = s.handle(req);
+            assert_eq!(
+                r.get("schema").and_then(Json::as_str),
+                Some(SERVE_SCHEMA),
+                "missing schema on {req:?}"
+            );
+        }
+        let (r, _) = s.eval_line("not json");
+        assert_eq!(r.get("schema").and_then(Json::as_str), Some(SERVE_SCHEMA));
+    }
+
+    #[test]
+    fn unknown_op_yields_structured_error() {
+        let (g, cluster, ep) = setup();
+        let s = ServeState::new(&g, &cluster, &ep).unwrap();
+        let (r, stop) = s.eval_line(r#"{"op":"frobnicate"}"#);
+        assert!(!stop);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        let err = r.get("error").expect("error body");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some("unknown_op"));
+        assert_eq!(err.get("op").and_then(Json::as_str), Some("frobnicate"));
+        let (r, _) = s.eval_line(r#"{"op":"assign","u":1}"#);
+        assert_eq!(r.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("bad_request"));
+    }
+
+    #[test]
     fn unassigned_edges_serve_null_machine() {
         let (g, cluster, _) = setup();
         let mut ep = EdgePartition::unassigned(&g, 3);
@@ -351,11 +556,82 @@ mod tests {
     }
 
     #[test]
+    fn session_update_mutates_the_served_partition() {
+        let (g, cluster, ep) = setup();
+        let mut sess = ServeSession::new(g, cluster, ep).unwrap();
+        let script = concat!(
+            "{\"op\":\"assign\",\"u\":0,\"v\":1}\n",
+            "{\"op\":\"update\",\"inserts\":[[0,5]],\"deletes\":[[0,1]]}\n",
+            "{\"op\":\"assign\",\"u\":0,\"v\":5}\n",
+            "{\"op\":\"assign\",\"u\":0,\"v\":1}\n",
+            "{\"op\":\"metrics\"}\n",
+            "{\"op\":\"shutdown\"}\n",
+        );
+        let mut out = Vec::new();
+        let stopped = sess.serve_lines(script.as_bytes(), &mut out).unwrap();
+        assert!(stopped);
+        let text = std::str::from_utf8(&out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 6);
+        // pre-update: (0,1) owned by machine 0
+        assert!(lines[0].contains("\"machine\":0"));
+        // the update response reports the batch
+        assert!(lines[1].contains("\"op\":\"update\""));
+        assert!(lines[1].contains("\"inserted\":1"));
+        assert!(lines[1].contains("\"deleted\":1"));
+        // post-update: (0,5) exists and is placed, (0,1) is gone
+        assert!(lines[2].contains("\"ok\":true"));
+        assert!(lines[2].contains("\"machine\":"));
+        assert!(!lines[2].contains("\"machine\":null"));
+        assert!(lines[3].contains("no edge"));
+        // edge count is unchanged: one in, one out
+        assert!(lines[4].contains("\"edges\":5"));
+        assert_eq!(sess.g.num_edges(), 5);
+    }
+
+    #[test]
+    fn empty_update_is_a_byte_identical_noop() {
+        let (g, cluster, ep) = setup();
+        let before = ep.assignment.clone();
+        let hash_before = g.content_hash();
+        let mut sess = ServeSession::new(g, cluster, ep).unwrap();
+        let stats = sess.apply_update(&[], &[]).unwrap();
+        assert_eq!(stats.inserted + stats.deleted + stats.moves, 0);
+        assert_eq!(sess.ep.assignment, before);
+        assert_eq!(sess.g.content_hash(), hash_before);
+    }
+
+    #[test]
+    fn session_stream_is_byte_identical_across_worker_counts() {
+        let script = concat!(
+            "{\"op\":\"metrics\"}\n",
+            "{\"op\":\"update\",\"inserts\":[[0,3],[1,5],[2,4]],\"deletes\":[[1,2]]}\n",
+            "{\"op\":\"batch\",\"requests\":[{\"op\":\"metrics\"},",
+            "{\"op\":\"replicas\",\"v\":2}]}\n",
+            "{\"op\":\"metrics\"}\n",
+        );
+        let mut outputs = Vec::new();
+        for workers in [1usize, 2, 8] {
+            let (g, cluster, ep) = setup();
+            let mut sess = ServeSession::new(g, cluster, ep).unwrap();
+            sess.params.workers = workers;
+            let mut out = Vec::new();
+            let stopped = sess.serve_lines(script.as_bytes(), &mut out).unwrap();
+            assert!(!stopped, "EOF, not shutdown");
+            outputs.push(out);
+        }
+        assert_eq!(outputs[0], outputs[1]);
+        assert_eq!(outputs[0], outputs[2]);
+    }
+
+    #[test]
     fn state_rejects_mismatched_inputs() {
         let (g, cluster, _) = setup();
         let bad_p = EdgePartition::from_assignment(2, vec![0; 5]);
         assert!(ServeState::new(&g, &cluster, &bad_p).is_err());
         let bad_m = EdgePartition::from_assignment(3, vec![0; 4]);
         assert!(ServeState::new(&g, &cluster, &bad_m).is_err());
+        let bad_s = EdgePartition::from_assignment(2, vec![0; 5]);
+        assert!(ServeSession::new(g, cluster, bad_s).is_err());
     }
 }

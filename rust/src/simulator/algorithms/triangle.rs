@@ -73,17 +73,19 @@ fn count_machine(sg: &SimGraph, i: usize, marker: &mut [u32]) -> (f64, u64) {
             std::mem::swap(&mut gu, &mut gv);
         }
         // mark N(gu)
-        for &w in g.neighbors(gu) {
-            marker[w as usize] = gu;
+        for idx in g.adj_range(gu) {
+            marker[g.neighbor_at(idx) as usize] = gu;
         }
-        for &w in g.neighbors(gv) {
+        for idx in g.adj_range(gv) {
+            let w = g.neighbor_at(idx);
             probes += 1;
             if w != gu && w != gv && marker[w as usize] == gu {
                 total3 += 1;
             }
         }
         // unmark (cheap: marker keyed by gu, next edge overwrites)
-        for &w in g.neighbors(gu) {
+        for idx in g.adj_range(gu) {
+            let w = g.neighbor_at(idx);
             if marker[w as usize] == gu {
                 marker[w as usize] = u32::MAX;
             }

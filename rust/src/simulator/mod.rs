@@ -298,7 +298,7 @@ mod tests {
             for (lu, &gu) in l.verts.iter().enumerate() {
                 for &lv in l.neighbors(lu as u32) {
                     let gv = l.verts[lv as usize];
-                    assert!(g.neighbors(gu).contains(&gv));
+                    assert!(g.find_edge(gu, gv).is_some());
                 }
             }
         }

@@ -26,7 +26,8 @@ pub fn pagerank(g: &Graph, iters: usize) -> Vec<f32> {
         let teleport = (1.0 - DAMPING) / nf + DAMPING * dangling / nf;
         for v in 0..n as VId {
             let mut acc = 0.0f32;
-            for &u in g.neighbors(v) {
+            for idx in g.adj_range(v) {
+                let u = g.neighbor_at(idx);
                 acc += x[u as usize] / g.degree(u) as f32;
             }
             y[v as usize] = DAMPING * acc + teleport;
@@ -82,7 +83,8 @@ pub fn bfs(g: &Graph, source: VId) -> Vec<u32> {
         level += 1;
         let mut next = Vec::new();
         for &u in &frontier {
-            for &v in g.neighbors(u) {
+            for idx in g.adj_range(u) {
+                let v = g.neighbor_at(idx);
                 if dist[v as usize] == u32::MAX {
                     dist[v as usize] = level;
                     next.push(v);
@@ -103,22 +105,26 @@ pub fn triangles(g: &Graph) -> u64 {
     let mut count = 0u64;
     let mut marker = vec![false; n];
     for u in 0..n as VId {
-        for &v in g.neighbors(u) {
+        for idx in g.adj_range(u) {
+            let v = g.neighbor_at(idx);
             if v > u {
                 marker[v as usize] = true;
             }
         }
-        for &v in g.neighbors(u) {
+        for idx in g.adj_range(u) {
+            let v = g.neighbor_at(idx);
             if v <= u {
                 continue;
             }
-            for &w in g.neighbors(v) {
+            for jdx in g.adj_range(v) {
+                let w = g.neighbor_at(jdx);
                 if w > v && marker[w as usize] {
                     count += 1;
                 }
             }
         }
-        for &v in g.neighbors(u) {
+        for idx in g.adj_range(u) {
+            let v = g.neighbor_at(idx);
             if v > u {
                 marker[v as usize] = false;
             }

@@ -1,0 +1,728 @@
+//! Incremental dynamic partitioning: absorb edge insert/delete batches
+//! into a warm partition without a full re-run (the ROADMAP's streaming
+//! item; design grounded in *SDP: Scalable Real-time Dynamic Graph
+//! Partitioner* and the local-search move set of *Enhancing Balanced
+//! Graph Edge Partition with Effective Local Search*).
+//!
+//! One [`apply_batch`] call runs four phases against a warm
+//! [`CostTracker`]:
+//!
+//!  1. **Retire** deleted edges with exact integer rollbacks
+//!     ([`CostTracker::retire_edges`]) — replica sets, counts and
+//!     `n_{i,j}` are restored exactly; `T_com` is re-canonicalized (floats
+//!     don't subtract back bit-exactly).
+//!  2. **Merge** the structural update: one linear two-pointer pass over
+//!     the canonical edge stream builds the post-batch graph (same
+//!     `GraphBuilder` slot-order invariant, so it is bit-identical to a
+//!     from-scratch build of the same edge set) plus the old→new edge-id
+//!     remap; the warm tracker's bookkeeping is re-keyed onto the new
+//!     graph via [`CostTracker::carry_to`] — vertex ids are stable, so
+//!     replica tables carry verbatim.
+//!  3. **Place** inserted edges through the Algorithm-6 repair ladder
+//!     ([`CostTracker::repair_target`] via the shared round-based engine),
+//!     tracked as a [`WorkingGraph`] *unplaced-edge frontier*.
+//!  4. **Re-stabilize** with a bounded destroy/repair pass scoped to the
+//!     *touched vertex region* (endpoints of the batch's edits): up to
+//!     [`UpdateParams::repair_rounds`] rounds, each destroying a
+//!     θ-fraction of the hot machines' region edges and repairing them
+//!     below the Algorithm-5 threshold — cost scales with the batch's
+//!     neighborhood, not |E|.
+//!
+//! The returned state is **canonical**: a final
+//! [`CostTracker::rebuild_t_com`] leaves every aggregate bit-identical to
+//! a cold `CostTracker::new` over the output assignment, so chained
+//! batches against warm state replay exactly like batches against
+//! reloaded artifacts. Output is byte-identical at any `WINDGP_WORKERS`
+//! (the placement/repair engine is the round-based protocol from
+//! `windgp::sls`), and an empty batch returns the input graph and
+//! assignment unchanged — byte-identical artifacts.
+
+use anyhow::{bail, Result};
+
+use crate::graph::{CompactPolicy, EId, Graph, VId, WorkingGraph};
+use crate::partition::{CostTracker, EdgePartition, PartId, RepairScratch, UNASSIGNED};
+
+use super::sls::repair_edges_round_based;
+
+/// A canonicalized batch of edge edits. Construct via [`EditBatch::new`]
+/// or [`EditBatch::parse`]; both normalize endpoints to `u < v`, sort,
+/// deduplicate, and reject self-loops. Deletes apply before inserts, so a
+/// pair present in both is a *refresh*: the edge is retired and re-placed
+/// by the ladder.
+#[derive(Clone, Debug, Default)]
+pub struct EditBatch {
+    inserts: Vec<(VId, VId)>,
+    deletes: Vec<(VId, VId)>,
+}
+
+impl EditBatch {
+    /// Canonicalize raw edit lists. Self-loops are rejected (the graph
+    /// model has none; a self-loop delete could only ever be a typo).
+    pub fn new(inserts: Vec<(VId, VId)>, deletes: Vec<(VId, VId)>) -> Result<Self> {
+        let canon = |mut pairs: Vec<(VId, VId)>, kind: &str| -> Result<Vec<(VId, VId)>> {
+            for p in pairs.iter_mut() {
+                if p.0 == p.1 {
+                    bail!("self-loop ({}, {}) in {kind} list", p.0, p.1);
+                }
+                if p.0 > p.1 {
+                    *p = (p.1, p.0);
+                }
+            }
+            pairs.sort_unstable();
+            pairs.dedup();
+            Ok(pairs)
+        };
+        Ok(Self { inserts: canon(inserts, "insert")?, deletes: canon(deletes, "delete")? })
+    }
+
+    /// Parse the `windgp update` batch format: one edit per line,
+    /// `+ u v` inserts and `- u v` deletes, `#` comments and blank lines
+    /// ignored.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut inserts = Vec::new();
+        let mut deletes = Vec::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let op = it.next().unwrap();
+            let parse_v = |tok: Option<&str>| -> Result<VId> {
+                tok.ok_or_else(|| anyhow::anyhow!("line {}: expected two vertex ids", ln + 1))?
+                    .parse::<VId>()
+                    .map_err(|_| anyhow::anyhow!("line {}: bad vertex id", ln + 1))
+            };
+            let u = parse_v(it.next())?;
+            let v = parse_v(it.next())?;
+            if it.next().is_some() {
+                bail!("line {}: trailing tokens", ln + 1);
+            }
+            match op {
+                "+" => inserts.push((u, v)),
+                "-" => deletes.push((u, v)),
+                other => bail!("line {}: unknown op {other:?} (use '+' or '-')", ln + 1),
+            }
+        }
+        Self::new(inserts, deletes)
+    }
+
+    /// Canonicalized insert pairs (`u < v`, sorted, deduplicated).
+    pub fn inserts(&self) -> &[(VId, VId)] {
+        &self.inserts
+    }
+
+    /// Canonicalized delete pairs (`u < v`, sorted, deduplicated).
+    pub fn deletes(&self) -> &[(VId, VId)] {
+        &self.deletes
+    }
+
+    pub fn len(&self) -> usize {
+        self.inserts.len() + self.deletes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inserts.is_empty() && self.deletes.is_empty()
+    }
+}
+
+/// Knobs for the bounded re-stabilization pass. `repair_rounds` is the
+/// quality/latency tradeoff: 0 places inserts and stops (fastest, quality
+/// drifts over many batches), larger values run more region-scoped
+/// destroy/repair rounds (each bounded by the touched neighborhood, so
+/// latency still scales with batch size).
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateParams {
+    /// bounded destroy/repair rounds over the touched region (default 2)
+    pub repair_rounds: usize,
+    /// destroy-threshold quantile γ, as in Algorithm 5 (default 0.7)
+    pub gamma: f64,
+    /// fraction of a hot machine's *region* edges destroyed per round θ
+    /// (default 0.02)
+    pub theta: f64,
+    /// speculation slots for the round-based repair engine; 0 = auto
+    /// (`WINDGP_WORKERS` override, else available cores)
+    pub workers: usize,
+}
+
+impl Default for UpdateParams {
+    fn default() -> Self {
+        Self { repair_rounds: 2, gamma: 0.7, theta: 0.02, workers: 0 }
+    }
+}
+
+/// What one batch did, for telemetry / the serve `update` response.
+#[derive(Clone, Debug, Default)]
+pub struct UpdateStats {
+    /// edges actually added to the graph (and placed)
+    pub inserted: usize,
+    /// edges actually removed from the graph
+    pub deleted: usize,
+    /// insert pairs that already existed (ignored)
+    pub insert_noops: usize,
+    /// delete pairs with no matching edge (ignored)
+    pub delete_noops: usize,
+    /// destroy/repair relocations performed by the bounded pass
+    pub moves: usize,
+    /// distinct vertices in the touched region
+    pub touched_vertices: usize,
+    /// destroy/repair rounds that actually ran (≤ `repair_rounds`)
+    pub rounds: usize,
+    pub tc_before: f64,
+    pub tc_after: f64,
+    pub rf_before: f64,
+    pub rf_after: f64,
+}
+
+/// The post-batch world: the updated graph, its partition, and what
+/// happened. The graph is always `Owned` storage (a mapped input is
+/// streamed once through its canonical edge iterator during the merge).
+pub struct UpdateOutcome {
+    pub graph: Graph,
+    pub partition: EdgePartition,
+    pub stats: UpdateStats,
+}
+
+/// Apply one edit batch against a warm tracker. The input tracker is not
+/// mutated (state is cloned, retired, and re-keyed); callers chain
+/// batches by building the next tracker from the returned graph +
+/// partition — which, by the canonicalization invariant, is bit-identical
+/// to carrying the warm state forward.
+pub fn apply_batch(
+    tracker: &CostTracker<'_>,
+    batch: &EditBatch,
+    params: &UpdateParams,
+) -> Result<UpdateOutcome> {
+    apply_batch_inspect(tracker, batch, params, |_| {})
+}
+
+/// [`apply_batch`] plus an audit hook over the final (canonicalized)
+/// tracker before it is torn down — the differential suite asserts
+/// replica sets, counts and bit-exact `T_com` against a cold rebuild
+/// through this.
+pub fn apply_batch_inspect<F: FnOnce(&CostTracker<'_>)>(
+    tracker: &CostTracker<'_>,
+    batch: &EditBatch,
+    params: &UpdateParams,
+    audit: F,
+) -> Result<UpdateOutcome> {
+    let g = tracker.graph();
+    let cluster = tracker.cluster();
+    let m_old = g.num_edges();
+    let n_old = g.num_vertices();
+    let mut stats = UpdateStats::default();
+    let rep_before = tracker.report();
+    stats.tc_before = rep_before.tc;
+    stats.rf_before = rep_before.rf;
+
+    // ---- phase 1: resolve + retire deletes ----------------------------
+    // Delete pairs and the canonical edge stream are both sorted, so the
+    // resolution is one two-pointer merge; resolved ids come out ascending.
+    let mut deleted_ids: Vec<EId> = Vec::with_capacity(batch.deletes.len());
+    {
+        let mut di = 0usize;
+        for (e, uv) in g.edges_iter().enumerate() {
+            while di < batch.deletes.len() && batch.deletes[di] < uv {
+                di += 1; // no such edge: counted below
+            }
+            if di < batch.deletes.len() && batch.deletes[di] == uv {
+                deleted_ids.push(e as EId);
+                di += 1;
+            }
+        }
+    }
+    stats.deleted = deleted_ids.len();
+    stats.delete_noops = batch.deletes.len() - deleted_ids.len();
+
+    let mut warm = tracker.clone();
+    // unassigned deletions have no bookkeeping to roll back
+    let retire: Vec<EId> = deleted_ids
+        .iter()
+        .copied()
+        .filter(|&e| warm.assignment[e as usize] != UNASSIGNED)
+        .collect();
+    warm.retire_edges(&retire);
+
+    // ---- phase 2: structural merge + state re-key ---------------------
+    let n_new = batch
+        .inserts
+        .iter()
+        .map(|&(_, v)| v as usize + 1)
+        .max()
+        .unwrap_or(0)
+        .max(n_old);
+    let mut deleted_mark = vec![false; m_old];
+    for &e in &deleted_ids {
+        deleted_mark[e as usize] = true;
+    }
+    const DROPPED: EId = EId::MAX;
+    let mut old_to_new: Vec<EId> = vec![DROPPED; m_old];
+    let mut new_edges: Vec<(VId, VId)> =
+        Vec::with_capacity(m_old - deleted_ids.len() + batch.inserts.len());
+    let mut inserted_new_ids: Vec<EId> = Vec::new();
+    {
+        let ins = &batch.inserts;
+        let mut ii = 0usize;
+        let mut push_insert = |uv: (VId, VId),
+                               new_edges: &mut Vec<(VId, VId)>,
+                               inserted: &mut Vec<EId>| {
+            inserted.push(new_edges.len() as EId);
+            new_edges.push(uv);
+        };
+        for (e, uv) in g.edges_iter().enumerate() {
+            while ii < ins.len() && ins[ii] < uv {
+                push_insert(ins[ii], &mut new_edges, &mut inserted_new_ids);
+                ii += 1;
+            }
+            let dup = ii < ins.len() && ins[ii] == uv;
+            if deleted_mark[e] {
+                if dup {
+                    // delete-then-reinsert: re-enters unassigned, re-placed
+                    push_insert(uv, &mut new_edges, &mut inserted_new_ids);
+                    ii += 1;
+                }
+            } else {
+                if dup {
+                    stats.insert_noops += 1;
+                    ii += 1;
+                }
+                old_to_new[e] = new_edges.len() as EId;
+                new_edges.push(uv);
+            }
+        }
+        while ii < ins.len() {
+            push_insert(ins[ii], &mut new_edges, &mut inserted_new_ids);
+            ii += 1;
+        }
+    }
+    stats.inserted = inserted_new_ids.len();
+    let m_new = new_edges.len();
+    if m_new >= EId::MAX as usize {
+        bail!("updated graph exceeds the u32 edge-id space ({m_new} edges)");
+    }
+
+    // direct CSR fill in ascending edge-id order — the GraphBuilder
+    // slot-order invariant, so this graph is bit-identical to a
+    // from-scratch build of the same edge set
+    let g_new = {
+        let mut deg = vec![0u64; n_new];
+        for &(u, v) in &new_edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0u64; n_new + 1];
+        for i in 0..n_new {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut cursor = offsets.clone();
+        let mut neighbors = vec![0 as VId; 2 * m_new];
+        let mut incident = vec![0 as EId; 2 * m_new];
+        for (e, &(u, v)) in new_edges.iter().enumerate() {
+            let cu = cursor[u as usize] as usize;
+            neighbors[cu] = v;
+            incident[cu] = e as EId;
+            cursor[u as usize] += 1;
+            let cv = cursor[v as usize] as usize;
+            neighbors[cv] = u;
+            incident[cv] = e as EId;
+            cursor[v as usize] += 1;
+        }
+        Graph::from_csr_parts(new_edges, offsets, neighbors, incident)
+    };
+
+    let mut new_assignment: Vec<PartId> = vec![UNASSIGNED; m_new];
+    for e in 0..m_old {
+        if old_to_new[e] != DROPPED {
+            new_assignment[old_to_new[e] as usize] = warm.assignment[e];
+        }
+    }
+    let mut t = warm.carry_to(&g_new, cluster, new_assignment);
+
+    // ---- phase 3: place inserted edges --------------------------------
+    // touched region: endpoints of every real edit, sorted + deduplicated
+    let mut touched: Vec<VId> = Vec::with_capacity(2 * (deleted_ids.len() + stats.inserted));
+    for &e in &deleted_ids {
+        let (u, v) = g.edge(e);
+        touched.push(u);
+        touched.push(v);
+    }
+    for &e in &inserted_new_ids {
+        let (u, v) = g_new.edge(e);
+        touched.push(u);
+        touched.push(v);
+    }
+    touched.sort_unstable();
+    touched.dedup();
+    stats.touched_vertices = touched.len();
+
+    let all_parts: Vec<PartId> = (0..t.p as PartId).collect();
+    let mut scratch = RepairScratch::default();
+    let mut seen = vec![false; m_new];
+    let mut frontier = WorkingGraph::empty(n_new, CompactPolicy::Never);
+    for &e in &inserted_new_ids {
+        let (u, v) = g_new.edge(e);
+        frontier.insert_slot(u, v, e);
+        frontier.insert_slot(v, u, e);
+    }
+    // drain the unplaced frontier in deterministic order: touched vertices
+    // ascending, window slots in insertion order, first sighting wins
+    let drain = |frontier: &WorkingGraph, touched: &[VId], seen: &mut [bool]| -> Vec<EId> {
+        let mut out = Vec::new();
+        for &v in touched {
+            let (s, e) = frontier.live_range(v);
+            for i in s..e {
+                let id = frontier.incident_at(i);
+                if !seen[id as usize] {
+                    seen[id as usize] = true;
+                    out.push(id);
+                }
+            }
+        }
+        for &id in &out {
+            seen[id as usize] = false;
+        }
+        out
+    };
+
+    let unplaced = drain(&frontier, &touched, &mut seen);
+    {
+        let g_ref = &g_new;
+        let frontier = &mut frontier;
+        repair_edges_round_based(
+            &mut t,
+            &unplaced,
+            f64::INFINITY,
+            &all_parts,
+            params.workers,
+            &mut scratch,
+            |e, _| {
+                let (u, v) = g_ref.edge(e);
+                frontier.remove_slot(u, e);
+                frontier.remove_slot(v, e);
+            },
+        );
+    }
+
+    // ---- phase 4: bounded region-scoped destroy/repair ----------------
+    // region = every edge incident to a touched vertex, in deterministic
+    // scan order (static adjacency of g_new, touched ascending)
+    let mut region: Vec<EId> = Vec::new();
+    {
+        let mut mark = vec![false; m_new];
+        for &v in &touched {
+            for i in g_new.adj_range(v) {
+                let e = g_new.incident_at(i);
+                if !mark[e as usize] {
+                    mark[e as usize] = true;
+                    region.push(e);
+                }
+            }
+        }
+    }
+    let p = t.p;
+    for _ in 0..params.repair_rounds {
+        if region.is_empty() {
+            break;
+        }
+        // NaN-aware Algorithm-5 threshold over the *global* machine costs
+        // (the region decides what can move; the cluster decides who is
+        // hot) — same fold discipline as SubgraphLocalSearch::destroy_repair
+        let mut tmin = f64::INFINITY;
+        let mut tmax = f64::NEG_INFINITY;
+        let mut any_nan = false;
+        for i in 0..p {
+            let ti = t.t(i);
+            if ti.is_nan() {
+                any_nan = true;
+                continue;
+            }
+            if ti.total_cmp(&tmin).is_lt() {
+                tmin = ti;
+            }
+            if ti.total_cmp(&tmax).is_gt() {
+                tmax = ti;
+            }
+        }
+        let spread = tmax > tmin;
+        if !(spread || any_nan) {
+            break;
+        }
+        let thd = if spread { tmin + params.gamma * (tmax - tmin) } else { f64::INFINITY };
+        let hot: Vec<bool> = (0..p)
+            .map(|i| {
+                let ti = t.t(i);
+                ti.is_nan() || ti >= thd
+            })
+            .collect();
+        // θ-quota per hot machine, against its *region* edge count
+        let mut region_count = vec![0u64; p];
+        for &e in &region {
+            let a = t.assignment[e as usize];
+            if a != UNASSIGNED {
+                region_count[a as usize] += 1;
+            }
+        }
+        let quota: Vec<usize> = (0..p)
+            .map(|i| {
+                if hot[i] {
+                    ((region_count[i] as f64 * params.theta).ceil() as usize).max(1)
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let mut taken = vec![0usize; p];
+        let mut destroyed: Vec<EId> = Vec::new();
+        for &e in &region {
+            let a = t.assignment[e as usize];
+            if a == UNASSIGNED {
+                continue;
+            }
+            let ai = a as usize;
+            if hot[ai] && taken[ai] < quota[ai] {
+                t.remove_edge(e);
+                let (u, v) = g_new.edge(e);
+                frontier.insert_slot(u, v, e);
+                frontier.insert_slot(v, u, e);
+                taken[ai] += 1;
+                destroyed.push(e);
+            }
+        }
+        if destroyed.is_empty() {
+            break;
+        }
+        stats.rounds += 1;
+        let unplaced = drain(&frontier, &touched, &mut seen);
+        let g_ref = &g_new;
+        let frontier = &mut frontier;
+        let moves = &mut stats.moves;
+        repair_edges_round_based(
+            &mut t,
+            &unplaced,
+            thd,
+            &all_parts,
+            params.workers,
+            &mut scratch,
+            |e, _| {
+                let (u, v) = g_ref.edge(e);
+                frontier.remove_slot(u, e);
+                frontier.remove_slot(v, e);
+                *moves += 1;
+            },
+        );
+    }
+
+    // ---- canonicalize + report ----------------------------------------
+    t.rebuild_t_com();
+    audit(&t);
+    let rep_after = t.report();
+    stats.tc_after = rep_after.tc;
+    stats.rf_after = rep_after.rf;
+    let partition = t.to_partition();
+    drop(t);
+    Ok(UpdateOutcome { graph: g_new, partition, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, GraphBuilder};
+    use crate::machines::{Cluster, Machine};
+    use crate::partition::{Metrics, Partitioner};
+    use crate::windgp::WindGP;
+
+    fn cluster() -> Cluster {
+        Cluster::new(vec![
+            Machine::new(1_000_000, 1.0, 2.0, 1.0),
+            Machine::new(500_000, 2.0, 3.0, 2.0),
+            Machine::new(250_000, 0.5, 1.0, 4.0),
+        ])
+    }
+
+    #[test]
+    fn parse_accepts_the_documented_format() {
+        let b = EditBatch::parse(
+            "# comment\n\n+ 3 1\n- 0 2\n+ 1 3\n  + 4 5 \n",
+        )
+        .unwrap();
+        assert_eq!(b.inserts(), &[(1, 3), (4, 5)], "canonicalized + deduped");
+        assert_eq!(b.deletes(), &[(0, 2)]);
+        assert!(EditBatch::parse("+ 1 1").is_err(), "self-loop rejected");
+        assert!(EditBatch::parse("* 1 2").is_err(), "unknown op rejected");
+        assert!(EditBatch::parse("+ 1").is_err(), "missing endpoint rejected");
+        assert!(EditBatch::parse("+ 1 2 3").is_err(), "trailing tokens rejected");
+    }
+
+    #[test]
+    fn empty_batch_is_a_byte_identical_noop() {
+        let g = gen::erdos_renyi(120, 500, 3);
+        let c = cluster();
+        let ep = WindGP::default().partition(&g, &c, 1);
+        let t = CostTracker::new(&g, &c, &ep);
+        let out = apply_batch(&t, &EditBatch::default(), &UpdateParams::default()).unwrap();
+        assert_eq!(out.partition.assignment, ep.assignment, "assignment unchanged");
+        assert_eq!(out.graph.content_hash(), g.content_hash(), "graph unchanged");
+        assert_eq!(out.stats.inserted, 0);
+        assert_eq!(out.stats.deleted, 0);
+        assert_eq!(out.stats.moves, 0);
+        assert_eq!(out.stats.tc_before.to_bits(), out.stats.tc_after.to_bits());
+    }
+
+    #[test]
+    fn inserts_and_deletes_update_the_structure() {
+        let g = gen::erdos_renyi(60, 200, 5);
+        let c = cluster();
+        let ep = WindGP::default().partition(&g, &c, 2);
+        let t = CostTracker::new(&g, &c, &ep);
+        // delete the first three canonical edges, insert two fresh pairs
+        let dels: Vec<(VId, VId)> = g.edges_iter().take(3).collect();
+        let mut ins = Vec::new();
+        'outer: for u in 0..60u32 {
+            for v in (u + 1)..60u32 {
+                if g.find_edge(u, v).is_none() {
+                    ins.push((u, v));
+                    if ins.len() == 2 {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        let batch = EditBatch::new(ins.clone(), dels.clone()).unwrap();
+        let out = apply_batch(&t, &batch, &UpdateParams::default()).unwrap();
+        assert_eq!(out.graph.num_edges(), g.num_edges() - 3 + 2);
+        assert_eq!(out.stats.deleted, 3);
+        assert_eq!(out.stats.inserted, 2);
+        for (u, v) in dels {
+            assert!(out.graph.find_edge(u, v).is_none(), "({u},{v}) still present");
+        }
+        for (u, v) in ins {
+            let e = out.graph.find_edge(u, v).expect("insert missing");
+            assert_ne!(out.partition.assignment[e as usize], UNASSIGNED, "insert unplaced");
+        }
+        assert!(out.partition.is_complete());
+        // the merged graph is bit-identical to a from-scratch build
+        let mut b = GraphBuilder::new();
+        for (u, v) in out.graph.edges_iter() {
+            b.add_edge(u, v);
+        }
+        assert_eq!(b.build(out.graph.num_vertices()).content_hash(), out.graph.content_hash());
+    }
+
+    #[test]
+    fn noop_edits_are_counted_not_applied() {
+        let g = gen::erdos_renyi(40, 120, 7);
+        let c = cluster();
+        let ep = WindGP::default().partition(&g, &c, 3);
+        let t = CostTracker::new(&g, &c, &ep);
+        let existing: (VId, VId) = g.edges_iter().next().unwrap();
+        // insert an existing edge; delete a nonexistent one
+        let missing = {
+            let mut found = (0, 0);
+            'outer: for u in 0..40u32 {
+                for v in (u + 1)..40u32 {
+                    if g.find_edge(u, v).is_none() {
+                        found = (u, v);
+                        break 'outer;
+                    }
+                }
+            }
+            found
+        };
+        let batch = EditBatch::new(vec![existing], vec![missing]).unwrap();
+        let out = apply_batch(&t, &batch, &UpdateParams::default()).unwrap();
+        assert_eq!(out.stats.insert_noops, 1);
+        assert_eq!(out.stats.delete_noops, 1);
+        assert_eq!(out.stats.inserted, 0);
+        assert_eq!(out.stats.deleted, 0);
+        assert_eq!(out.graph.content_hash(), g.content_hash());
+        assert_eq!(out.partition.assignment, ep.assignment);
+    }
+
+    #[test]
+    fn delete_then_reinsert_replaces_the_edge() {
+        let g = gen::erdos_renyi(50, 150, 9);
+        let c = cluster();
+        let ep = WindGP::default().partition(&g, &c, 4);
+        let t = CostTracker::new(&g, &c, &ep);
+        let pair: (VId, VId) = g.edges_iter().next().unwrap();
+        let batch = EditBatch::new(vec![pair], vec![pair]).unwrap();
+        let out = apply_batch(&t, &batch, &UpdateParams::default()).unwrap();
+        assert_eq!(out.stats.deleted, 1);
+        assert_eq!(out.stats.inserted, 1);
+        assert_eq!(out.graph.content_hash(), g.content_hash(), "same edge set");
+        let e = out.graph.find_edge(pair.0, pair.1).unwrap();
+        assert_ne!(out.partition.assignment[e as usize], UNASSIGNED);
+        assert!(out.partition.is_complete());
+    }
+
+    #[test]
+    fn inserts_can_grow_the_vertex_set() {
+        let g = gen::erdos_renyi(30, 90, 11);
+        let c = cluster();
+        let ep = WindGP::default().partition(&g, &c, 5);
+        let t = CostTracker::new(&g, &c, &ep);
+        let batch = EditBatch::new(vec![(2, 40), (40, 41)], vec![]).unwrap();
+        let out = apply_batch(&t, &batch, &UpdateParams::default()).unwrap();
+        assert_eq!(out.graph.num_vertices(), 42);
+        assert_eq!(out.stats.inserted, 2);
+        assert!(out.partition.is_complete());
+    }
+
+    #[test]
+    fn warm_state_is_canonical_after_each_batch() {
+        // the canonicalization invariant that makes chained batches safe:
+        // the audited final tracker is bit-identical to a cold
+        // CostTracker::new over the output
+        let g = gen::erdos_renyi(80, 320, 13);
+        let c = cluster();
+        let ep = WindGP::default().partition(&g, &c, 6);
+        let t = CostTracker::new(&g, &c, &ep);
+        let dels: Vec<(VId, VId)> = g.edges_iter().step_by(17).take(5).collect();
+        let batch = EditBatch::new(vec![(0, 70), (3, 71)], dels).unwrap();
+        apply_batch_inspect(&t, &batch, &UpdateParams::default(), |warm| {
+            let cold = CostTracker::new(warm.graph(), warm.cluster(), &warm.to_partition());
+            assert_eq!(warm.assignment, cold.assignment);
+            assert_eq!(warm.v_count, cold.v_count);
+            assert_eq!(warm.e_count, cold.e_count);
+            for v in 0..warm.graph().num_vertices() as u32 {
+                assert_eq!(warm.replica_entries(v), cold.replica_entries(v), "S({v})");
+            }
+            for i in 0..warm.p {
+                assert_eq!(warm.t_com(i).to_bits(), cold.t_com(i).to_bits(), "t_com[{i}]");
+                for j in 0..warm.p {
+                    assert_eq!(warm.nij(i, j), cold.nij(i, j));
+                }
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn quality_stays_close_to_full_repartition() {
+        let g = gen::erdos_renyi(200, 900, 15);
+        let c = cluster();
+        let ep = WindGP::default().partition(&g, &c, 7);
+        let t = CostTracker::new(&g, &c, &ep);
+        let dels: Vec<(VId, VId)> = g.edges_iter().step_by(11).take(30).collect();
+        let mut ins = Vec::new();
+        let mut rng = crate::util::SplitMix64::new(99);
+        while ins.len() < 30 {
+            let u = rng.next_usize(200) as VId;
+            let v = rng.next_usize(200) as VId;
+            if u != v && g.find_edge(u, v).is_none() {
+                ins.push((u, v));
+            }
+        }
+        let batch = EditBatch::new(ins, dels).unwrap();
+        let out = apply_batch(&t, &batch, &UpdateParams::default()).unwrap();
+        let full = WindGP::default().partition(&out.graph, &c, 7);
+        let m = Metrics::new(&out.graph, &c);
+        let inc_tc = m.report(&out.partition).tc;
+        let full_tc = m.report(&full).tc;
+        assert!(out.partition.is_complete());
+        assert!(
+            inc_tc <= full_tc * 1.5,
+            "incremental TC {inc_tc} drifted far from full re-partition {full_tc}"
+        );
+    }
+}

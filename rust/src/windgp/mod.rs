@@ -13,6 +13,7 @@
 
 pub mod capacity;
 pub mod expand;
+pub mod incremental;
 pub mod sls;
 pub mod vertex_centric;
 
@@ -22,6 +23,7 @@ use crate::partition::{EdgePartition, Partitioner};
 
 pub use capacity::{capacities, exact_capacities_bruteforce};
 pub use expand::{expand_clusters, ExpandParams, Expander, ParallelMode};
+pub use incremental::{apply_batch, EditBatch, UpdateOutcome, UpdateParams, UpdateStats};
 pub use sls::{SlsParams, SubgraphLocalSearch};
 
 /// Figure-8 ablation variants.

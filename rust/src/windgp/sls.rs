@@ -345,69 +345,18 @@ impl<'a> SubgraphLocalSearch<'a> {
     /// to [`Self::repair_sequential`] at any worker count, and chunk
     /// geometry is a wall-clock knob only.
     fn repair_round_based(&mut self, removed: &[EId], thd: f64, workers: usize) {
-        let auto =
-            if workers == 0 { pool::effective_workers(removed.len()) } else { workers };
-        let width = if pool::in_pool_worker() { 1 } else { auto.max(1) };
-        let chunk = (removed.len() / (width * 4)).max(16);
-        if width <= 1 || removed.len() <= chunk {
-            // degenerate protocol (also the workers=1 bench control):
-            // propose against the committed state and commit immediately —
-            // no clones, no read tracking, but the same propose / rollback
-            // / replay cycle the speculative slots pay
-            let mut scratch = std::mem::take(&mut self.scratch_repair);
-            let prop =
-                self.tracker.propose_repair(removed, thd, &self.all_parts, false, &mut scratch);
-            for &(e, t) in &prop.targets {
-                self.tracker.add_edge(e, t);
-                self.order[t as usize].push(e);
-            }
-            self.scratch_repair = scratch;
-            return;
-        }
-        let chunks: Vec<&[EId]> = removed.chunks(chunk).collect();
-        let width = width.min(chunks.len());
-        // one clone per slot per call; rounds rebase the clones by
-        // replaying committed targets instead of re-cloning
-        let mut slots: Vec<(CostTracker<'a>, RepairScratch)> =
-            (0..width).map(|_| (self.tracker.clone(), RepairScratch::default())).collect();
-        let mut arb = RepairArbiter::new(self.g.num_vertices(), self.tracker.p);
-        let mut pending: Vec<RepairProposal> = Vec::new();
-        let mut next = 0usize;
-        while next < chunks.len() {
-            let inflight = (chunks.len() - next).min(slots.len());
-            slots.truncate(inflight);
-            let rebase = std::mem::take(&mut pending);
-            let rebase_ref = &rebase;
-            let chunks_ref = &chunks;
-            let all_parts = &self.all_parts;
-            let base = next;
-            let proposals: Vec<RepairProposal> =
-                pool::parallel_map_mut(&mut slots, |j, (tracker, scratch)| {
-                    for prop in rebase_ref {
-                        tracker.apply_repairs(&prop.targets);
-                    }
-                    // the lowest in-flight chunk commits unconditionally,
-                    // so its reads are never consulted (j > 0 records)
-                    tracker.propose_repair(chunks_ref[base + j], thd, all_parts, j > 0, scratch)
-                });
-            arb.begin_round();
-            let mut committed = 0usize;
-            for (j, prop) in proposals.iter().enumerate() {
-                if j > 0 && arb.conflicts(prop) {
-                    break;
-                }
-                arb.note_commit(self.g, prop);
-                committed += 1;
-            }
-            for prop in proposals.into_iter().take(committed) {
-                for &(e, t) in &prop.targets {
-                    self.tracker.add_edge(e, t);
-                    self.order[t as usize].push(e);
-                }
-                pending.push(prop);
-                next += 1;
-            }
-        }
+        let mut scratch = std::mem::take(&mut self.scratch_repair);
+        let order = &mut self.order;
+        repair_edges_round_based(
+            &mut self.tracker,
+            removed,
+            thd,
+            &self.all_parts,
+            workers,
+            &mut scratch,
+            |e, t| order[t as usize].push(e),
+        );
+        self.scratch_repair = scratch;
     }
 
     /// Algorithm 7: free the worst machine + its k−1 strongest replica
@@ -495,6 +444,89 @@ impl<'a> SubgraphLocalSearch<'a> {
 
     pub fn best_tc(&self) -> f64 {
         self.best_tc
+    }
+}
+
+/// The round-based repair protocol over an explicit tracker: the
+/// speculative-propose / deterministic-arbitrate / epoch-commit engine
+/// shared by [`SubgraphLocalSearch::destroy_repair`] and the incremental
+/// update path (`windgp::incremental`). `on_place` observes every
+/// committed placement in the exact order the sequential ladder would have
+/// produced it — output is **byte-identical** to the sequential
+/// `repair_target`/`add_edge` loop over `removed` at any worker count.
+pub(crate) fn repair_edges_round_based<'a>(
+    tracker: &mut CostTracker<'a>,
+    removed: &[EId],
+    thd: f64,
+    all_parts: &[PartId],
+    workers: usize,
+    scratch: &mut RepairScratch,
+    mut on_place: impl FnMut(EId, PartId),
+) {
+    let g = tracker.graph();
+    let auto = if workers == 0 { pool::effective_workers(removed.len()) } else { workers };
+    let width = if pool::in_pool_worker() { 1 } else { auto.max(1) };
+    let chunk = (removed.len() / (width * 4)).max(16);
+    if width <= 1 || removed.len() <= chunk {
+        // degenerate protocol (also the workers=1 bench control):
+        // propose against the committed state and commit immediately —
+        // no clones, no read tracking, but the same propose / rollback
+        // / replay cycle the speculative slots pay
+        let prop = tracker.propose_repair(removed, thd, all_parts, false, scratch);
+        for &(e, t) in &prop.targets {
+            tracker.add_edge(e, t);
+            on_place(e, t);
+        }
+        return;
+    }
+    let chunks: Vec<&[EId]> = removed.chunks(chunk).collect();
+    let width = width.min(chunks.len());
+    // one clone per slot per call; rounds rebase the clones by
+    // replaying committed targets instead of re-cloning
+    let mut slots: Vec<(CostTracker<'a>, RepairScratch)> =
+        (0..width).map(|_| (tracker.clone(), RepairScratch::default())).collect();
+    let mut arb = RepairArbiter::new(g.num_vertices(), tracker.p);
+    let mut pending: Vec<RepairProposal> = Vec::new();
+    let mut next = 0usize;
+    while next < chunks.len() {
+        let inflight = (chunks.len() - next).min(slots.len());
+        slots.truncate(inflight);
+        let rebase = std::mem::take(&mut pending);
+        let rebase_ref = &rebase;
+        let chunks_ref = &chunks;
+        let base = next;
+        let proposals: Vec<RepairProposal> =
+            pool::parallel_map_mut(&mut slots, |j, (slot_tracker, slot_scratch)| {
+                for prop in rebase_ref {
+                    slot_tracker.apply_repairs(&prop.targets);
+                }
+                // the lowest in-flight chunk commits unconditionally,
+                // so its reads are never consulted (j > 0 records)
+                slot_tracker.propose_repair(
+                    chunks_ref[base + j],
+                    thd,
+                    all_parts,
+                    j > 0,
+                    slot_scratch,
+                )
+            });
+        arb.begin_round();
+        let mut committed = 0usize;
+        for (j, prop) in proposals.iter().enumerate() {
+            if j > 0 && arb.conflicts(prop) {
+                break;
+            }
+            arb.note_commit(g, prop);
+            committed += 1;
+        }
+        for prop in proposals.into_iter().take(committed) {
+            for &(e, t) in &prop.targets {
+                tracker.add_edge(e, t);
+                on_place(e, t);
+            }
+            pending.push(prop);
+            next += 1;
+        }
     }
 }
 

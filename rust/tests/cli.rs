@@ -272,7 +272,7 @@ fn gen_binary_format_roundtrips_through_partition() {
     // the cache reloads to the exact generated graph
     let g = windgp::experiments::ExpCtx::new(3, 4).graph("rn-s");
     let g2 = windgp::graph::io::read_binary(&out_path).unwrap();
-    assert_eq!(g.edges(), g2.edges());
+    assert_eq!(g.edges_vec(), g2.edges_vec());
     assert_eq!(g.num_vertices(), g2.num_vertices());
     // and the partition path sniffs + loads the binary file end-to-end
     let out = bin()
@@ -323,7 +323,7 @@ fn ingest_builds_mapped_loadable_cache_and_partitions() {
     // the out-of-core cache opens mapped and matches the source graph
     let gm = windgp::graph::io::open_mapped(&cache).unwrap();
     assert!(gm.is_mapped());
-    assert_eq!(gm.edges_vec(), g.edges());
+    assert_eq!(gm.edges_vec(), g.edges_vec());
     assert_eq!(gm.content_hash(), g.content_hash());
     // and partition accepts it with explicit mapped storage
     let out = bin()

@@ -1,0 +1,176 @@
+//! D-series: incremental-vs-full differential matrix for `windgp update`.
+//!
+//!   D1  ER + RMAT graphs x seeds x WINDGP_WORKERS {1,2,8} x batch kinds
+//!       (insert-only / delete-only / mixed): after every batch the warm
+//!       tracker's invariants — per-machine vertex/edge counts, replica
+//!       sets, n_{i,j}, and bit-exact `T_com` — equal a cold
+//!       `CostTracker::new` over the output, and the output assignment is
+//!       byte-identical across worker counts
+//!   D2  an empty batch is a byte-identical no-op (graph hash and
+//!       assignment both unchanged)
+//!   D3  chained batches replay exactly: warm-carried state equals
+//!       reload-from-artifacts state at every step
+
+use windgp::graph::rmat::{self, RmatParams};
+use windgp::graph::{gen, Graph};
+use windgp::machines::Cluster;
+use windgp::partition::{CostTracker, Partitioner};
+use windgp::util::SplitMix64;
+use windgp::windgp::incremental::{apply_batch, apply_batch_inspect, EditBatch, UpdateParams};
+use windgp::windgp::WindGP;
+
+fn cluster() -> Cluster {
+    Cluster::heterogeneous_small(2, 4, 0.05)
+}
+
+/// `k` random pairs absent from `g` (canonicalized u < v).
+fn fresh_pairs(g: &Graph, k: usize, seed: u64) -> Vec<(u32, u32)> {
+    let n = g.num_vertices();
+    let mut rng = SplitMix64::new(seed);
+    let mut out = Vec::new();
+    let mut guard = 0usize;
+    while out.len() < k {
+        guard += 1;
+        assert!(guard < 100_000, "graph too dense to sample fresh pairs");
+        let u = rng.next_usize(n) as u32;
+        let v = rng.next_usize(n) as u32;
+        if u != v && g.find_edge(u, v).is_none() {
+            out.push((u.min(v), u.max(v)));
+        }
+    }
+    out
+}
+
+/// `k` existing edges, strided across the canonical edge array.
+fn existing_pairs(g: &Graph, k: usize) -> Vec<(u32, u32)> {
+    let m = g.num_edges();
+    let stride = (m / k).max(1);
+    (0..k).map(|i| g.edge(((i * stride) % m) as u32)).collect()
+}
+
+fn batch_for(g: &Graph, kind: &str, seed: u64) -> EditBatch {
+    let (ins, dels) = match kind {
+        "insert" => (fresh_pairs(g, 24, seed), vec![]),
+        "delete" => (vec![], existing_pairs(g, 24)),
+        "mixed" => (fresh_pairs(g, 12, seed), existing_pairs(g, 12)),
+        other => panic!("unknown batch kind {other}"),
+    };
+    EditBatch::new(ins, dels).unwrap()
+}
+
+/// The canonicalization invariant: every aggregate of the warm tracker is
+/// identical — bit-exact for `T_com` — to a cold rebuild over its output.
+fn assert_warm_equals_cold(warm: &CostTracker<'_>, label: &str) {
+    let cold = CostTracker::new(warm.graph(), warm.cluster(), &warm.to_partition());
+    assert_eq!(warm.assignment, cold.assignment, "{label}: assignment");
+    assert_eq!(warm.v_count, cold.v_count, "{label}: v_count");
+    assert_eq!(warm.e_count, cold.e_count, "{label}: e_count");
+    for v in 0..warm.graph().num_vertices() as u32 {
+        assert_eq!(warm.replica_entries(v), cold.replica_entries(v), "{label}: S({v})");
+    }
+    for i in 0..warm.p {
+        assert_eq!(
+            warm.t_com(i).to_bits(),
+            cold.t_com(i).to_bits(),
+            "{label}: t_com[{i}] not bit-exact"
+        );
+        for j in 0..warm.p {
+            assert_eq!(warm.nij(i, j), cold.nij(i, j), "{label}: n[{i},{j}]");
+        }
+    }
+}
+
+#[test]
+fn d1_differential_matrix_invariants_and_worker_invariance() {
+    let c = cluster();
+    let graphs: Vec<(String, Graph)> = [1u64, 2]
+        .iter()
+        .flat_map(|&seed| {
+            [
+                (format!("er-{seed}"), gen::erdos_renyi(200, 800, seed)),
+                (format!("rmat-{seed}"), rmat::generate(&RmatParams::graph500(8, 8), seed)),
+            ]
+        })
+        .collect();
+    for (gname, g) in &graphs {
+        let ep = WindGP::default().partition(g, &c, 1);
+        assert!(ep.is_complete());
+        let tracker = CostTracker::new(g, &c, &ep);
+        for kind in ["insert", "delete", "mixed"] {
+            let label = format!("{gname}/{kind}");
+            let batch = batch_for(g, kind, 42);
+            let mut baseline: Option<Vec<u32>> = None;
+            for workers in [1usize, 2, 8] {
+                let params = UpdateParams { workers, ..UpdateParams::default() };
+                let out = apply_batch_inspect(&tracker, &batch, &params, |warm| {
+                    assert_warm_equals_cold(warm, &format!("{label}/w{workers}"));
+                })
+                .unwrap();
+                assert!(out.partition.is_complete(), "{label}/w{workers}: incomplete");
+                assert_eq!(
+                    out.graph.num_edges() + out.stats.deleted,
+                    g.num_edges() + out.stats.inserted,
+                    "{label}/w{workers}: edge accounting"
+                );
+                match kind {
+                    "insert" => assert_eq!(out.stats.deleted, 0, "{label}"),
+                    "delete" => assert_eq!(out.stats.inserted, 0, "{label}"),
+                    _ => {}
+                }
+                match &baseline {
+                    None => baseline = Some(out.partition.assignment),
+                    Some(b) => assert_eq!(
+                        b, &out.partition.assignment,
+                        "{label}: workers={workers} diverged from workers=1"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn d2_empty_batch_is_byte_identical() {
+    let c = cluster();
+    let g = gen::erdos_renyi(200, 800, 9);
+    let ep = WindGP::default().partition(&g, &c, 3);
+    let t = CostTracker::new(&g, &c, &ep);
+    let out = apply_batch(&t, &EditBatch::default(), &UpdateParams::default()).unwrap();
+    assert_eq!(out.graph.content_hash(), g.content_hash());
+    assert_eq!(out.partition.assignment, ep.assignment);
+    assert_eq!(out.stats.moves, 0);
+    assert_eq!(out.stats.rounds, 0);
+    assert_eq!(out.stats.tc_before.to_bits(), out.stats.tc_after.to_bits());
+}
+
+#[test]
+fn d3_chained_batches_replay_exactly() {
+    let c = cluster();
+    let mut cur_g = rmat::generate(&RmatParams::graph500(8, 8), 5);
+    let mut cur_ep = WindGP::default().partition(&cur_g, &c, 1);
+    for step in 0..3u64 {
+        let batch = EditBatch::new(
+            fresh_pairs(&cur_g, 10, 1000 + step),
+            existing_pairs(&cur_g, 10),
+        )
+        .unwrap();
+        let out = {
+            let t = CostTracker::new(&cur_g, &c, &cur_ep);
+            apply_batch_inspect(&t, &batch, &UpdateParams::default(), |warm| {
+                assert_warm_equals_cold(warm, &format!("chain step {step}"));
+            })
+            .unwrap()
+        };
+        assert!(out.partition.is_complete(), "step {step}");
+        // warm-carried state must equal a from-artifacts reload: applying
+        // an empty batch to a cold tracker over the output is a no-op
+        {
+            let t2 = CostTracker::new(&out.graph, &c, &out.partition);
+            let noop = apply_batch(&t2, &EditBatch::default(), &UpdateParams::default()).unwrap();
+            assert_eq!(noop.partition.assignment, out.partition.assignment, "step {step}");
+            assert_eq!(noop.graph.content_hash(), out.graph.content_hash(), "step {step}");
+        }
+        cur_g = out.graph;
+        cur_ep = out.partition;
+    }
+}

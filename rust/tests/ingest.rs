@@ -16,7 +16,7 @@ use windgp::graph::{gen, io, rmat, Graph, GraphBuilder};
 use windgp::util::SplitMix64;
 
 fn graphs_identical(a: &Graph, b: &Graph) {
-    assert_eq!(a.edges(), b.edges(), "edges differ");
+    assert_eq!(a.edges_vec(), b.edges_vec(), "edges differ");
     assert_eq!(a.offsets(), b.offsets(), "offsets differ");
     assert_eq!(a.copy_adjacency(), b.copy_adjacency(), "adjacency differs");
 }
@@ -81,7 +81,7 @@ fn i2_text_roundtrip_preserves_trailing_isolated_vertices() {
     io::write_edge_list(&g, &p).unwrap();
     let seq = io::read_edge_list(&p).unwrap();
     assert_eq!(seq.num_vertices(), 10, "sequential read lost isolated vertices");
-    assert_eq!(seq.edges(), g.edges());
+    assert_eq!(seq.edges_vec(), g.edges_vec());
     let par = ingest::read_edge_list_parallel(&p, IngestOptions::default()).unwrap();
     assert_eq!(par.graph.num_vertices(), 10, "parallel read lost isolated vertices");
     graphs_identical(&seq, &par.graph);
@@ -112,7 +112,7 @@ fn i3_gapped_ids_remap_and_map_back_exactly() {
     let ids = ing.vertex_ids.expect("gapped input must report a mapping");
     assert_eq!(ids, vec![5, 7, 2_147_483_000]);
     assert_eq!(ing.graph.num_vertices(), 3);
-    assert_eq!(ing.graph.edges(), vec![(0, 1), (0, 2), (1, 2)]);
+    assert_eq!(ing.graph.edges_vec(), vec![(0, 1), (0, 2), (1, 2)]);
     ing.graph.validate().unwrap();
     // Auto policy also fires for this id space
     let auto = ingest::read_edge_list_parallel(
@@ -161,9 +161,9 @@ fn i3_random_gapped_roundtrips_across_worker_counts() {
                     .edges_iter()
                     .map(|(u, v)| (ids[u as usize], ids[v as usize]))
                     .collect();
-                assert_eq!(back, seq.edges(), "case {case}: remap must be order-preserving");
+                assert_eq!(back, seq.edges_vec(), "case {case}: remap must be order-preserving");
             }
-            None => assert_eq!(rem.graph.edges(), seq.edges(), "case {case}"),
+            None => assert_eq!(rem.graph.edges_vec(), seq.edges_vec(), "case {case}"),
         }
     }
 }
